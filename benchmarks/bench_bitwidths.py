@@ -1,0 +1,39 @@
+"""Paper Fig. 3: bit-width trajectories for weights / activations / grads.
+
+Validates: widths are greatly reduced from the 32-bit baseline, and
+gradients keep the most bits ("requires the most precision" — §4).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_result, steps
+from repro.apps.mnist import paper_quant_config, train_mnist
+
+
+def run():
+    n = steps(300, 2000)
+    h = train_mnist(paper_quant_config(), steps=n)
+    stride = max(1, n // 100)
+    bits = {a: list(np.add(h[f"il_{a}"], h[f"fl_{a}"])[::stride].astype(float))
+            for a in ("w", "a", "g")}
+    out = {
+        "steps": n,
+        "trajectory": bits,
+        "avg_bits": {a: h[f"avg_bits_{a}"] for a in ("w", "a", "g")},
+        "claims": {
+            "all_below_32": bool(max(max(b) for b in bits.values()) < 32),
+            "grads_widest": bool(h["avg_bits_g"] >= h["avg_bits_w"]
+                                 and h["avg_bits_g"] >= h["avg_bits_a"]),
+        },
+    }
+    save_result("bitwidths", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    r = run()
+    print(json.dumps({"avg_bits": r["avg_bits"], "claims": r["claims"]},
+                     indent=1))

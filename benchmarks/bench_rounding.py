@@ -1,0 +1,47 @@
+"""Gupta et al. comparison (§3): stochastic vs round-to-nearest on
+low-width WEIGHTS (activations 16-bit, gradients wide).
+
+Gupta's claim is about the weight update: below half a grid step, RTN
+always rounds the update away while stochastic rounding preserves it in
+expectation.  At ⟨2,8⟩ (10-bit weights, grid 2^-8) typical LeNet updates
+sit under the half-grid and the separation is visible.
+
+We also record the reverse regime found during reproduction (documented in
+EXPERIMENTS.md): quantizing the raw GRADIENTS coarsely favors RTN —
+stochastic kicks tiny gradients to ±grid with correct mean but huge
+variance, which destabilizes SGD+momentum; see bench_convergence's
+all-static 13-bit run (fails under both roundings, the paper's Fig. 4)."""
+
+from __future__ import annotations
+
+from benchmarks.common import save_result, steps
+from repro.apps.mnist import paper_quant_config, train_mnist
+
+
+def run():
+    n = steps(300, 2000)
+    out = {"steps": n}
+    for bits in (12, 10):
+        for mode in ("stochastic", "nearest"):
+            q = paper_quant_config(rounding=mode, static_bits=bits,
+                                   static_scope="weights")
+            h = train_mnist(q, steps=n)
+            out[f"w{bits}_{mode}"] = {
+                "test_acc": h["final_test_acc"],
+                "final_loss": h["loss"][-1],
+                "diverged": h["diverged"],
+            }
+    out["claims"] = {
+        "stochastic_beats_nearest_w10": bool(
+            out["w10_stochastic"]["test_acc"]
+            >= out["w10_nearest"]["test_acc"] - 1e-6),
+        "stochastic_w12_converges": bool(
+            not out["w12_stochastic"]["diverged"]),
+    }
+    save_result("rounding", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

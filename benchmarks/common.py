@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: result I/O and quick/full mode."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def is_quick() -> bool:
+    return os.environ.get("BENCH_QUICK", "1") != "0"
+
+
+def steps(quick: int, full: int) -> int:
+    return quick if is_quick() else full

@@ -1,0 +1,77 @@
+"""§Perf hillclimb driver: baseline vs optimized variants for the three
+selected cells (worst roofline fraction / most collective-bound / most
+paper-representative), each optimization DPS-flavored:
+
+  gemma_7b × decode_32k       int8 ⟨3,5⟩-grid KV cache  (memory-bound)
+  llama3_2_3b × train_4k      batch-2D attention sharding (collective-bound)
+  deepseek_v2_236b × train_4k int8 ⟨4,4⟩-grid MoE all-to-all payload
+                              (collective-bound + the paper's quantizer on
+                              the expert-parallel wire)
+
+Each variant re-lowers + re-compiles the cell on the single-pod mesh and
+records the three roofline terms; the before/after log lands in
+results/hillclimb/ and EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import json
+import time
+import traceback
+
+CELLS = [
+    # (arch, shape, variant-name, overrides)
+    ("gemma_7b", "decode_32k", "baseline", {}),
+    ("gemma_7b", "decode_32k", "int8_kv", {"kv_cache_bits": 8}),
+    ("llama3_2_3b", "train_4k", "baseline", {}),
+    ("llama3_2_3b", "train_4k", "batch2d_attn", {"attn_batch2d": True}),
+    ("deepseek_v2_236b", "train_4k", "baseline", {}),
+    ("deepseek_v2_236b", "train_4k", "int8_a2a", {"moe_a2a_bits": 8}),
+    ("deepseek_v2_236b", "train_4k", "int8_a2a+accum8",
+     {"moe_a2a_bits": 8, "train_accum": 8}),
+    # bonus: the other over-budget decode cell gets the int8 cache too
+    ("nemotron_4_340b", "decode_32k", "baseline", {}),
+    ("nemotron_4_340b", "decode_32k", "int8_kv", {"kv_cache_bits": 8}),
+]
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "hillclimb")
+
+
+def main(cells=None):
+    from benchmarks.roofline import analyze_cell
+    from repro.launch.dryrun import run_cell
+    os.makedirs(OUT, exist_ok=True)
+    rows = []
+    for arch, shape, name, over in (cells or CELLS):
+        tag = f"{arch}__{shape}__{name}"
+        t0 = time.time()
+        print(f"=== {tag} ===", flush=True)
+        try:
+            stats = run_cell(arch, shape, multi_pod=False, probes=True,
+                             overrides=over)
+            stats["variant"] = name
+            with open(os.path.join(OUT, tag + ".json"), "w") as f:
+                json.dump(stats, f, indent=1)
+            r = analyze_cell(stats)
+            r["variant"] = name
+            rows.append(r)
+            print(f"  compute {r['compute_s']:.3e}s  memory {r['memory_s']:.3e}s"
+                  f"  collective {r['collective_s']:.3e}s  "
+                  f"bottleneck={r['bottleneck']}  temp={r['temp_gib']}GiB  "
+                  f"roofline={r['roofline_fraction']}  "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+        except Exception:
+            traceback.print_exc()
+    with open(os.path.join(OUT, "summary.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark aggregator: one bench per paper artifact + the roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick mode
+  BENCH_QUICK=0 PYTHONPATH=src python -m benchmarks.run   # paper-scale
+
+The MNIST-class benches reproduce the paper's own evaluation (Figs. 3-4,
+Table 1, the Gupta rounding comparison); bench_quant covers the kernel
+hot-spot; the roofline table is derived from results/dryrun/ (run
+``python -m repro.launch.dryrun --all --mesh both`` first for all cells).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+import traceback
+
+
+def main():
+    from benchmarks import (bench_bitwidths, bench_convergence, bench_quant,
+                            bench_rounding, bench_schemes, roofline)
+    suites = [
+        ("convergence (paper Fig. 4)", bench_convergence.run),
+        ("bitwidths (paper Fig. 3)", bench_bitwidths.run),
+        ("rounding (Gupta comparison)", bench_rounding.run),
+        ("schemes (paper Table 1)", bench_schemes.run),
+        ("quantizer hot-spot", bench_quant.run),
+        ("roofline (dry-run artifacts)", roofline.run),
+    ]
+    failures = []
+    for name, fn in suites:
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        try:
+            out = fn()
+            claims = out.get("claims")
+            if claims is not None:
+                print(json.dumps(claims, indent=1))
+                if not all(claims.values()):
+                    failures.append((name, claims))
+            if name.startswith("roofline"):
+                print(roofline.table(out["cells"]))
+            print(f"  ({time.time() - t0:.1f}s)", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append((name, "exception"))
+    if failures:
+        print("\nFAILED CLAIMS/SUITES:")
+        for n, c in failures:
+            print(" -", n, c)
+        sys.exit(1)
+    print("\nall benchmark claims hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: the paper's technique in 40 lines.
+
+Quantize a tensor onto a dynamic fixed-point grid, watch Algorithm 2 adapt
+⟨IL, FL⟩ from overflow rate and quantization error, and run one quantized
+training step on a tiny llama-family model.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dps import DPSHyper, make_controller
+from repro.core.fixed_point import FixedPointFormat, quantize
+
+# --- 1. fixed-point quantization with fused statistics -------------------
+x = jax.random.normal(jax.random.key(0), (4096,)) * 3.0
+fmt = FixedPointFormat.create(il=4, fl=4)          # range ±8, grid 1/16
+q, stats = quantize(x, fmt, mode="stochastic", key=jax.random.key(1))
+print(f"⟨4,4⟩: overflow rate R={float(stats.overflow_rate()):.4f} "
+      f"quant error E={float(stats.quant_error()):.4f}")
+
+# --- 2. the paper's controller reacts: R>R_max -> IL+1; E>E_max -> FL+1 --
+ctrl = make_controller("paper", DPSHyper(r_max=1e-4, e_max=1e-4))
+state = ctrl.init()
+for step in range(6):
+    fmt = ctrl.fmt(state)
+    q, stats = quantize(x, fmt, mode="stochastic",
+                        key=jax.random.fold_in(jax.random.key(2), step))
+    state = ctrl.update(state, stats)
+    print(f"step {step}: ⟨{int(fmt.il)},{int(fmt.fl)}⟩ "
+          f"R={float(stats.overflow_rate()):.2e} "
+          f"E={float(stats.quant_error()):.2e}")
+
+# --- 3. one quantized train step on a reduced llama3.2 -------------------
+from repro.configs.base import get_config, smoke
+from repro.core import qtrain
+from repro.models import registry
+from repro.models.common import init_params
+from repro.optim import SGDConfig, make_optimizer
+
+cfg = smoke(get_config("llama3_2_3b"))
+mod = registry(cfg.family)
+params = init_params(jax.random.key(3), mod.model_defs(cfg))
+opt = make_optimizer(SGDConfig())
+qcfg = qtrain.QuantConfig(enabled=True, controller="paper")
+step_fn = jax.jit(qtrain.make_train_step(mod.loss_fn(cfg), opt, qcfg))
+tstate = qtrain.TrainState.create(params, opt.init(params), qcfg,
+                                  jax.random.key(4))
+batch = {"tokens": jax.random.randint(jax.random.key(5), (4, 33), 0,
+                                      cfg.vocab)}
+tstate, metrics = step_fn(tstate, batch)
+print(f"\nquantized llama train step: loss={float(metrics['loss']):.3f} "
+      f"weights ⟨{int(metrics['il_w'])},{int(metrics['fl_w'])}⟩ "
+      f"acts ⟨{int(metrics['il_a'])},{int(metrics['fl_a'])}⟩")

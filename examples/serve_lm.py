@@ -1,0 +1,27 @@
+"""Serving example: batched prefill + greedy decode with quantized KV cache.
+
+Demonstrates the inference side of the framework — the paper's quantizer
+applied to serving state.  With --quant-kv the cache is snapped to ⟨8,8⟩
+(int8-equivalent payload), halving KV HBM versus bf16.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch llama3_2_3b
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2_1_3b  # O(1) state
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "llama3_2_3b"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    serve.main(argv + ["--batch", "4", "--prompt-len", "16", "--gen", "12",
+                       "--quant-kv"])
+
+
+if __name__ == "__main__":
+    main()

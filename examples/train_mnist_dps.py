@@ -1,0 +1,64 @@
+"""End-to-end driver: the paper's evaluation (§4), LeNet on MNIST-class data.
+
+Trains three runs — fp32 baseline, DPS (the paper's Algorithm 2), and the
+fixed-13-bit ablation — and prints the Fig. 3/4 artifacts: convergence and
+bit-width trajectories.
+
+  PYTHONPATH=src python examples/train_mnist_dps.py --steps 400
+  PYTHONPATH=src python examples/train_mnist_dps.py --steps 10000  # paper
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.apps.mnist import paper_quant_config, train_mnist
+from repro.data import MNISTLike
+
+
+def sparkline(vals, width=48):
+    bars = "▁▂▃▄▅▆▇█"
+    v = np.asarray(vals, dtype=float)
+    v = v[np.isfinite(v)]
+    if not len(v):
+        return "(no data)"
+    idx = np.linspace(0, len(v) - 1, width).astype(int)
+    v = v[idx]
+    lo, hi = v.min(), v.max()
+    span = (hi - lo) or 1.0
+    return "".join(bars[int(7 * (x - lo) / span)] for x in v)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    data = MNISTLike(batch=64, seed=args.seed)
+    runs = {
+        "fp32 baseline": train_mnist(None, steps=args.steps, data=data),
+        "DPS (paper)": train_mnist(paper_quant_config(), steps=args.steps,
+                                   data=data),
+        "fixed 13-bit": train_mnist(paper_quant_config(static_bits=13),
+                                    steps=args.steps, data=data),
+    }
+
+    print(f"\n{'run':16s} {'test acc':>9s} {'avg bits w/a/g':>18s}  loss curve")
+    for name, h in runs.items():
+        bits = (f"{h['avg_bits_w']:.1f}/{h['avg_bits_a']:.1f}/"
+                f"{h['avg_bits_g']:.1f}" if name != "fp32 baseline"
+                else "32/32/32")
+        print(f"{name:16s} {h['final_test_acc']:9.4f} {bits:>18s}  "
+              f"{sparkline(h['loss'])}")
+
+    h = runs["DPS (paper)"]
+    print("\nbit-width trajectories (paper Fig. 3):")
+    for attr in ("w", "a", "g"):
+        tot = np.add(h[f"il_{attr}"], h[f"fl_{attr}"])
+        print(f"  {attr}: {sparkline(tot)}  "
+              f"(start {tot[0]:.0f} -> end {tot[-1]:.0f}, avg {tot.mean():.1f})")
+
+
+if __name__ == "__main__":
+    main()

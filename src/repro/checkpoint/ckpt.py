@@ -1,0 +1,163 @@
+"""Atomic, versioned, elastic checkpointing.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, written to a ``.tmp``
+sibling and ``os.rename``d into place — a crash mid-write never corrupts
+the latest checkpoint.  ``latest_step`` scans for complete manifests only.
+
+Elastic restore: arrays are saved device-agnostic (host numpy) and restored
+via ``jax.device_put`` against the *target* sharding, so a run checkpointed
+on one mesh resumes on a different mesh (or device count) — the reshard is
+the device_put.  ``restore`` validates shapes/dtypes against the template
+and fails loudly on architecture drift.
+
+``AsyncCheckpointer`` overlaps serialization with training (one in-flight
+save, back-pressure on the next) and keeps the newest ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_to_np(leaf) -> np.ndarray:
+    """Portable host representation: PRNG keys -> raw key data (uint32),
+    bf16 -> fp32 (lossless widening; restore re-narrows per the template)."""
+    if hasattr(leaf, "dtype"):
+        if jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key):
+            return np.asarray(jax.random.key_data(leaf))
+        if leaf.dtype == jnp_bf16():
+            return np.asarray(leaf, dtype=np.float32)
+    return np.asarray(leaf)
+
+
+def jnp_bf16():
+    import jax.numpy as jnp
+    return jnp.bfloat16
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = _leaf_to_np(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None):
+    """Atomic synchronous save."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {"step": step, "keys": sorted(flat),
+                "meta": meta or {}, "version": 1}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Any,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``template`` (elastic re-shard via
+    ``shardings`` — a matching pytree of NamedSharding or None)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for (p, leaf), shard in zip(leaves, shard_leaves):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = data[key]
+        if (hasattr(leaf, "dtype")
+                and jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key)):
+            out.append(jax.random.wrap_key_data(jax.numpy.asarray(arr)))
+            continue
+        want = getattr(leaf, "shape", None)
+        if want is not None and tuple(arr.shape) != tuple(want):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs template {want}")
+        arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+        out.append(jax.device_put(arr, shard) if shard is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["meta"]
+
+
+def prune(ckpt_dir: str, keep: int):
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(s for s in (latest_steps(ckpt_dir)))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def latest_steps(ckpt_dir: str):
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                yield int(name.split("_")[1])
+
+
+class AsyncCheckpointer:
+    """One in-flight background save; ``wait()`` before exit."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None):
+        self.wait()
+        # materialize on host *before* handing to the thread so the training
+        # step can donate/overwrite device buffers immediately
+        host_tree = jax.tree.map(_leaf_to_np, tree)
+
+        def work():
+            try:
+                save(self.dir, step, host_tree, meta)
+                prune(self.dir, self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

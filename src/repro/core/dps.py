@@ -1,0 +1,314 @@
+"""Dynamic precision scaling controllers.
+
+The paper's contribution (Algorithm 2) plus the baselines it compares
+against (Table 1).  Every controller is a pure, jit-safe state machine:
+
+    state  = controller.init()                      # pytree (checkpointable)
+    state  = controller.update(state, stats, aux)   # once per train step
+    fmt    = controller.fmt(state)                  # FixedPointFormat to use
+
+``stats`` is the merged :class:`~repro.core.fixed_point.QuantStats` of the
+attribute (weights / activations / gradients) this controller governs, and
+``aux`` carries scalar training signals (currently the loss, for the
+convergence-based Na & Mukhopadhyay baseline).
+
+All updates are branchless ``lax``/``jnp`` arithmetic on traced int32 state,
+so precision changes never recompile the train step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixed_point import FixedPointFormat, QuantStats
+
+# fp32-mantissa exactness bound for the emulation grid: IL - 1 + FL <= 24.
+_EXACT_SPAN = 24
+
+
+@dataclasses.dataclass(frozen=True)
+class DPSHyper:
+    """Static controller hyper-parameters (hashable; part of jit closure).
+
+    Defaults follow the paper's evaluation (§4): thresholds
+    ``E_max = R_max = 0.01% = 1e-4``, updated once per iteration.
+    """
+
+    r_max: float = 1e-4
+    e_max: float = 1e-4
+    il_min: int = 2
+    il_max: int = 16
+    fl_min: int = 0
+    fl_max: int = 23
+    il_init: int = 8
+    fl_init: int = 12
+    step: int = 1                      # unit bit step `s`
+    total_bits: int = 16               # fixed-width schemes (Courbariaux/FlexPoint)
+    max_total: int = 32                # dynamic-width cap (IL+FL)
+    error_metric: str = "relative_mean"
+    # Na & Mukhopadhyay convergence baseline:
+    na_ml: int = 24                    # maximum bit-width `ml`
+    na_tl_init: int = 8                # initial target bit-width `tl`
+    na_window: int = 100               # loss-stagnation window (EMA horizon)
+    na_eps: float = 1e-3               # relative improvement threshold
+    # FlexPoint-like predictive scheme:
+    flex_decay: float = 0.9
+    flex_slack: float = 1.0            # extra headroom bits on predicted max
+
+
+def _clamp_fmt(il: jax.Array, fl: jax.Array, h: DPSHyper):
+    il = jnp.clip(il, h.il_min, h.il_max)
+    fl = jnp.clip(fl, h.fl_min, h.fl_max)
+    # keep the emulation grid exact in fp32 and respect the width cap:
+    # shrink FL first (the paper's own bias: FL exists to stop round-to-zero,
+    # IL to stop overflow; overflow is the catastrophic failure mode).
+    fl = jnp.minimum(fl, _EXACT_SPAN + 1 - il)
+    fl = jnp.minimum(fl, h.max_total - il)
+    return il.astype(jnp.int32), fl.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Paper controller — Algorithm 2.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PaperState:
+    il: jax.Array
+    fl: jax.Array
+
+
+class PaperController:
+    """Overflow- and quantization-error-based scaling (the paper's Alg. 2).
+
+        if R > R_max: IL += s  else IL -= s
+        if E > E_max: FL += s  else FL -= s
+
+    Aggressive by design: width shrinks on *every* step where the metrics sit
+    below threshold (§2.2 "attempts to reduce the bit-width whenever ...").
+    """
+
+    name = "paper"
+
+    def __init__(self, hyper: DPSHyper = DPSHyper()):
+        self.h = hyper
+
+    def init(self, shape=()) -> PaperState:
+        return PaperState(
+            il=jnp.full(shape, self.h.il_init, jnp.int32),
+            fl=jnp.full(shape, self.h.fl_init, jnp.int32),
+        )
+
+    def fmt(self, state: PaperState) -> FixedPointFormat:
+        return FixedPointFormat(state.il, state.fl)
+
+    def update(self, state: PaperState, stats: QuantStats, aux=None) -> PaperState:
+        h = self.h
+        r = stats.overflow_rate()
+        e = stats.quant_error(h.error_metric)
+        il = state.il + jnp.where(r > h.r_max, h.step, -h.step)
+        fl = state.fl + jnp.where(e > h.e_max, h.step, -h.step)
+        il, fl = _clamp_fmt(il, fl, h)
+        return PaperState(il, fl)
+
+
+# ---------------------------------------------------------------------------
+# Courbariaux et al. '14 — fixed width, dynamic radix, overflow-driven.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CourbariauxState:
+    il: jax.Array
+    fl: jax.Array
+
+
+class CourbariauxController:
+    """Greedy overflow-rate scheme with IL + FL = total_bits (§3).
+
+    if R > R_max:        radix right (IL+1, FL-1)
+    elif 2R <= R_max:    radix left  (IL-1, FL+1)   # headroom
+    else:                unchanged
+    """
+
+    name = "courbariaux"
+
+    def __init__(self, hyper: DPSHyper = DPSHyper()):
+        self.h = hyper
+
+    def init(self, shape=()) -> CourbariauxState:
+        n = self.h.total_bits
+        il0 = min(max(self.h.il_init, self.h.il_min), n - 1)
+        return CourbariauxState(
+            il=jnp.full(shape, il0, jnp.int32),
+            fl=jnp.full(shape, n - il0, jnp.int32),
+        )
+
+    def fmt(self, state: CourbariauxState) -> FixedPointFormat:
+        return FixedPointFormat(state.il, state.fl)
+
+    def update(self, state: CourbariauxState, stats: QuantStats, aux=None):
+        h = self.h
+        r = stats.overflow_rate()
+        delta = jnp.where(r > h.r_max, 1, jnp.where(2.0 * r <= h.r_max, -1, 0))
+        il = jnp.clip(state.il + delta, h.il_min, h.total_bits - h.fl_min)
+        fl = h.total_bits - il
+        return CourbariauxState(il.astype(jnp.int32), fl.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Na & Mukhopadhyay '16 — convergence-based, dynamic width (round-to-nearest).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NaState:
+    tl: jax.Array          # current target bit-width
+    il: jax.Array
+    fl: jax.Array
+    loss_ema: jax.Array    # slow EMA of training loss
+    best_ema: jax.Array    # best (lowest) EMA seen since last width bump
+    stall: jax.Array       # consecutive non-improving steps
+
+
+class NaController:
+    """Width grows by `s` whenever training stalls or overflows (§3).
+
+    IL tracks overflow like the fixed-width schemes; FL = tl - IL.  Rounding
+    is round-to-nearest in the original — the training loop consults
+    ``controller.rounding`` to pick the mode.
+    """
+
+    name = "na_mukhopadhyay"
+    rounding = "nearest"
+
+    def __init__(self, hyper: DPSHyper = DPSHyper()):
+        self.h = hyper
+
+    def init(self, shape=()) -> NaState:
+        tl0 = self.h.na_tl_init
+        il0 = max(self.h.il_min, tl0 // 2)
+        return NaState(
+            tl=jnp.full(shape, tl0, jnp.int32),
+            il=jnp.full(shape, il0, jnp.int32),
+            fl=jnp.full(shape, tl0 - il0, jnp.int32),
+            loss_ema=jnp.full(shape, jnp.inf, jnp.float32),
+            best_ema=jnp.full(shape, jnp.inf, jnp.float32),
+            stall=jnp.zeros(shape, jnp.int32),
+        )
+
+    def fmt(self, state: NaState) -> FixedPointFormat:
+        return FixedPointFormat(state.il, state.fl)
+
+    def update(self, state: NaState, stats: QuantStats, aux=None) -> NaState:
+        h = self.h
+        loss = jnp.asarray(aux["loss"], jnp.float32) if aux else jnp.float32(0)
+        beta = 1.0 - 1.0 / h.na_window
+        ema = jnp.where(jnp.isinf(state.loss_ema), loss,
+                        beta * state.loss_ema + (1 - beta) * loss)
+        improved = ema < state.best_ema * (1.0 - h.na_eps)
+        stall = jnp.where(improved, 0, state.stall + 1)
+        stagnant = stall >= h.na_window
+        overflowing = stats.overflow_rate() > h.r_max
+        bump = stagnant | overflowing
+        tl = jnp.clip(state.tl + jnp.where(bump, h.step, 0), h.na_tl_init, h.na_ml)
+        # radix placement from overflow, width from convergence:
+        il = jnp.clip(state.il + jnp.where(overflowing, 1, 0), h.il_min, tl - h.fl_min)
+        fl = tl - il
+        return NaState(
+            tl=tl.astype(jnp.int32), il=il.astype(jnp.int32), fl=fl.astype(jnp.int32),
+            loss_ema=ema,
+            best_ema=jnp.where(improved, ema, jnp.where(bump, ema, state.best_ema)),
+            stall=jnp.where(bump, 0, stall).astype(jnp.int32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Gupta et al. '15 — static format (no scaling).
+# ---------------------------------------------------------------------------
+
+class StaticController:
+    """Fixed ⟨IL, FL⟩ for the whole run (Gupta et al.; also the paper's
+    "fixed 13-bit" divergence demonstration)."""
+
+    name = "static"
+
+    def __init__(self, hyper: DPSHyper = DPSHyper()):
+        self.h = hyper
+
+    def init(self, shape=()) -> PaperState:
+        return PaperState(
+            il=jnp.full(shape, self.h.il_init, jnp.int32),
+            fl=jnp.full(shape, self.h.fl_init, jnp.int32),
+        )
+
+    def fmt(self, state: PaperState) -> FixedPointFormat:
+        return FixedPointFormat(state.il, state.fl)
+
+    def update(self, state: PaperState, stats: QuantStats, aux=None) -> PaperState:
+        return state
+
+
+# ---------------------------------------------------------------------------
+# FlexPoint-like — fixed width, predictive max-value radix (Köster et al.).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FlexState:
+    il: jax.Array
+    fl: jax.Array
+    max_ema: jax.Array
+
+
+class FlexpointController:
+    """Predict next-step max |x| from an EMA, place the radix just above it.
+
+    Width is fixed at ``total_bits`` (Flexpoint uses a 16-bit mantissa with a
+    shared exponent; the shared exponent maps onto our IL choice).
+    """
+
+    name = "flexpoint"
+
+    def __init__(self, hyper: DPSHyper = DPSHyper()):
+        self.h = hyper
+
+    def init(self, shape=()) -> FlexState:
+        n = self.h.total_bits
+        il0 = min(max(self.h.il_init, self.h.il_min), n)
+        return FlexState(
+            il=jnp.full(shape, il0, jnp.int32),
+            fl=jnp.full(shape, n - il0, jnp.int32),
+            max_ema=jnp.zeros(shape, jnp.float32),
+        )
+
+    def fmt(self, state: FlexState) -> FixedPointFormat:
+        return FixedPointFormat(state.il, state.fl)
+
+    def update(self, state: FlexState, stats: QuantStats, aux=None) -> FlexState:
+        h = self.h
+        m = jnp.maximum(h.flex_decay * state.max_ema,
+                        stats.max_abs.astype(jnp.float32))
+        pred = m * (2.0 ** h.flex_slack)
+        # smallest IL whose signed range covers pred: 2^(IL-1) > pred
+        il = jnp.ceil(jnp.log2(jnp.maximum(pred, 1e-30))).astype(jnp.int32) + 1
+        il = jnp.clip(il, h.il_min, h.total_bits - h.fl_min)
+        fl = h.total_bits - il
+        return FlexState(il.astype(jnp.int32), fl.astype(jnp.int32), m)
+
+
+CONTROLLERS = {
+    c.name: c
+    for c in (PaperController, CourbariauxController, NaController,
+              StaticController, FlexpointController)
+}
+
+
+def make_controller(name: str, hyper: Optional[DPSHyper] = None):
+    if name not in CONTROLLERS:
+        raise ValueError(f"unknown DPS controller {name!r}; have {sorted(CONTROLLERS)}")
+    return CONTROLLERS[name](hyper or DPSHyper())

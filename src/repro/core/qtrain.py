@@ -1,0 +1,285 @@
+"""Quantized-training plumbing: taps, per-attribute DPS bundles, train-state.
+
+Wires the paper's Algorithm 1 into an arbitrary JAX model:
+
+  forward pass   — activations pass through :func:`act_tap` (quantize + stats
+                   on the way down, gradient quantization on the way back up
+                   via ``custom_vjp``),
+  backward pass  — parameter gradients are quantized before the optimizer;
+                   the loss's own logit-gradient (the paper's "last layer
+                   gradients") is quantized with stats,
+  weight update  — updated weights are re-snapped to the weight grid
+                   (stochastic rounding makes tiny updates survive in
+                   expectation, the property Gupta et al. identified),
+  scale_precision — one controller per attribute consumes the step's merged
+                   stats and emits the next step's ⟨IL, FL⟩.
+
+Everything here is shape-polymorphic and mesh-agnostic: stats are plain
+``jnp`` reductions, so under ``pjit`` they come out globally reduced, and the
+⟨IL, FL⟩ state is replicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dps as dps_lib
+from repro.core import fixed_point as fxp
+from repro.core.fixed_point import FixedPointFormat, QuantStats
+from repro.core.policy import QuantPolicy
+
+ATTRS = ("weights", "acts", "grads")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of the quantized-training scheme."""
+
+    enabled: bool = True
+    controller: str = "paper"
+    rounding: str = fxp.ROUND_STOCHASTIC
+    policy: QuantPolicy = QuantPolicy()
+    # one hyper per attribute; the paper runs one Alg.-2 instance each for
+    # weights, activations and gradients (global granularity).
+    hyper_weights: dps_lib.DPSHyper = dps_lib.DPSHyper()
+    hyper_acts: dps_lib.DPSHyper = dps_lib.DPSHyper()
+    hyper_grads: dps_lib.DPSHyper = dps_lib.DPSHyper(il_init=8, fl_init=16)
+    stat_scope: str = "global"          # "global" | "last_layer"
+    master_weights: bool = False        # keep an fp copy (beyond-paper)
+
+    def controllers(self):
+        mk = dps_lib.make_controller
+        return {
+            "weights": mk(self.controller, self.hyper_weights),
+            "acts": mk(self.controller, self.hyper_acts),
+            "grads": mk(self.controller, self.hyper_grads),
+        }
+
+
+def init_dps_bundle(qcfg: QuantConfig) -> Dict[str, Any]:
+    """Initial DPS controller states, one per attribute."""
+    return {k: c.init() for k, c in qcfg.controllers().items()}
+
+
+def bundle_formats(qcfg: QuantConfig, bundle) -> Dict[str, FixedPointFormat]:
+    ctrls = qcfg.controllers()
+    return {k: ctrls[k].fmt(bundle[k]) for k in ATTRS}
+
+
+def update_dps_bundle(qcfg: QuantConfig, bundle, stats: Dict[str, QuantStats],
+                      aux=None) -> Dict[str, Any]:
+    ctrls = qcfg.controllers()
+    return {k: ctrls[k].update(bundle[k], stats[k], aux) for k in ATTRS}
+
+
+# ---------------------------------------------------------------------------
+# Activation tap: quantize forward, quantize the cotangent backward.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QCtx:
+    """Per-step quantization context handed to model code.
+
+    ``None`` (the default ``QCtx.off()``-less path) disables taps entirely —
+    model code guards with ``if qctx is not None``.
+    """
+
+    acts_fmt: FixedPointFormat
+    grads_fmt: FixedPointFormat
+    key: jax.Array
+    rounding: str = dataclasses.field(metadata=dict(static=True))
+    collect_stats: bool = dataclasses.field(metadata=dict(static=True))
+
+    def tap(self, x: jax.Array, salt):
+        """Quantize activation ``x``; returns ``(q, QuantStats)``.
+
+        ``salt`` decorrelates rounding noise across call sites; inside a
+        scanned stack pass the per-layer key/index.
+        """
+        kf = jax.random.fold_in(self.key, _salt_to_int(salt))
+        kb = jax.random.fold_in(kf, 0x9E3779B9)
+        q, stats = _qtap(self.rounding, x, self.acts_fmt, self.grads_fmt, kf, kb)
+        if not self.collect_stats:
+            stats = None
+        return q, stats
+
+
+def _salt_to_int(salt) -> jax.Array:
+    if isinstance(salt, str):
+        import zlib
+        return jnp.uint32(zlib.crc32(salt.encode()))  # stable across processes
+    return jnp.asarray(salt, jnp.uint32)
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _qtap(mode, x, a_fmt, g_fmt, kf, kb):
+    q, stats = fxp.quantize(x, a_fmt, mode=mode, key=kf, compute_stats=True)
+    return q, stats
+
+
+def _qtap_fwd(mode, x, a_fmt, g_fmt, kf, kb):
+    out = _qtap(mode, x, a_fmt, g_fmt, kf, kb)
+    return out, (g_fmt, kb)
+
+
+def _qtap_bwd(mode, res, cot):
+    g_fmt, kb = res
+    gq, _ = fxp.quantize(cot[0], g_fmt, mode=mode, key=kb, compute_stats=False)
+    return (gq, None, None, None, None)
+
+
+_qtap.defvjp(_qtap_fwd, _qtap_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Weight / gradient tree quantization.
+# ---------------------------------------------------------------------------
+
+def quantize_params(params, fmt: FixedPointFormat, qcfg: QuantConfig, key):
+    """Snap the parameter tree to the weight grid. Returns (qparams, stats)."""
+    if not qcfg.enabled or not qcfg.policy.quantize_weights:
+        return params, QuantStats.zero()
+    return fxp.quantize_tree(params, fmt, mode=qcfg.rounding, key=key,
+                             predicate=qcfg.policy.param_predicate())
+
+
+def quantize_grads(grads, fmt: FixedPointFormat, qcfg: QuantConfig, key):
+    """Quantize parameter gradients before the optimizer step."""
+    if not qcfg.enabled or not qcfg.policy.quantize_grads:
+        return grads, QuantStats.zero()
+    return fxp.quantize_tree(grads, fmt, mode=qcfg.rounding, key=key,
+                             predicate=qcfg.policy.param_predicate())
+
+
+# ---------------------------------------------------------------------------
+# Train state + generic quantized train step.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    step: jax.Array
+    params: Any
+    opt_state: Any
+    dps: Any                 # {attr: controller state}
+    rng: jax.Array
+    # rolling telemetry (replicated scalars) for logging/benchmarks:
+    last_loss: jax.Array
+
+    @staticmethod
+    def create(params, opt_state, qcfg: QuantConfig, rng) -> "TrainState":
+        return TrainState(
+            step=jnp.zeros((), jnp.int32),
+            params=params,
+            opt_state=opt_state,
+            dps=init_dps_bundle(qcfg),
+            rng=rng,
+            last_loss=jnp.zeros((), jnp.float32),
+        )
+
+
+def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
+                    accum_steps: int = 1):
+    """Build a quantized SGD/AdamW train step around ``loss_fn``.
+
+    ``loss_fn(params, batch, qctx) -> (loss, aux)`` where ``aux`` is a dict
+    that may contain ``"act_stats"`` (merged QuantStats from taps) and
+    ``"dlogits_stats"`` (last-layer gradient stats, see models).  The
+    returned step is pure: ``step(state, batch) -> (state, metrics)``.
+
+    ``accum_steps > 1`` splits the global batch into microbatches scanned
+    sequentially with fp32 gradient accumulation — the standard way to fit
+    the large train cells in per-device HBM (activation memory scales with
+    the microbatch, gradients are one extra params-sized buffer).
+    """
+    ctrls = qcfg.controllers()
+    rounding = getattr(ctrls["weights"], "rounding", qcfg.rounding)
+
+    def _grads(qparams, batch, fmts, k_a, microbatch_idx):
+        qctx = None
+        if qcfg.enabled and qcfg.policy.quantize_acts:
+            qctx = QCtx(acts_fmt=fmts["acts"], grads_fmt=fmts["grads"],
+                        key=jax.random.fold_in(k_a, microbatch_idx),
+                        rounding=rounding, collect_stats=True)
+        return jax.value_and_grad(loss_fn, has_aux=True)(qparams, batch, qctx)
+
+    def _accum_grads(qparams, batch, fmts, k_a):
+        if accum_steps == 1:
+            return _grads(qparams, batch, fmts, k_a, 0)
+        micro = jax.tree.map(
+            lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                + x.shape[1:]), batch)
+
+        def body(carry, xs):
+            loss_acc, g_acc, stats_acc, idx = carry
+            (loss, aux), g = _grads(qparams, xs, fmts, k_a, idx)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_acc, g)
+            stats_acc = stats_acc.merge(aux.get("act_stats",
+                                                QuantStats.zero()))
+            return (loss_acc + loss, g_acc, stats_acc, idx + 1), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), qparams)
+        (loss, g, stats, _), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), g0, QuantStats.zero(),
+                   jnp.zeros((), jnp.uint32)), micro,
+            length=accum_steps)
+        n = float(accum_steps)
+        grads = jax.tree.map(lambda x, p: (x / n).astype(p.dtype), g, qparams)
+        return (loss / n, {"act_stats": stats}), grads
+
+    def train_step(state: TrainState, batch):
+        key = jax.random.fold_in(state.rng, state.step)
+        k_w, k_g, k_a = jax.random.split(key, 3)
+        fmts = bundle_formats(qcfg, state.dps)
+
+        # -- forward/backward in the quantized regime (Alg. 1 lines 9-20) --
+        qparams, w_stats = quantize_params(state.params, fmts["weights"], qcfg, k_w)
+        (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
+
+        grads, g_stats = quantize_grads(grads, fmts["grads"], qcfg, k_g)
+        if "dlogits_stats" in aux and qcfg.stat_scope == "last_layer":
+            g_stats = aux["dlogits_stats"]
+        elif "dlogits_stats" in aux:
+            g_stats = g_stats.merge(aux["dlogits_stats"])
+        if qcfg.stat_scope == "last_layer" and "last_act_stats" in aux:
+            a_stats = aux["last_act_stats"]
+        else:
+            a_stats = aux.get("act_stats", QuantStats.zero())
+
+        # -- update + re-snap weights to the grid (Alg. 1 lines 18-19) --
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params, count=state.step)
+        new_params = jax.tree.map(lambda p, u: p + u, state.params, updates)
+        if qcfg.enabled and qcfg.policy.quantize_weights and not qcfg.master_weights:
+            new_params, w_stats2 = quantize_params(
+                new_params, fmts["weights"], qcfg, jax.random.fold_in(k_w, 1))
+            w_stats = w_stats.merge(w_stats2)
+
+        # -- scale_precision (Alg. 2, one controller per attribute) --
+        stats = {"weights": w_stats, "acts": a_stats, "grads": g_stats}
+        new_dps = update_dps_bundle(qcfg, state.dps, stats, {"loss": loss})
+
+        metrics = {
+            "loss": loss,
+            "il_w": fmts["weights"].il, "fl_w": fmts["weights"].fl,
+            "il_a": fmts["acts"].il, "fl_a": fmts["acts"].fl,
+            "il_g": fmts["grads"].il, "fl_g": fmts["grads"].fl,
+            "E_w": w_stats.quant_error(), "R_w": w_stats.overflow_rate(),
+            "E_a": a_stats.quant_error(), "R_a": a_stats.overflow_rate(),
+            "E_g": g_stats.quant_error(), "R_g": g_stats.overflow_rate(),
+        }
+        new_state = TrainState(
+            step=state.step + 1, params=new_params, opt_state=opt_state,
+            dps=new_dps, rng=state.rng, last_loss=loss.astype(jnp.float32))
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,2 @@
+from repro.data.mnist import MNISTLike, make_split
+from repro.data.synthetic import TokenStream, TokenStreamConfig

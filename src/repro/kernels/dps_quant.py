@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: fused dynamic fixed-point quantize + statistics.
+
+The paper's per-step hot spot is quantizing *every* weight / activation /
+gradient tensor and measuring overflow rate R and quantization error E.
+Done naively (as in the paper's Caffe layers) that is four passes over HBM:
+read x, write q, read both back for the error reduction.  On TPU we fuse the
+whole event into one kernel:
+
+    HBM traffic:  read x (+ random bits on the portable path), write q,
+                  plus 7 floats of statistics per grid tile.
+    VMEM:         one (block_m, block_n) tile at a time; stats are reduced
+                  on-tile to scalars and accumulated into a tiny SMEM-resident
+                  accumulator that lives across the grid (dimension_semantics
+                  = 'arbitrary' keeps the accumulation race-free).
+
+Two variants of the stochastic-rounding noise source:
+
+  * ``use_onchip_prng=False`` (default; CPU-validatable): uniform bits enter
+    as a second operand.  Bit-exact against ``ref.dps_quant_ref`` — this is
+    what the test sweep asserts.
+  * ``use_onchip_prng=True`` (TPU fast path): bits come from the per-core
+    hardware PRNG (``pltpu.prng_seed``/``prng_random_bits``), halving HBM
+    reads.  This container's interpreter cannot execute the PRNG primitive
+    (verified: returns zeros), so this path is lowering-validated only and
+    is selected by ``ops.dps_quantize(..., onchip_prng=True)`` on real TPUs.
+
+⟨IL, FL⟩ arrive as an SMEM scalar-prefetch operand, so precision changes at
+every training step re-use the same compiled kernel.
+
+Block shape: (256, 1024) fp32 tiles = 1 MiB in / 1 MiB out — comfortably
+inside the ~16 MiB v5e VMEM budget together with the bits operand (1 MiB)
+and double buffering (6 MiB total), MXU-aligned (multiples of (8, 128)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# stats accumulator layout (must match ref.dps_quant_ref)
+N_STATS = 7
+_IDX_COUNT, _IDX_NZ, _IDX_OVER, _IDX_AERR, _IDX_RERR, _IDX_ASUM, _IDX_MAX = range(7)
+
+DEFAULT_BLOCK = (256, 1024)
+_U_BITS = 24
+_U_SCALE = 1.0 / (1 << _U_BITS)
+
+
+def _kernel(fmt_ref,            # SMEM: (3,) int32 [il, fl, seed]
+            x_ref,              # VMEM: (bm, bn) input tile
+            bits_ref,           # VMEM: (bm, bn) uint32 tile (portable path)
+            mask_ref,           # VMEM: (bm, bn) float32 1/0 validity tile
+            q_ref,              # VMEM out: (bm, bn)
+            stats_ref,          # SMEM out: (N_STATS,) float32 accumulator
+            *, stochastic: bool, use_onchip_prng: bool):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    il = fmt_ref[0]
+    fl = fmt_ref[1]
+    # bit-exact 2^n (jnp.exp2 is inexact on some backends; matches
+    # fixed_point.exp2_int)
+    def _exp2i(n):
+        n = jnp.clip(n, -126, 127)
+        return jax.lax.bitcast_convert_type((n + 127) << 23, jnp.float32)
+
+    scale = _exp2i(fl)
+    inv_scale = _exp2i(-fl)
+    span = _exp2i(il - 1 + fl)
+    qmax = span - 1.0
+    qmin = -span
+
+    x = x_ref[...].astype(jnp.float32)
+    m = mask_ref[...]
+
+    y = x * scale
+    over = ((y > qmax) | (y < qmin)).astype(jnp.float32) * m
+    yc = jnp.clip(y, qmin, qmax)
+
+    if stochastic:
+        if use_onchip_prng:
+            # TPU fast path: no bits operand traffic.  Seed is decorrelated
+            # per grid tile so every tile draws an independent stream.
+            pltpu.prng_seed(fmt_ref[2] + i * pl.num_programs(1) + j)
+            bits = pltpu.prng_random_bits(x.shape).astype(jnp.uint32)
+        else:
+            bits = bits_ref[...]
+        u = (bits >> (32 - _U_BITS)).astype(jnp.float32) * _U_SCALE
+        q_int = jnp.floor(yc + u)
+    else:
+        q_int = jnp.floor(yc + 0.5)
+    q_int = jnp.clip(q_int, qmin, qmax)
+    q = q_int * inv_scale
+    q_ref[...] = (q * m).astype(q_ref.dtype)
+
+    # --- on-tile stats reduction (rounding error vs clipped reference) ---
+    x_ref_val = yc * inv_scale
+    abs_err = jnp.abs(q - x_ref_val) * m
+    abs_ref = jnp.abs(x_ref_val) * m
+    nz = (abs_ref > 0.0).astype(jnp.float32)
+    rel = jnp.where(abs_ref > 0.0, abs_err / jnp.where(abs_ref > 0.0, abs_ref, 1.0), 0.0)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        for k in range(N_STATS):
+            stats_ref[k] = 0.0
+
+    stats_ref[_IDX_COUNT] += jnp.sum(m)
+    stats_ref[_IDX_NZ] += jnp.sum(nz)
+    stats_ref[_IDX_OVER] += jnp.sum(over)
+    stats_ref[_IDX_AERR] += jnp.sum(abs_err)
+    stats_ref[_IDX_RERR] += jnp.sum(rel)
+    stats_ref[_IDX_ASUM] += jnp.sum(abs_ref)
+    stats_ref[_IDX_MAX] = jnp.maximum(stats_ref[_IDX_MAX], jnp.max(jnp.abs(x) * m))
+
+
+@functools.partial(jax.jit, static_argnames=("stochastic", "use_onchip_prng",
+                                             "block", "interpret"))
+def dps_quant_pallas(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
+                     mask: jax.Array | None = None,
+                     *, stochastic: bool = True, use_onchip_prng: bool = False,
+                     block=DEFAULT_BLOCK, interpret: bool = True):
+    """Run the fused kernel on a 2-D fp32/bf16 array.
+
+    ``fmt3`` = int32[3] = [il, fl, seed].  ``bits`` uint32, same shape as x
+    (ignored when ``use_onchip_prng``).  ``mask`` (float32 1/0, same shape)
+    marks elements that belong in the statistics; grid padding added here is
+    masked automatically.  Returns ``(q, stats_vec[7])``.
+    """
+    M, N = x.shape
+    if mask is None:
+        mask = jnp.ones((M, N), jnp.float32)
+    bm = min(block[0], M) if M % block[0] else block[0]
+    bn = min(block[1], N) if N % block[1] else block[1]
+    # pad to the tile grid; mask marks the valid region
+    Mp = pl.cdiv(M, bm) * bm
+    Np = pl.cdiv(N, bn) * bn
+    xp = jnp.pad(x, ((0, Mp - M), (0, Np - N)))
+    bp = jnp.pad(bits, ((0, Mp - M), (0, Np - N)))
+    mask = jnp.pad(mask, ((0, Mp - M), (0, Np - N)))
+
+    grid = (Mp // bm, Np // bn)
+    kernel = functools.partial(_kernel, stochastic=stochastic,
+                               use_onchip_prng=use_onchip_prng)
+    q, stats = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # index maps receive the scalar-prefetch refs as trailing args
+                pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+                pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+                pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+            jax.ShapeDtypeStruct((N_STATS,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(fmt3, xp, bp, mask)
+    return q[:M, :N], stats

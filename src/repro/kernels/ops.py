@@ -1,0 +1,80 @@
+"""jit'd public wrapper around the fused DPS quantization kernel.
+
+``dps_quantize`` accepts any-rank tensors and a dynamic
+:class:`~repro.core.fixed_point.FixedPointFormat`, reshapes to the kernel's
+2-D tiling, and adapts the raw stats vector back into ``QuantStats``.
+
+On this (CPU) container the kernel runs in Pallas interpret mode; on TPU the
+same call lowers to Mosaic.  ``onchip_prng=True`` selects the PRNG-in-kernel
+variant (TPU only — see kernel docstring).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixed_point import FixedPointFormat, QuantStats
+from repro.kernels import ref as ref_lib
+from repro.kernels.dps_quant import dps_quant_pallas
+
+_ON_TPU = None
+
+
+def _on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.default_backend() == "tpu"
+    return _ON_TPU
+
+
+def dps_quantize(x: jax.Array, fmt: FixedPointFormat, *,
+                 key: jax.Array | None = None,
+                 bits: jax.Array | None = None,
+                 stochastic: bool = True,
+                 onchip_prng: bool = False,
+                 block=None, interpret: bool | None = None):
+    """Fused quantize+stats for an arbitrary-rank tensor.
+
+    Returns ``(q, QuantStats)``.  Exactly matches
+    ``repro.kernels.ref.dps_quant_ref`` for the bits-operand path.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    orig_shape = x.shape
+    n = x.size
+    # fold to 2-D with a 128-lane-friendly minor dim; zero-pad the tail (the
+    # kernel's mask operand keeps padded lanes out of the statistics)
+    minor = 1024 if n >= 1024 else max(n, 1)
+    major = -(-n // minor)
+    pad = major * minor - n
+    x2 = jnp.concatenate(
+        [x.reshape(-1), jnp.zeros((pad,), x.dtype)]).reshape(major, minor)
+
+    if stochastic and not onchip_prng:
+        if bits is None:
+            if key is None:
+                raise ValueError("stochastic path needs `key` or `bits`")
+            bits = jax.random.bits(key, shape=(n,), dtype=jnp.uint32)
+        bits2 = jnp.concatenate(
+            [bits.reshape(-1), jnp.zeros((pad,), jnp.uint32)]).reshape(major, minor)
+    else:
+        bits2 = jnp.zeros((major, minor), jnp.uint32)
+
+    seed = jnp.zeros((), jnp.int32)
+    if key is not None:
+        seed = jax.random.randint(key, (), 0, 2**31 - 1, jnp.int32)
+    fmt3 = jnp.stack([fmt.il.astype(jnp.int32), fmt.fl.astype(jnp.int32), seed])
+
+    mask2 = jnp.concatenate(
+        [jnp.ones((n,), jnp.float32), jnp.zeros((pad,), jnp.float32)]
+    ).reshape(major, minor)
+
+    kwargs = dict(stochastic=stochastic, use_onchip_prng=onchip_prng,
+                  interpret=interpret)
+    if block is not None:
+        kwargs["block"] = block
+    q2, vec = dps_quant_pallas(x2, fmt3, bits2, mask2, **kwargs)
+
+    q = q2.reshape(-1)[:n].reshape(orig_shape)
+    return q, ref_lib.stats_from_vector(vec)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused DPS quantization kernel.
+
+Semantics contract shared with ``dps_quant.py``: given the same input tensor,
+format and uint32 random bits, the kernel must reproduce this function
+bit-exactly (fp32 grid math, IL-1+FL <= 24).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixed_point import (FixedPointFormat, QuantStats, quantize,
+                                    ROUND_STOCHASTIC)
+
+
+def dps_quant_ref(x: jax.Array, il: jax.Array, fl: jax.Array,
+                  bits: jax.Array, mode: str = ROUND_STOCHASTIC):
+    """Returns ``(q, stats_vector)``.
+
+    ``stats_vector`` is the kernel's raw accumulator layout, shape (6,):
+    [count, nonzero, overflow, abs_err_sum, rel_err_sum, abs_sum]
+    (``max_abs`` is tracked separately as element 7 via max-combine in the
+    QuantStats adapter below — the raw kernel returns 7 floats).
+    """
+    fmt = FixedPointFormat(jnp.asarray(il, jnp.int32), jnp.asarray(fl, jnp.int32))
+    q, s = quantize(x, fmt, mode=mode, bits=bits, compute_stats=True)
+    vec = jnp.stack([s.count, s.nonzero, s.overflow, s.abs_err_sum,
+                     s.rel_err_sum, s.abs_sum, s.max_abs])
+    return q, vec
+
+
+def stats_from_vector(vec: jax.Array) -> QuantStats:
+    return QuantStats(count=vec[0], nonzero=vec[1], overflow=vec[2],
+                      abs_err_sum=vec[3], rel_err_sum=vec[4], abs_sum=vec[5],
+                      max_abs=vec[6])

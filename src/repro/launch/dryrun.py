@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. resolves every sharding (params, optimizer state, batch, KV caches)
+     through the logical rules,
+  3. ``jax.jit(step).lower(...).compile()``s against ShapeDtypeStruct
+     stand-ins — no tensor is allocated,
+  4. records ``memory_analysis()`` (fits-on-chip proof),
+     ``cost_analysis()`` (FLOPs / bytes) and the collective schedule parsed
+     from the optimized HLO,
+  5. compiles shallow unrolled probes (1-layer / 2-layer) to undo XLA's
+     count-the-while-body-once accounting for scanned layer stacks
+     (DESIGN §6), and
+  6. writes one JSON per cell under results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_3b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_NAMES, SHAPES, ModelConfig, ShapeConfig,
+                                applicable_shapes, get_config)
+from repro.core import qtrain
+from repro.dist.sharding import LogicalRules, axis_rules
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.optim import SGDConfig, make_optimizer
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-type bytes from optimized HLO (max operand/result
+    shape per instruction — the ring-transfer approximation)."""
+    out = {k: 0.0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", s)
+        if not m:
+            continue
+        rest = m.group(1)
+        op = None
+        for cand in COLLECTIVE_OPS:
+            if re.search(rf"\b{cand}(-start|-done)?\(", rest):
+                op = cand
+                break
+        if op is None or f"{op}-done" in rest:
+            continue
+        sizes = [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(rest)]
+        if sizes:
+            out[op] += max(sizes)
+            counts[op] += 1
+    out["counts"] = counts
+    return out
+
+
+def _mesh_and_rules(multi_pod: bool):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return mesh, LogicalRules()
+
+
+def _qcfg() -> qtrain.QuantConfig:
+    return qtrain.QuantConfig(enabled=True, controller="paper")
+
+
+def _optimizer():
+    return make_optimizer(SGDConfig())
+
+
+def _compile_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    qcfg = _qcfg()
+    opt = _optimizer()
+    step = specs_lib.build_train_step(cfg, qcfg, opt)
+    state_sh = specs_lib.train_state_shardings(cfg, mesh, rules, opt, qcfg)
+    batch_sh = specs_lib.train_batch_shardings(cfg, shape, mesh, rules)
+    astate = specs_lib.abstract_train_state(cfg, opt, qcfg)
+    abatch = specs_lib.train_batch_specs(cfg, shape)
+    repl = NamedSharding(mesh, P())
+
+    with mesh, axis_rules(mesh, rules):
+        jitted = jax.jit(step,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(astate, abatch)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _compile_decode(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    step = specs_lib.build_decode_step(cfg)
+    d_specs = specs_lib.decode_specs(cfg, shape)
+    d_sh = specs_lib.decode_shardings(cfg, shape, mesh, rules)
+    p_sh = specs_lib.param_shardings(cfg, mesh, rules)
+    from repro.models import registry
+    from repro.models.common import abstract_params
+    aparams = abstract_params(registry(cfg.family).model_defs(cfg))
+
+    with mesh, axis_rules(mesh, rules):
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, d_sh["tokens"], d_sh["cache"],
+                                       d_sh["pos"]),
+                         out_shardings=(d_sh["tokens"], d_sh["cache"],
+                                        d_sh["pos"]),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(aparams, d_specs["tokens"], d_specs["cache"],
+                               d_specs["pos"])
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _compile_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    step = specs_lib.build_prefill_step(cfg, max_seq=shape.seq)
+    p_sh = specs_lib.param_shardings(cfg, mesh, rules)
+    in_sh = specs_lib.prefill_shardings(cfg, shape, mesh, rules)
+    in_specs = specs_lib.prefill_specs(cfg, shape)
+    from repro.models import registry
+    from repro.models.common import abstract_params
+    aparams = abstract_params(registry(cfg.family).model_defs(cfg))
+
+    with mesh, axis_rules(mesh, rules):
+        jitted = jax.jit(lambda params, inputs: step(params, **inputs),
+                         in_shardings=(p_sh, in_sh))
+        lowered = jitted.lower(aparams, in_specs)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+KIND_COMPILERS = {"train": _compile_train, "prefill": _compile_prefill,
+                  "decode": _compile_decode}
+
+
+def _probe_variants(cfg: ModelConfig):
+    """Shallow configs for the scan-body FLOP correction.
+
+    Returns (variants, reconstruct) where ``variants`` is a dict
+    name -> cfg and ``reconstruct(probe_stats) -> full_stats_fn`` combines
+    them linearly into the full-depth estimate."""
+    P = dict(probe_unroll=True, train_accum=1)
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_period
+        g, rem = cfg.n_layers // k, cfg.n_layers % k
+        v = {"g1": dataclasses.replace(cfg, n_layers=k, **P),
+             "g2": dataclasses.replace(cfg, n_layers=2 * k, **P),
+             "g1r": dataclasses.replace(cfg, n_layers=k + 1, **P)}
+
+        def rec(p):
+            per_group = p["g2"] - p["g1"]
+            per_mamba = p["g1r"] - p["g1"]
+            const = p["g1"] - per_group
+            return const + g * per_group + rem * per_mamba
+        return v, rec
+    if cfg.family == "encdec":
+        v = {"d1e1": dataclasses.replace(cfg, n_layers=1, n_enc_layers=1, **P),
+             "d2e1": dataclasses.replace(cfg, n_layers=2, n_enc_layers=1, **P),
+             "d1e2": dataclasses.replace(cfg, n_layers=1, n_enc_layers=2, **P)}
+
+        def rec(p):
+            per_d = p["d2e1"] - p["d1e1"]
+            per_e = p["d1e2"] - p["d1e1"]
+            const = p["d1e1"] - per_d - per_e
+            return const + cfg.n_layers * per_d + cfg.n_enc_layers * per_e
+        return v, rec
+    v = {"l1": dataclasses.replace(cfg, n_layers=1, **P),
+         "l2": dataclasses.replace(cfg, n_layers=2, **P)}
+
+    def rec(p):
+        per = p["l2"] - p["l1"]
+        return p["l1"] - per + cfg.n_layers * per
+    return v, rec
+
+
+def _extract(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    out = {
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll["counts"],
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        val = getattr(mem, attr, None)
+        if val is not None:
+            out[attr] = int(val)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             probes: bool = True, overrides: Dict[str, Any] = None
+             ) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh, rules = _mesh_and_rules(multi_pod)
+    compile_fn = KIND_COMPILERS[shape.kind]
+
+    t0 = time.time()
+    lowered, compiled = compile_fn(cfg, shape, mesh, rules)
+    stats = _extract(compiled)
+    stats["compile_seconds"] = round(time.time() - t0, 1)
+    stats["mesh"] = "multi" if multi_pod else "single"
+    stats["n_devices"] = mesh.devices.size
+    stats["arch"], stats["shape"], stats["kind"] = arch, shape_name, shape.kind
+
+    if probes:
+        variants, rec = _probe_variants(cfg)
+        probe_stats: Dict[str, Dict[str, float]] = {}
+        for name, vcfg in variants.items():
+            _, c = compile_fn(vcfg, shape, mesh, rules)
+            e = _extract(c)
+            probe_stats[name] = {
+                "flops": e["flops"], "bytes_accessed": e["bytes_accessed"],
+                **{f"cb_{k}": v for k, v in e["collective_bytes"].items()},
+            }
+        keys = next(iter(probe_stats.values())).keys()
+        corrected = {}
+        for key in keys:
+            corrected[key] = rec({n: probe_stats[n][key]
+                                  for n in probe_stats})
+        stats["corrected"] = corrected
+        stats["probes"] = probe_stats
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else applicable_shapes(cfg))
+        for sh in shapes:
+            if sh not in applicable_shapes(cfg):
+                print(f"SKIP {arch} × {sh}: not applicable "
+                      f"(see DESIGN §Arch-applicability)")
+                continue
+            meshes = {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                cells.append((arch, sh, mp))
+
+    failures = []
+    for arch, sh, mp in cells:
+        tag = f"{arch}__{sh}__{'multi' if mp else 'single'}"
+        out_path = os.path.join(args.out, tag + ".json")
+        print(f"=== {tag} ===", flush=True)
+        try:
+            # probes (FLOP correction) only for the single-pod roofline
+            # table; the multi-pod pass proves the "pod" axis shards
+            stats = run_cell(arch, sh, mp,
+                             probes=not args.no_probes and not mp)
+            with open(out_path, "w") as f:
+                json.dump(stats, f, indent=1)
+            print(f"  ok: flops={stats['flops']:.3e} "
+                  f"bytes={stats['bytes_accessed']:.3e} "
+                  f"temp={stats.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"({stats['compile_seconds']}s)", flush=True)
+        except Exception as e:
+            failures.append((tag, repr(e)))
+            traceback.print_exc()
+    print(f"\n{len(cells) - len(failures)}/{len(cells)} cells compiled")
+    for tag, err in failures:
+        print(f"FAIL {tag}: {err[:200]}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

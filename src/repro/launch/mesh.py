@@ -1,0 +1,28 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state; jax locks the device count on first init).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis carries
+data parallelism across the inter-pod DCI links (collectives on it are the
+most expensive — see EXPERIMENTS §Roofline).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1-D data mesh (tests / smoke)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,188 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins for every
+model input — the dry-run lowers against these, so no tensor is ever
+allocated.  ``*_shardings`` resolve the logical axes of every train-state /
+batch / cache leaf against a concrete mesh via the divisibility-fallback
+rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import qtrain
+from repro.dist.sharding import LogicalRules, tree_specs
+from repro.models import registry
+from repro.models.common import abstract_params, logical_tree
+
+
+def _ns(mesh, rules, logical, shape):
+    return NamedSharding(mesh, rules.spec(logical, shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Batches.
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs of one global training batch."""
+    B, S = shape.batch, shape.seq
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        nt = S - cfg.n_patches
+        batch["tokens"] = jax.ShapeDtypeStruct((B, nt + 1), jnp.int32)
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    elif cfg.family == "encdec":
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S + 1), jnp.int32)
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S + 1), jnp.int32)
+    return batch
+
+
+def train_batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                          rules: LogicalRules):
+    specs = train_batch_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        logical = (("batch",) + (None,) * (len(v.shape) - 1))
+        out[k] = _ns(mesh, rules, logical, v.shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train state.
+# ---------------------------------------------------------------------------
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: LogicalRules):
+    mod = registry(cfg.family)
+    defs = mod.model_defs(cfg)
+    return tree_specs(logical_tree(defs), abstract_params(defs), mesh, rules)
+
+
+def opt_state_shardings(optimizer, p_shards):
+    from repro.optim.optimizers import SGD, AdamW
+    if isinstance(optimizer, SGD):
+        return {"mu": p_shards}
+    if isinstance(optimizer, AdamW):
+        return {"m": p_shards, "v": p_shards}
+    raise TypeError(type(optimizer))
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, rules: LogicalRules,
+                          optimizer, qcfg: qtrain.QuantConfig):
+    repl = NamedSharding(mesh, P())
+    p_shards = param_shardings(cfg, mesh, rules)
+    dps_template = qtrain.init_dps_bundle(qcfg)
+    dps_shards = jax.tree.map(lambda _: repl, dps_template)
+    return qtrain.TrainState(
+        step=repl, params=p_shards,
+        opt_state=opt_state_shardings(optimizer, p_shards),
+        dps=dps_shards, rng=repl, last_loss=repl)
+
+
+def abstract_train_state(cfg: ModelConfig, optimizer, qcfg: qtrain.QuantConfig):
+    """ShapeDtypeStruct TrainState (dry-run: no allocation)."""
+    mod = registry(cfg.family)
+    defs = mod.model_defs(cfg)
+    aparams = abstract_params(defs)
+    opt_state = jax.eval_shape(optimizer.init, aparams)
+    dps = jax.eval_shape(lambda: qtrain.init_dps_bundle(qcfg))
+    rng = jax.eval_shape(lambda: jax.random.key(0))
+    return qtrain.TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=aparams, opt_state=opt_state, dps=dps, rng=rng,
+        last_loss=jax.ShapeDtypeStruct((), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Decode / prefill.
+# ---------------------------------------------------------------------------
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(tokens, cache, pos) stand-ins for one serve_step."""
+    B, S = shape.batch, shape.seq
+    mod = registry(cfg.family)
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": mod.cache_struct(cfg, B, S),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def decode_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     rules: LogicalRules):
+    B, S = shape.batch, shape.seq
+    mod = registry(cfg.family)
+    struct = mod.cache_struct(cfg, B, S)
+    logical = mod.cache_logical(cfg)
+    cache_shards = tree_specs(logical, struct, mesh, rules)
+    return {
+        "tokens": _ns(mesh, rules, ("batch", None), (B, 1)),
+        "cache": cache_shards,
+        "pos": _ns(mesh, rules, ("batch",), (B,)),
+    }
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.batch, shape.seq
+    out: Dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.n_patches), jnp.int32)
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def prefill_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      rules: LogicalRules):
+    specs = prefill_specs(cfg, shape)
+    return {k: _ns(mesh, rules, ("batch",) + (None,) * (len(v.shape) - 1),
+                   v.shape)
+            for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Step builders.
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, qcfg: qtrain.QuantConfig, optimizer,
+                     accum_steps: Optional[int] = None):
+    mod = registry(cfg.family)
+    accum = cfg.train_accum if accum_steps is None else accum_steps
+    return qtrain.make_train_step(mod.loss_fn(cfg), optimizer, qcfg,
+                                  accum_steps=accum)
+
+
+def build_decode_step(cfg: ModelConfig):
+    mod = registry(cfg.family)
+
+    def serve_step(params, tokens, cache, pos):
+        logits, new_cache = mod.decode_step(cfg, params, tokens, cache, pos)
+        # greedy next token + advanced positions: the serving loop's fixpoint
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, new_cache, pos + 1
+
+    return serve_step
+
+
+def build_prefill_step(cfg: ModelConfig, max_seq: int):
+    mod = registry(cfg.family)
+
+    def prefill_step(params, **inputs):
+        return mod.prefill(cfg, params, inputs.pop("tokens"), max_seq,
+                           **inputs)
+
+    return prefill_step

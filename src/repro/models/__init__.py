@@ -1,0 +1,28 @@
+"""Model zoo registry: family name -> module with the uniform model API.
+
+Every family module exposes:
+  model_defs(cfg)                 -> pytree of ParamDef
+  forward(cfg, params, tokens, **kw) -> (logits, new_cache, aux_loss, stats)
+  loss_fn(cfg)                    -> (params, batch, qctx) -> (loss, aux)
+  prefill(cfg, params, tokens, max_seq, **kw) -> (logits, cache, pos)
+  decode_step(cfg, params, tokens, cache, pos) -> (logits, new_cache)
+  cache_struct / cache_logical / init_cache
+  count_params(cfg) [+ count_active_params for MoE]
+"""
+
+from __future__ import annotations
+
+
+def registry(family: str):
+    from repro.models import encdec, hybrid, mamba, transformer
+    mods = {
+        "dense": transformer,
+        "moe": transformer,
+        "vlm": transformer,
+        "ssm": mamba,
+        "hybrid": hybrid,
+        "encdec": encdec,
+    }
+    if family not in mods:
+        raise ValueError(f"unknown model family {family!r}")
+    return mods[family]

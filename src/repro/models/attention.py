@@ -1,0 +1,369 @@
+"""Attention: grouped-query (GQA/MQA/MHA) and multi-head latent (MLA).
+
+Call patterns (used by the drivers):
+  * ``mode="train"``    — full causal self-attention, no cache.
+  * ``mode="prefill"``  — causal, returns the populated KV cache.
+  * ``mode="decode"``   — one new token against a cache of ``max_seq``.
+  * ``mode="decode_static"`` — fixed cross-attention cache (enc-dec).
+
+Memory strategy (the dry-run's per-device HBM budget is 16 GB):
+  * train/prefill attention runs **blockwise with online softmax** (a
+    flash-attention schedule expressed in lax.scan — the TPU-native
+    adaptation of the quadratic-scores GPU layer; see DESIGN §3) whenever
+    S_q·S_k is large, so per-device score memory is O(S_q · block) instead
+    of O(S²);
+  * the head-vs-sequence parallelism decision is made statically per arch:
+    if n_heads divides the model axis, heads shard (Megatron-TP); otherwise
+    queries shard over sequence (sequence-parallel attention) and the small
+    K/V are replicated on the model axis.
+
+MLA implements the *absorbed* decode form — scores are taken directly
+against the compressed latent cache, so decode HBM traffic per token is
+O(kv_lora + rope) instead of O(heads × head_dim).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import logical_constraint, model_axis_size
+from repro.models.common import ParamDef, apply_rope
+
+NEG_INF = -1e30
+FLASH_THRESHOLD = 4096 * 2048          # S_q · S_k above which we go blockwise
+FLASH_BLOCK = 1024
+
+# int8 KV cache (cfg.kv_cache_bits == 8): values snap to the DPS ⟨3,5⟩ grid
+# (range ±4, step 1/32) and live in HBM as grid integers — the paper's
+# quantizer applied to serving state; halves cache bytes vs bf16.
+_KV_IL, _KV_FL = 3, 5
+
+
+def _kv_pack(x: jax.Array) -> jax.Array:
+    span = float(1 << (_KV_IL - 1 + _KV_FL))
+    y = jnp.clip(x.astype(jnp.float32) * (1 << _KV_FL), -span, span - 1)
+    return jnp.round(y).astype(jnp.int8)
+
+
+def _cache_read(c: jax.Array, dtype) -> jax.Array:
+    if c.dtype == jnp.int8:
+        return (c.astype(jnp.float32) * (1.0 / (1 << _KV_FL))).astype(dtype)
+    return c.astype(dtype)
+
+
+def _cache_write(x: jax.Array, cache_dtype) -> jax.Array:
+    return _kv_pack(x) if cache_dtype == jnp.int8 else x.astype(cache_dtype)
+
+
+def gqa_defs(cfg: ModelConfig, dtype) -> Dict[str, ParamDef]:
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((D, H * Dh), ("fsdp", "tp"), dtype=dtype),
+        "wk": ParamDef((D, KV * Dh), ("fsdp", "tp"), dtype=dtype),
+        "wv": ParamDef((D, KV * Dh), ("fsdp", "tp"), dtype=dtype),
+        "wo": ParamDef((H * Dh, D), ("tp", "fsdp"), dtype=dtype),
+    }
+    if cfg.attn_bias:
+        defs["bq"] = ParamDef((H * Dh,), ("tp",), init="zeros", dtype=dtype)
+        defs["bk"] = ParamDef((KV * Dh,), ("tp",), init="zeros", dtype=dtype)
+        defs["bv"] = ParamDef((KV * Dh,), ("tp",), init="zeros", dtype=dtype)
+        defs["bo"] = ParamDef((D,), (None,), init="zeros", dtype=dtype)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (q/k/v with FUSED head dim: (B, S, H, Dh)).
+# ---------------------------------------------------------------------------
+
+def _attn_full(q, k, v, *, causal: bool, scale: float):
+    """Materialized-scores attention for small S_q·S_k."""
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        kj = jnp.arange(Sk)[None, :]
+        s = s + jnp.where(kj <= qi, 0.0, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v)
+
+
+def _attn_flash(q, k, v, *, causal: bool, scale: float,
+                block: int = FLASH_BLOCK, unroll: bool = False):
+    """Blockwise online-softmax attention: lax.scan over K/V blocks.
+
+    Per-step score footprint is (B, H, S_q, block); the scan body is
+    checkpointed so backward recomputes blocks instead of storing them.
+    ``v`` may have a different head width than q/k (MLA: qk 192, v 128)."""
+    B, Sq, H, Dh = q.shape
+    Dv = v.shape[-1]
+    Sk = k.shape[1]
+    block = min(block, Sk)
+    nb = -(-Sk // block)
+    pad = nb * block - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = jnp.moveaxis(kp.reshape(B, nb, block, H, Dh), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nb, block, H, Dv), 1, 0)
+    j0s = jnp.arange(nb) * block
+
+    qi = jnp.arange(Sq) + (Sk - Sq)                  # global query positions
+    qf = q
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_blk, v_blk, j0 = xs
+        s = jnp.einsum("bqhd,bjhd->bhqj", qf, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        kj = j0 + jnp.arange(block)
+        valid = (kj[None, :] < Sk)
+        if causal:
+            valid = valid & (kj[None, :] <= qi[:, None])
+        valid = valid[None, None]                      # (1,1,Sq,block)
+        s = jnp.where(valid, s, NEG_INF)
+        bm = jnp.max(s, axis=-1)                       # (B,H,Sq)
+        new_m = jnp.maximum(m, bm)
+        p = jnp.exp(s - new_m[..., None]) * valid      # masked exp
+        corr = jnp.exp(m - new_m)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqj,bjhd->bhqd", p.astype(v.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (new_m, l, acc), None
+
+    body = jax.checkpoint(body)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, j0s),
+                                  unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)     # (B,Sq,H,Dh)
+
+
+def sdpa(q, k, v, *, causal: bool, scale: float, unroll: bool = False):
+    if q.shape[1] * k.shape[1] > FLASH_THRESHOLD:
+        return _attn_flash(q, k, v, causal=causal, scale=scale, unroll=unroll)
+    return _attn_full(q, k, v, causal=causal, scale=scale)
+
+
+def _heads_on_model(n_heads: int) -> bool:
+    m = model_axis_size()
+    return m > 1 and n_heads % m == 0
+
+
+def _constrain_qkv(q, k, v, n_heads, batch2d: bool = False):
+    """Static parallelism decision: shard heads if divisible; else either
+    shard the query sequence (K/V replicated on the model axis) or — with
+    ``batch2d`` — shard the BATCH over (data × model) so attention is fully
+    local and no K/V replication happens (§Perf hillclimb #7)."""
+    if _heads_on_model(n_heads):
+        q = logical_constraint(q, "batch", None, "heads", None)
+        k = logical_constraint(k, "batch", None, "heads", None)
+        v = logical_constraint(v, "batch", None, "heads", None)
+    elif batch2d:
+        q = logical_constraint(q, "batch2d", None, None, None)
+        k = logical_constraint(k, "batch2d", None, None, None)
+        v = logical_constraint(v, "batch2d", None, None, None)
+    else:
+        q = logical_constraint(q, "batch", "tp_seq", None, None)
+        k = logical_constraint(k, "batch", None, None, None)
+        v = logical_constraint(v, "batch", None, None, None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# GQA.
+# ---------------------------------------------------------------------------
+
+def gqa_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+              *, positions: jax.Array, mode: str = "train",
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_pos=None, kv_x: Optional[jax.Array] = None,
+              causal: bool = True):
+    """Grouped-query attention.  ``kv_x`` switches to cross-attention.
+
+    ``cache`` = (k, v) each (B, max_seq, KV, Dh); decode writes the new
+    token at ``cache_pos`` and attends over [0, cache_pos].
+    Returns ``(out, new_cache)``."""
+    B, Sq, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    src = x if kv_x is None else kv_x
+    Sk = src.shape[1]
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, Sq, H, Dh)
+    k = k.reshape(B, Sk, KV, Dh)
+    v = v.reshape(B, Sk, KV, Dh)
+
+    if kv_x is None and cfg.rope_theta > 0:
+        kv_pos = positions if mode != "decode" else cache_pos[..., None]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+
+    scale = 1.0 / math.sqrt(Dh)
+    new_cache = None
+
+    if mode == "decode_static":
+        ck, cv = cache                                  # (B, S, KV, Dh)
+        out = _decode_attn(q.reshape(B, Sq, KV, G, Dh), ck, cv, None, scale)
+    elif mode == "decode":
+        ck, cv = cache
+        upd = lambda c, new: jax.vmap(
+            lambda cb, nb, pb: jax.lax.dynamic_update_slice_in_dim(
+                cb, nb, pb, 0))(c, _cache_write(new, c.dtype), cache_pos)
+        ck = upd(ck, k)
+        cv = upd(cv, v)
+        new_cache = (ck, cv)
+        S = ck.shape[1]
+        valid = jnp.arange(S)[None, :] <= cache_pos[:, None]    # (B, S)
+        out = _decode_attn(q.reshape(B, Sq, KV, G, Dh), ck, cv, valid, scale)
+    else:
+        if mode == "prefill":
+            cdt = jnp.int8 if cfg.kv_cache_bits == 8 else k.dtype
+            new_cache = (_cache_write(k, cdt), _cache_write(v, cdt))
+        # repeat K/V heads to H (per-device slice only when heads shard)
+        kr = jnp.repeat(k, G, axis=2)
+        vr = jnp.repeat(v, G, axis=2)
+        q, kr, vr = _constrain_qkv(q, kr, vr, H, cfg.attn_batch2d)
+        out = sdpa(q, kr, vr, causal=causal and kv_x is None, scale=scale,
+                   unroll=cfg.probe_unroll)
+
+    out = out.reshape(B, Sq, H * Dh)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    if cfg.attn_bias:
+        out = out + p["bo"]
+    return logical_constraint(out, "batch", "tp_seq", "embed"), new_cache
+
+
+def _decode_attn(q, ck, cv, valid, scale):
+    """Grouped decode attention: q (B,Sq,KV,G,Dh) over cache (B,S,KV,Dh)."""
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, _cache_read(ck, q.dtype),
+                   preferred_element_type=jnp.float32) * scale
+    if valid is not None:
+        s = s + jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, _cache_read(cv, q.dtype))
+    B, Sq = out.shape[0], out.shape[1]
+    return out.reshape(B, Sq, -1, out.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention.
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg: ModelConfig, dtype) -> Dict[str, ParamDef]:
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamDef((D, qr), ("fsdp", None), dtype=dtype),
+        "q_norm": ParamDef((qr,), (None,), init="ones", dtype=jnp.float32),
+        "wq_b": ParamDef((qr, H * (dn + dr)), (None, "tp"), dtype=dtype),
+        "wkv_a": ParamDef((D, kvr + dr), ("fsdp", None), dtype=dtype),
+        "kv_norm": ParamDef((kvr,), (None,), init="ones", dtype=jnp.float32),
+        # decoupled up-projections so decode can absorb them:
+        "w_uk": ParamDef((kvr, H, dn), (None, "tp", None), dtype=dtype),
+        "w_uv": ParamDef((kvr, H, dv), (None, "tp", None), dtype=dtype),
+        "wo": ParamDef((H * dv, D), ("tp", "fsdp"), dtype=dtype),
+    }
+
+
+def _mla_qkr(cfg, p, x, positions):
+    """Shared query path + latent/k_rope projection for all modes."""
+    from repro.models.common import rms_norm
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_lat = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rh->bsh", q_lat, p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = kv[..., cfg.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    c_kv = logical_constraint(c_kv, "batch", None, None)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array, *,
+              positions: jax.Array, mode: str = "train",
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_pos=None):
+    """MLA attention.  Cache = (c_kv (B, S, kvr), k_rope (B, S, dr))."""
+    B, Sq, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(cfg, p, x, positions)
+
+    new_cache = None
+    if mode == "decode":
+        cc, cr = cache
+        upd = lambda c, new: jax.vmap(
+            lambda cb, nb, pb: jax.lax.dynamic_update_slice_in_dim(
+                cb, nb, pb, 0))(c, _cache_write(new, c.dtype), cache_pos)
+        cc = upd(cc, c_kv)
+        cr = upd(cr, k_rope)
+        new_cache = (cc, cr)
+        # absorbed decode: project q into latent space, score vs the latent
+        q_c = jnp.einsum("bthd,rhd->bthr", q_nope, p["w_uk"])      # (B,1,H,kvr)
+        scores = (jnp.einsum("bthr,bsr->bhts", q_c, _cache_read(cc, q_c.dtype),
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bthe,bse->bhts", q_rope,
+                               _cache_read(cr, q_rope.dtype),
+                               preferred_element_type=jnp.float32)) * scale
+        S = cc.shape[1]
+        valid = jnp.arange(S)[None, :] <= cache_pos[:, None]
+        scores = scores + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        ctx = jnp.einsum("bhts,bsr->bthr", probs, _cache_read(cc, probs.dtype))
+        out = jnp.einsum("bthr,rhd->bthd", ctx, p["w_uv"])          # (B,1,H,dv)
+    else:
+        if mode == "prefill":
+            cdt = jnp.int8 if cfg.kv_cache_bits == 8 else c_kv.dtype
+            new_cache = (_cache_write(c_kv, cdt), _cache_write(k_rope, cdt))
+        # expanded form: per-head K (nope) and V from the latent; rope parts
+        # concatenated so one flash call covers both score terms
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uk"])
+        v = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uv"])
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, Sq, H, dr))], axis=-1)
+        q, k, v = _constrain_qkv(q, k, v, H, cfg.attn_batch2d)
+        out = sdpa(q, k, v, causal=True, scale=scale, unroll=cfg.probe_unroll)
+
+    out = out.reshape(B, Sq, H * dv)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return logical_constraint(out, "batch", "tp_seq", "embed"), new_cache
+
+
+def count_gqa_params(cfg: ModelConfig) -> int:
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    n = D * H * Dh * 2 + D * KV * Dh * 2
+    if cfg.attn_bias:
+        n += H * Dh + 2 * KV * Dh + D
+    return n
+
+
+def count_mla_params(cfg: ModelConfig) -> int:
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return (D * qr + qr * H * (dn + dr) + D * (kvr + dr)
+            + kvr * H * dn + kvr * H * dv + H * dv * D)

@@ -1,0 +1,231 @@
+"""Shared model substrate: param defs, norms, RoPE, activations, embeddings.
+
+Parameters are declared once as :class:`ParamDef` (shape + logical sharding
+axes + initializer) so a single declaration drives materialization
+(``init_params``), sharding resolution (``logical_tree``) and the dry-run's
+``ShapeDtypeStruct`` stand-ins (``abstract_params``) — the MaxText pattern,
+kept small.
+
+Everything here is pure jnp; quantization taps arrive through the ``qctx``
+objects from :mod:`repro.core.qtrain`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical_constraint
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """One parameter: shape, per-dim logical axes, init spec."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | embed
+    scale: float = 1.0          # stddev multiplier (normal) / fan-in override
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _init_one(key, d: ParamDef) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(d.dtype)
+    if d.init == "normal":
+        # truncated-normal fan-in scaling over the last dim's fan-in
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        w = jax.random.truncated_normal(key, -2.0, 2.0, d.shape, jnp.float32) * std
+        return w.astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(key, defs) -> Any:
+    """Materialize a pytree of ParamDef into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(defs) -> Any:
+    """ShapeDtypeStruct stand-ins (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def)
+
+
+def logical_tree(defs) -> Any:
+    """Pytree of logical-axis tuples, same structure as the params."""
+    return jax.tree.map(lambda d: d.logical, defs, is_leaf=is_def)
+
+
+# ---------------------------------------------------------------------------
+# Normalization / activations (fp32 islands — see policy.py).
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":       # squared ReLU (nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,) fp32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """Rotate ``x``: (..., S, H, D) with positions (..., S) broadcastable.
+
+    Pairing convention: (x[..., :D/2], x[..., D/2:]) rotated jointly —
+    llama-style "rotate_half".
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                           # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding.
+# ---------------------------------------------------------------------------
+
+def padded_vocab(vocab: int, multiple: int = 512) -> int:
+    """Vocab padded for clean model-axis sharding (92553 → 92672 etc.).
+
+    The pad columns are masked to -1e30 in :func:`unembed`, so they carry
+    zero probability and zero gradient signal — loss/accuracy match the
+    unpadded model exactly."""
+    return -(-vocab // multiple) * multiple
+
+
+def embed_defs(vocab: int, d_model: int, tie: bool = True,
+               dtype=jnp.float32) -> Dict[str, ParamDef]:
+    vp = padded_vocab(vocab)
+    defs = {"tok": ParamDef((vp, d_model), ("vocab_out", "embed"),
+                            init="embed", scale=0.02, dtype=dtype)}
+    if not tie:
+        defs["unembed"] = ParamDef((d_model, vp), ("embed", "vocab_out"),
+                                   init="normal", dtype=dtype)
+    return defs
+
+
+def embed_lookup(emb: jax.Array, tokens: jax.Array,
+                 seq_axis: Optional[str] = "tp_seq") -> jax.Array:
+    x = jnp.take(emb, tokens, axis=0)
+    return logical_constraint(x, "batch", seq_axis, "embed")
+
+
+def unembed(x: jax.Array, params: Dict[str, jax.Array],
+            vocab: int) -> jax.Array:
+    """Project hidden states to logits (fp32); mask vocab-padding columns."""
+    if "unembed" in params:
+        w = params["unembed"]
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                            w.astype(jnp.float32))
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                            params["tok"].astype(jnp.float32))
+    vp = logits.shape[-1]
+    if vp != vocab:
+        pad_mask = jnp.arange(vp) >= vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logical_constraint(logits, "batch", "seq", "vocab_out")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy in fp32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def fused_unembed_xent(x: jax.Array, params: Dict[str, jax.Array], vocab: int,
+                       labels: jax.Array, mask: Optional[jax.Array] = None,
+                       chunk: int = 512, unroll: bool = False) -> jax.Array:
+    """Unembed + cross-entropy fused over sequence chunks.
+
+    The (B, S, V) fp32 logits tensor of a 256k-vocab model is several GB per
+    device and its cotangent doubles that; scanning ``chunk`` positions at a
+    time (body checkpointed) keeps the live footprint at
+    (B, chunk, V_shard) while producing the identical mean loss."""
+    B, S, D = x.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    chunk = min(chunk, S)
+    nb = -(-S // chunk)
+    pad = nb * chunk - S
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, pad)))
+    xb = jnp.moveaxis(xp.reshape(B, nb, chunk, D), 1, 0)
+    lb = jnp.moveaxis(lp.reshape(B, nb, chunk), 1, 0)
+    mb = jnp.moveaxis(mp.reshape(B, nb, chunk), 1, 0)
+
+    def body(carry, xs):
+        nll_sum, cnt = carry
+        xc, lc, mc = xs
+        logits = unembed(xc, params, vocab)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + jnp.sum((logz - gold) * mc)
+        return (nll_sum, cnt + jnp.sum(mc)), None
+
+    body = jax.checkpoint(body)
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xb, lb, mb), unroll=unroll)
+    return nll / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,259 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``frames`` arrive as
+precomputed (B, enc_seq, d_model) frame embeddings.  Encoder is non-causal
+self-attention; decoder is causal self-attention + cross-attention over the
+encoder output.  Sinusoidal positions on both stacks (whisper's learned
+decoder table tops out at 448 positions — the assigned 32k decode shapes
+need absolute positions beyond that, so both stacks use sinusoids; noted in
+DESIGN.md).
+
+Decode keeps two caches per layer: the growing self-attention KV and the
+fixed cross-attention KV computed once at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.fixed_point import QuantStats
+from repro.dist.sharding import logical_constraint
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models.common import (ParamDef, embed_defs, embed_lookup,
+                                 fused_unembed_xent, layer_norm, softmax_xent,
+                                 unembed)
+from repro.models.transformer import _dtype, stack_defs
+
+
+def sinusoid(S: int, D: int) -> jax.Array:
+    return sinusoid_at(jnp.arange(S, dtype=jnp.int32), D)
+
+
+def sinusoid_at(pos: jax.Array, D: int) -> jax.Array:
+    """Sinusoidal embedding rows at integer positions ``pos`` (any shape)."""
+    dim = jnp.arange(D // 2, dtype=jnp.float32)
+    ang = pos[..., None].astype(jnp.float32) / jnp.power(10000.0, 2 * dim / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _ln_defs(d):
+    return {"s": ParamDef((d,), (None,), init="ones", dtype=jnp.float32),
+            "b": ParamDef((d,), (None,), init="zeros", dtype=jnp.float32)}
+
+
+def _enc_layer_defs(cfg: ModelConfig):
+    dt = _dtype(cfg)
+    return {
+        "ln1": _ln_defs(cfg.d_model),
+        "attn": attn_lib.gqa_defs(cfg, dt),
+        "ln2": _ln_defs(cfg.d_model),
+        "mlp": mlp_lib.mlp_defs(cfg.d_model, cfg.d_ff, cfg.gated_mlp, dt),
+    }
+
+
+def _dec_layer_defs(cfg: ModelConfig):
+    dt = _dtype(cfg)
+    return {
+        "ln1": _ln_defs(cfg.d_model),
+        "self_attn": attn_lib.gqa_defs(cfg, dt),
+        "lnx": _ln_defs(cfg.d_model),
+        "cross_attn": attn_lib.gqa_defs(cfg, dt),
+        "ln2": _ln_defs(cfg.d_model),
+        "mlp": mlp_lib.mlp_defs(cfg.d_model, cfg.d_ff, cfg.gated_mlp, dt),
+    }
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    return {
+        "embed": embed_defs(cfg.vocab, cfg.d_model, tie=cfg.tie_embed, dtype=dt),
+        "enc_layers": stack_defs(cfg.n_enc_layers, _enc_layer_defs(cfg)),
+        "enc_norm": _ln_defs(cfg.d_model),
+        "dec_layers": stack_defs(cfg.n_layers, _dec_layer_defs(cfg)),
+        "dec_norm": _ln_defs(cfg.d_model),
+    }
+
+
+def _ln(x, p):
+    return layer_norm(x, p["s"], p["b"])
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array, qctx=None):
+    """frames (B, enc_seq, D) — stubbed frontend output."""
+    x = frames.astype(_dtype(cfg)) + sinusoid(
+        frames.shape[1], cfg.d_model).astype(_dtype(cfg))
+    x = logical_constraint(x, "batch", "seq", "embed")
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)[None, :]
+
+    def body(carry, xs):
+        h, stats_acc = carry
+        p, idx = xs
+        a, _ = attn_lib.gqa_apply(cfg, p["attn"], _ln(h, p["ln1"]),
+                                  positions=positions, mode="train",
+                                  causal=False)
+        h = h + a
+        h = h + mlp_lib.mlp_apply(cfg, p["mlp"], _ln(h, p["ln2"]))
+        stats = QuantStats.zero()
+        if qctx is not None:
+            h, stats = qctx.tap(h, idx)
+            stats = stats if stats is not None else QuantStats.zero()
+        return (h, stats_acc.merge(stats)), None
+
+    if cfg.remat in ("full", "dots"):
+        pol = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+               else jax.checkpoint_policies.checkpoint_dots)
+        body = jax.checkpoint(body, policy=pol)
+    idxs = jnp.arange(cfg.n_enc_layers, dtype=jnp.uint32) + 50_000
+    (x, stats), _ = jax.lax.scan(body, (x, QuantStats.zero()),
+                                 (params["enc_layers"], idxs),
+                                 unroll=cfg.probe_unroll)
+    return _ln(x, params["enc_norm"]), stats
+
+
+def _decoder(cfg: ModelConfig, params, x, enc_out, *, mode, cache, cache_pos,
+             qctx):
+    positions = (cache_pos[:, None] if mode == "decode"
+                 else jnp.arange(x.shape[1], dtype=jnp.int32)[None, :])
+
+    def body(carry, xs):
+        h, stats_acc = carry
+        p, idx, self_cache, cross_cache = xs
+        a, new_self = attn_lib.gqa_apply(
+            cfg, p["self_attn"], _ln(h, p["ln1"]), positions=positions,
+            mode=mode, cache=self_cache, cache_pos=cache_pos)
+        h = h + a
+        if mode == "decode":
+            c, _ = attn_lib.gqa_apply(
+                cfg, p["cross_attn"], _ln(h, p["lnx"]), positions=positions,
+                mode="decode_static", cache=cross_cache)
+            new_cross = cross_cache
+        else:
+            c, new_cross = attn_lib.gqa_apply(
+                cfg, p["cross_attn"], _ln(h, p["lnx"]), positions=positions,
+                mode="prefill" if mode == "prefill" else "train",
+                kv_x=enc_out, causal=False)
+        h = h + c
+        h = h + mlp_lib.mlp_apply(cfg, p["mlp"], _ln(h, p["ln2"]))
+        stats = QuantStats.zero()
+        if qctx is not None:
+            h, stats = qctx.tap(h, idx)
+            stats = stats if stats is not None else QuantStats.zero()
+        return (h, stats_acc.merge(stats)), (new_self, new_cross)
+
+    if cfg.remat in ("full", "dots"):
+        pol = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+               else jax.checkpoint_policies.checkpoint_dots)
+        body = jax.checkpoint(body, policy=pol)
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.uint32)
+    if cache is None:
+        B = x.shape[0]
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             cache_struct(cfg, B, 0))
+    (x, stats), new_cache = jax.lax.scan(
+        body, (x, QuantStats.zero()),
+        (params["dec_layers"], idxs, cache["self"], cache["cross"]),
+        unroll=cfg.probe_unroll)
+    if mode == "train":
+        new_cache = None
+    else:
+        new_cache = {"self": new_cache[0], "cross": new_cache[1]}
+    return _ln(x, params["dec_norm"]), new_cache, stats
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_seq: int):
+    L = cfg.n_layers
+    dt = jnp.int8 if cfg.kv_cache_bits == 8 else _dtype(cfg)
+    kv_self = (L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    kv_cross = (L, batch, cfg.enc_seq if max_seq else 0, cfg.n_kv_heads,
+                cfg.head_dim)
+    return {
+        "self": (jax.ShapeDtypeStruct(kv_self, dt),
+                 jax.ShapeDtypeStruct(kv_self, dt)),
+        "cross": (jax.ShapeDtypeStruct(kv_cross, dt),
+                  jax.ShapeDtypeStruct(kv_cross, dt)),
+    }
+
+
+def cache_logical(cfg: ModelConfig):
+    sp = ("layers", "batch", "kv_seq", "kv", "head_dim")
+    return {"self": (sp, sp), "cross": (sp, sp)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, max_seq))
+
+
+def forward(cfg: ModelConfig, params, tokens, *, frames=None, qctx=None,
+            mode="train", cache=None, cache_pos=None, enc_out=None,
+            vision_embeds=None, hidden_only=False):
+    """Returns (logits, new_cache, aux, stats).  ``frames`` required unless
+    decoding (cross KV already cached)."""
+    stats = QuantStats.zero()
+    if mode != "decode":
+        enc_out, enc_stats = encode(cfg, params, frames, qctx)
+        stats = stats.merge(enc_stats)
+    x = embed_lookup(params["embed"]["tok"], tokens).astype(_dtype(cfg))
+    if mode == "decode":
+        x = x + sinusoid_at(cache_pos, cfg.d_model)[:, None, :].astype(x.dtype)
+    else:
+        x = x + sinusoid(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+
+    x, new_cache, dec_stats = _decoder(cfg, params, x, enc_out, mode=mode,
+                                       cache=cache, cache_pos=cache_pos,
+                                       qctx=qctx)
+    stats = stats.merge(dec_stats)
+    if hidden_only:
+        return x, new_cache, jnp.zeros((), jnp.float32), stats
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = unembed(x, params["embed"], cfg.vocab)
+    return logits, new_cache, jnp.zeros((), jnp.float32), stats
+
+
+def loss_fn(cfg: ModelConfig):
+    def fn(params, batch, qctx=None):
+        tokens = batch["tokens"]
+        hidden, _, _, stats = forward(cfg, params, tokens[:, :-1],
+                                      frames=batch["frames"], qctx=qctx,
+                                      hidden_only=True)
+        loss = fused_unembed_xent(hidden, params["embed"], cfg.vocab,
+                                  tokens[:, 1:], batch.get("loss_mask"),
+                                  unroll=cfg.probe_unroll)
+        return loss, {"act_stats": stats}
+    return fn
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_seq: int, *, frames=None,
+            qctx=None, vision_embeds=None):
+    logits, cache, _, _ = forward(cfg, params, tokens, frames=frames,
+                                  qctx=qctx, mode="prefill")
+    S = tokens.shape[1]
+    cache["self"] = jax.tree.map(
+        lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, max_seq - S), (0, 0), (0, 0))),
+        cache["self"])
+    pos = jnp.full((tokens.shape[0],), S, jnp.int32)
+    return logits[:, -1], cache, pos
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos, qctx=None):
+    logits, new_cache, _, _ = forward(cfg, params, tokens, qctx=qctx,
+                                      mode="decode", cache=cache, cache_pos=pos)
+    return logits[:, -1], new_cache
+
+
+def count_params(cfg: ModelConfig) -> float:
+    from repro.models.mlp import count_mlp_params
+    attn = attn_lib.count_gqa_params(cfg)
+    mlp = count_mlp_params(cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+    enc = cfg.n_enc_layers * (4 * cfg.d_model + attn + mlp)
+    dec = cfg.n_layers * (6 * cfg.d_model + 2 * attn + mlp)
+    total = enc + dec + 4 * cfg.d_model
+    total += cfg.vocab * cfg.d_model * (1 if cfg.tie_embed else 2)
+    return float(total)

@@ -1,0 +1,221 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+``cfg.n_layers`` Mamba2 blocks; after every ``cfg.hybrid_period`` of them the
+single shared transformer block (attention + MLP, one parameter set) is
+applied — Zamba's weight-sharing trick.  Each of the
+``n_layers // hybrid_period`` invocations keeps its own KV cache.
+
+Decode stays sub-quadratic: SSM state is O(1) and the shared-attention
+caches are the only seq_len-sized state, so ``long_500k`` runs here.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.fixed_point import QuantStats
+from repro.models import ssm as ssm_lib
+from repro.dist.sharding import logical_constraint
+from repro.models.common import (ParamDef, embed_defs, embed_lookup,
+                                 fused_unembed_xent, rms_norm, softmax_xent,
+                                 unembed)
+from repro.models.transformer import (_block, _dtype, layer_defs as
+                                      attn_block_defs, stack_defs)
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_period
+
+
+def _split(cfg: ModelConfig):
+    """(n_groups, group_size, remainder) of the mamba stack."""
+    g = n_shared_invocations(cfg)
+    k = cfg.hybrid_period
+    return g, k, cfg.n_layers - g * k
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    mamba_layer = {
+        "norm": ParamDef((cfg.d_model,), (None,), init="ones", dtype=jnp.float32),
+        "ssm": ssm_lib.ssm_defs(cfg, dt),
+    }
+    return {
+        "embed": embed_defs(cfg.vocab, cfg.d_model, tie=cfg.tie_embed, dtype=dt),
+        "mamba": stack_defs(cfg.n_layers, mamba_layer),
+        "shared": attn_block_defs(cfg),       # ONE shared attn+MLP block
+        "final_norm": ParamDef((cfg.d_model,), (None,), init="ones",
+                               dtype=jnp.float32),
+    }
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_seq: int):
+    L, G = cfg.n_layers, n_shared_invocations(cfg)
+    H, P = ssm_lib.n_ssm_heads(cfg), cfg.ssm_head_dim
+    cc = ssm_lib.conv_channels(cfg)
+    dt = jnp.int8 if cfg.kv_cache_bits == 8 else _dtype(cfg)
+    kv = (G, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "ssm": (jax.ShapeDtypeStruct((L, batch, H, P, cfg.ssm_state), jnp.float32),
+                jax.ShapeDtypeStruct((L, batch, cfg.ssm_conv - 1, cc), jnp.float32)),
+        "attn": (jax.ShapeDtypeStruct(kv, dt), jax.ShapeDtypeStruct(kv, dt)),
+    }
+
+
+def cache_logical(cfg: ModelConfig):
+    sp = ("layers", "batch", "kv_seq", "kv", "head_dim")
+    return {
+        "ssm": (("layers", "batch", "heads", None, None),
+                ("layers", "batch", None, "tp")),
+        "attn": (sp, sp),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, max_seq))
+
+
+def _mamba_scan(cfg, layers, caches, x, idx0, *, mode, qctx):
+    """Scan a stacked slice of mamba layers.  Returns (x, caches, stats)."""
+
+    def body(carry, xs):
+        h, stats_acc = carry
+        p, idx, layer_cache = xs
+        out, new_cache = ssm_lib.ssm_apply(
+            cfg, p["ssm"], rms_norm(h, p["norm"]), mode=mode, cache=layer_cache)
+        h = h + out
+        stats = QuantStats.zero()
+        if qctx is not None:
+            h, stats = qctx.tap(h, idx)
+            stats = stats if stats is not None else QuantStats.zero()
+        h = logical_constraint(h, "batch", "tp_seq", "embed")  # SP carry
+        return (h, stats_acc.merge(stats)), new_cache
+
+    if cfg.remat in ("full", "dots"):
+        pol = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+               else jax.checkpoint_policies.checkpoint_dots)
+        body = jax.checkpoint(body, policy=pol)
+
+    n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+    idxs = idx0 + jnp.arange(n, dtype=jnp.uint32)
+    (x, stats), new_caches = jax.lax.scan(body, (x, QuantStats.zero()),
+                                          (layers, idxs, caches),
+                                          unroll=cfg.probe_unroll)
+    return x, new_caches, stats
+
+
+def forward(cfg: ModelConfig, params, tokens, *, qctx=None, mode="train",
+            cache=None, cache_pos=None, vision_embeds=None,
+            hidden_only=False):
+    x = embed_lookup(params["embed"]["tok"], tokens).astype(_dtype(cfg))
+    B, S, _ = x.shape
+    G, K, rem = _split(cfg)
+    if cache is None:
+        cache = init_cache(cfg, B, 0)
+
+    if mode == "decode":
+        positions = cache_pos[:, None]
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    # split the mamba stack into G groups of K plus a remainder
+    grouped = jax.tree.map(lambda a: a[:G * K].reshape((G, K) + a.shape[1:]),
+                           params["mamba"])
+    tail = jax.tree.map(lambda a: a[G * K:], params["mamba"])
+    ssm_g = jax.tree.map(lambda a: a[:G * K].reshape((G, K) + a.shape[1:]),
+                         cache["ssm"])
+    ssm_t = jax.tree.map(lambda a: a[G * K:], cache["ssm"])
+
+    stats_total = QuantStats.zero()
+    aux = jnp.zeros((), jnp.float32)
+
+    def group_body(carry, xs):
+        h, stats_acc = carry
+        gp, g_idx, g_ssm, g_attn = xs
+        h, new_ssm, stats = _mamba_scan(cfg, gp, g_ssm, h, g_idx * K,
+                                        mode=mode, qctx=qctx)
+        h, new_attn, aux_l, stats2 = _block(
+            cfg, params["shared"], h, positions=positions, mode=mode,
+            cache=g_attn, cache_pos=cache_pos, qctx=qctx,
+            layer_idx=jnp.uint32(10_000) + g_idx)
+        return (h, stats_acc.merge(stats).merge(stats2)), (new_ssm, new_attn)
+
+    if cfg.remat in ("full", "dots"):
+        # the OUTER group scan must be remat'd too, or its per-group
+        # residuals (13 × multi-GB) dominate train-step memory
+        pol = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+               else jax.checkpoint_policies.checkpoint_dots)
+        group_body = jax.checkpoint(group_body, policy=pol)
+
+    g_idxs = jnp.arange(G, dtype=jnp.uint32)
+    (x, stats_total), (new_ssm_g, new_attn) = jax.lax.scan(
+        group_body, (x, stats_total), (grouped, g_idxs, ssm_g, cache["attn"]),
+        unroll=cfg.probe_unroll)
+
+    if rem:
+        x, new_ssm_t, stats = _mamba_scan(cfg, tail, ssm_t, x, G * K,
+                                          mode=mode, qctx=qctx)
+        stats_total = stats_total.merge(stats)
+    else:
+        new_ssm_t = ssm_t
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        flat = jax.tree.map(
+            lambda g, t: jnp.concatenate(
+                [g.reshape((G * K,) + g.shape[2:]), t]), new_ssm_g, new_ssm_t)
+        new_cache = {"ssm": flat, "attn": new_attn}
+
+    x = rms_norm(x, params["final_norm"])
+    if hidden_only:
+        return x, new_cache, aux, stats_total
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = unembed(x, params["embed"], cfg.vocab)
+    return logits, new_cache, aux, stats_total
+
+
+def loss_fn(cfg: ModelConfig):
+    def fn(params, batch, qctx=None):
+        tokens = batch["tokens"]
+        hidden, _, _, stats = forward(cfg, params, tokens[:, :-1], qctx=qctx,
+                                      hidden_only=True)
+        loss = fused_unembed_xent(hidden, params["embed"], cfg.vocab,
+                                  tokens[:, 1:], batch.get("loss_mask"),
+                                  unroll=cfg.probe_unroll)
+        return loss, {"act_stats": stats}
+    return fn
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_seq: int, *, qctx=None,
+            vision_embeds=None):
+    logits, cache, _, _ = forward(cfg, params, tokens, qctx=qctx, mode="prefill")
+    S = tokens.shape[1]
+    pad = max_seq - S
+    cache["attn"] = jax.tree.map(
+        lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        cache["attn"])
+    pos = jnp.full((tokens.shape[0],), S, jnp.int32)
+    return logits[:, -1], cache, pos
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos, qctx=None):
+    logits, new_cache, _, _ = forward(cfg, params, tokens, qctx=qctx,
+                                      mode="decode", cache=cache, cache_pos=pos)
+    return logits[:, -1], new_cache
+
+
+def count_params(cfg: ModelConfig) -> float:
+    from repro.models import attention as attn_lib
+    from repro.models.mlp import count_mlp_params
+    mamba = cfg.n_layers * (cfg.d_model + ssm_lib.count_ssm_params(cfg))
+    shared = (2 * cfg.d_model + attn_lib.count_gqa_params(cfg)
+              + count_mlp_params(cfg.d_model, cfg.d_ff, cfg.gated_mlp))
+    total = mamba + shared + cfg.d_model
+    total += cfg.vocab * cfg.d_model * (1 if cfg.tie_embed else 2)
+    return float(total)

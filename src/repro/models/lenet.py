@@ -1,0 +1,95 @@
+"""LeNet (Caffe variant) — the paper's evaluation network (§4).
+
+conv(5×5, 20) → maxpool2 → conv(5×5, 50) → maxpool2 → fc(500) + ReLU →
+fc(10).  Activations are tapped (quantize + stats) after every layer, as in
+the paper's custom Caffe rounding layers; the last-layer logit gradient is
+quantized analytically in the loss so Alg. 1's "Calculate E and R for last
+layer Gradients" is reproduced exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.core.fixed_point import QuantStats
+from repro.models.common import ParamDef, init_params
+
+
+def model_defs() -> Dict[str, Any]:
+    return {
+        "conv1_w": ParamDef((5, 5, 1, 20), (None, None, None, None), scale=1.0),
+        "conv1_b": ParamDef((20,), (None,), init="zeros"),
+        "conv2_w": ParamDef((5, 5, 20, 50), (None, None, None, None), scale=1.0),
+        "conv2_b": ParamDef((50,), (None,), init="zeros"),
+        "fc1_w": ParamDef((4 * 4 * 50, 500), ("fsdp", "tp")),
+        "fc1_b": ParamDef((500,), (None,), init="zeros"),
+        "fc2_w": ParamDef((500, 10), (None, None)),
+        "fc2_b": ParamDef((10,), (None,), init="zeros"),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def forward(params, images: jax.Array, qctx=None):
+    """images (B, 28, 28, 1) -> (logits (B, 10), act_stats, last_stats).
+
+    ``last_stats`` is the final (logit) tap alone — Alg. 1 line 13
+    ("Calculate E and R for last layer Activations")."""
+    stats = QuantStats.zero()
+    last = QuantStats.zero()
+
+    def tap(x, salt):
+        nonlocal stats, last
+        if qctx is None:
+            return x
+        q, s = qctx.tap(x, salt)
+        if s is not None:
+            stats = stats.merge(s)
+            last = s
+        return q
+
+    x = tap(_pool(_conv(images, params["conv1_w"], params["conv1_b"])), "c1")
+    x = tap(_pool(_conv(x, params["conv2_w"], params["conv2_b"])), "c2")
+    x = x.reshape(x.shape[0], -1)
+    x = tap(jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"]), "f1")
+    logits = x @ params["fc2_w"] + params["fc2_b"]
+    logits = tap(logits, "f2")
+    return logits, stats, last
+
+
+def loss_fn(params, batch, qctx=None):
+    logits, act_stats, last_stats = forward(params, batch["images"], qctx)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    aux = {"act_stats": act_stats, "last_act_stats": last_stats,
+           "acc": jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))}
+
+    # paper Alg. 1 line 20: E and R of the LAST LAYER gradient.  dL/dlogits
+    # has the closed form (softmax - onehot)/B; quantize it for stats only.
+    if qctx is not None and qctx.collect_stats:
+        p = jax.nn.softmax(logits.astype(jnp.float32))
+        dlogits = (p - jax.nn.one_hot(labels, 10)) / logits.shape[0]
+        dlogits = jax.lax.stop_gradient(dlogits)
+        _, gstats = fxp.quantize(dlogits, qctx.grads_fmt, mode=qctx.rounding,
+                                 key=jax.random.fold_in(qctx.key, 0xD106))
+        aux["dlogits_stats"] = gstats
+    return loss, aux
+
+
+def init(key):
+    return init_params(key, model_defs())

@@ -1,0 +1,40 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (squared-ReLU)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import logical_constraint
+from repro.models.common import ParamDef, act_fn
+
+
+def mlp_defs(d_model: int, d_ff: int, gated: bool, dtype) -> Dict[str, ParamDef]:
+    defs = {
+        "w_in": ParamDef((d_model, d_ff), ("fsdp", "tp"), dtype=dtype),
+        "w_out": ParamDef((d_ff, d_model), ("tp", "fsdp"), dtype=dtype),
+    }
+    if gated:
+        defs["w_gate"] = ParamDef((d_model, d_ff), ("fsdp", "tp"), dtype=dtype)
+    return defs
+
+
+def mlp_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+              act: str | None = None) -> jax.Array:
+    act = act or cfg.act
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = act_fn(act, g) * h
+    else:
+        h = act_fn(act, h)
+    h = logical_constraint(h, "batch", "seq", "tp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return logical_constraint(out, "batch", "tp_seq", "embed")
+
+
+def count_mlp_params(d_model: int, d_ff: int, gated: bool) -> int:
+    return d_model * d_ff * (3 if gated else 2)

@@ -1,0 +1,255 @@
+"""Mixture-of-Experts: top-k routing with two dispatch strategies.
+
+``moe_apply`` picks, statically at trace time, between:
+
+  * **einsum dispatch** — GShard-style one-hot dispatch/combine einsums,
+    O(T·E·C) memory.  Used for decode (T = batch), smoke tests, and any
+    un-meshed run.  No collectives of its own; XLA shards the einsums.
+
+  * **all-to-all dispatch** (``shard_map``) — the production path.  Tokens
+    are sharded over (pod·data) × model (sequence-parallel residual);
+    each rank computes its local top-k, packs per-expert capacity buffers,
+    and two ``lax.all_to_all``s over the model axis move tokens to their
+    expert's owner and back (expert parallelism).  Capacity-bounded and
+    dropping, with the Switch-style load-balance auxiliary loss.
+
+Router logits/probs stay fp32 and are excluded from DPS quantization
+(see ``repro.core.policy``): reordering top-k under rounding noise
+destabilizes expert assignment.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import current_mesh_rules, logical_constraint
+from repro.models.common import ParamDef, act_fn
+from repro.models.mlp import mlp_apply, mlp_defs
+
+
+def moe_defs(cfg: ModelConfig, dtype) -> Dict[str, ParamDef]:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    defs = {
+        # router stays fp32 (policy fp32 island)
+        "router": ParamDef((D, E), (None, None), dtype=jnp.float32),
+        "w_in": ParamDef((E, D, F), ("expert", "fsdp", None), dtype=dtype),
+        "w_gate": ParamDef((E, D, F), ("expert", "fsdp", None), dtype=dtype),
+        "w_out": ParamDef((E, F, D), ("expert", None, "fsdp"), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = mlp_defs(D, cfg.n_shared_experts * F, True, dtype)
+    return defs
+
+
+def _router(cfg: ModelConfig, router_w: jax.Array, x: jax.Array):
+    """fp32 top-k routing.  x: (T, D) -> (weights (T,K), idx (T,K), probs)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    return top_w, top_i, probs
+
+
+def _aux_fp(cfg: ModelConfig, probs: jax.Array, top_i: jax.Array):
+    """Load-balance ingredients: f_e (dispatch fraction) and p̄_e (mean
+    router prob).  Kept separate so sharded callers can average them across
+    ranks BEFORE the (nonlinear) product."""
+    E = cfg.n_experts
+    f = jnp.mean(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=(0, 1))
+    p = jnp.mean(probs, axis=0)
+    return f, p
+
+
+def _aux_loss(cfg: ModelConfig, probs: jax.Array, top_i: jax.Array):
+    """Switch load-balance loss: E * Σ_e f_e · p̄_e."""
+    f, p = _aux_fp(cfg, probs, top_i)
+    return cfg.n_experts * jnp.sum(f * p) * cfg.top_k
+
+
+_A2A_IL, _A2A_FL = 4, 4       # int8 wire grid: range ±8, step 1/16
+
+
+def _a2a_pack(x: jax.Array) -> jax.Array:
+    span = float(1 << (_A2A_IL - 1 + _A2A_FL))
+    y = jnp.clip(x.astype(jnp.float32) * (1 << _A2A_FL), -span, span - 1)
+    return jnp.round(y).astype(jnp.int8)
+
+
+def _a2a_unpack(q: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * (1.0 / (1 << _A2A_FL))).astype(dtype)
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)   # static, 8-aligned
+
+
+# ---------------------------------------------------------------------------
+# Path 1: one-hot einsum dispatch (small T / no mesh).
+# ---------------------------------------------------------------------------
+
+def _moe_einsum(cfg: ModelConfig, p, x2: jax.Array):
+    T, D = x2.shape
+    E, C = cfg.n_experts, _capacity(T, cfg)
+    top_w, top_i, probs = _router(cfg, p["router"], x2)
+
+    # position of each (token, k) inside its expert's capacity buffer
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.int32)          # (T, K, E)
+    flat = onehot.reshape(T * cfg.top_k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                        # (T*K, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(T, cfg.top_k)     # (T, K)
+    keep = pos < C
+    disp = (jax.nn.one_hot(top_i, E, dtype=x2.dtype)[..., :, None]
+            * jax.nn.one_hot(pos, C, dtype=x2.dtype)[..., None, :]
+            * keep[..., None, None].astype(x2.dtype))            # (T,K,E,C)
+    comb = disp * top_w[..., None, None].astype(x2.dtype)
+    disp = jnp.sum(disp, axis=1)                                 # (T, E, C)
+    comb = jnp.sum(comb, axis=1)
+
+    buf = jnp.einsum("tec,td->ecd", disp, x2)                    # (E, C, D)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h = act_fn(cfg.act, g) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+    out = jnp.einsum("tec,ecd->td", comb, out_buf)
+    return out, _aux_loss(cfg, probs, top_i)
+
+
+# ---------------------------------------------------------------------------
+# Path 2: shard_map + all_to_all expert parallelism (production).
+# ---------------------------------------------------------------------------
+
+def _moe_a2a_local(cfg: ModelConfig, mesh_axes, batch_axes, x_l, router_w,
+                   w_in, w_gate, w_out):
+    """Per-rank body under shard_map.
+
+    x_l: (B_l, S_l, D) local tokens.  Expert weights are local shards
+    (E_l, D, F).  Two all_to_alls over the "model" axis implement
+    dispatch/combine.
+    """
+    B_l, S_l, D = x_l.shape
+    T_l = B_l * S_l
+    x2 = x_l.reshape(T_l, D)
+    E = cfg.n_experts
+    m = jax.lax.axis_size("model")
+    E_l = E // m
+    C = _capacity(T_l, cfg)
+
+    top_w, top_i, probs = _router(cfg, router_w, x2)
+    f, pbar = _aux_fp(cfg, probs, top_i)
+    f = jax.lax.pmean(f, mesh_axes)          # average BEFORE the product:
+    pbar = jax.lax.pmean(pbar, mesh_axes)    # Σ f̄·p̄ ≠ mean(Σ f·p)
+    aux = cfg.n_experts * jnp.sum(f * pbar) * cfg.top_k
+
+    # slot assignment (token-major priority, drop beyond capacity)
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.int32)            # (T,K,E)
+    flat = onehot.reshape(T_l * cfg.top_k, E)
+    pos = (jnp.cumsum(flat, axis=0) - flat)
+    pos = jnp.sum(pos * flat, axis=-1)                            # (T*K,)
+    eidx = top_i.reshape(-1)
+    keep = pos < C
+    slot = jnp.where(keep, eidx * C + pos, E * C)                 # drop row
+
+    # pack local capacity buffers (E*C+1 rows; last row swallows drops)
+    buf = jnp.zeros((E * C + 1, D), x2.dtype)
+    tok_rows = jnp.repeat(x2, cfg.top_k, axis=0)                  # (T*K, D)
+    buf = buf.at[slot].add(tok_rows)
+    buf = buf[:-1].reshape(E, C, D)
+
+    # dispatch: every rank sends each expert-owner its C-slot block.
+    # With moe_a2a_bits == 8 the payload is snapped to the DPS ⟨4,4⟩ grid
+    # and moved as int8 — the paper's quantizer on the expert-parallel wire
+    # (2× all-to-all bytes vs bf16; error bounded by one grid step).
+    wire_int8 = cfg.moe_a2a_bits == 8
+    if wire_int8:
+        buf = _a2a_pack(buf)
+    buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                             tiled=True)                          # (E_l, m*C, D)
+    if wire_int8:
+        buf = _a2a_unpack(buf, x_l.dtype)
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    h = act_fn(cfg.act, g) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_out)                # (E_l, m*C, D)
+    if wire_int8:
+        out_buf = _a2a_pack(out_buf)
+    out_buf = jax.lax.all_to_all(out_buf, "model", split_axis=1,
+                                 concat_axis=0, tiled=True)       # (E, C, D)
+    if wire_int8:
+        out_buf = _a2a_unpack(out_buf, x_l.dtype)
+
+    # combine: gather each token's k slots, weight, sum
+    out_rows = jnp.concatenate(
+        [out_buf.reshape(E * C, D), jnp.zeros((1, D), x2.dtype)])
+    gathered = out_rows[slot].reshape(T_l, cfg.top_k, D)
+    w = (top_w * keep.reshape(T_l, cfg.top_k)).astype(x2.dtype)
+    out = jnp.einsum("tk,tkd->td", w, gathered)
+    return out.reshape(B_l, S_l, D), aux
+
+
+def _moe_a2a(cfg: ModelConfig, p, x: jax.Array, mesh):
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    mesh_axes = tuple(a for a in names)
+    body = partial(_moe_a2a_local, cfg, mesh_axes, batch_axes)
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(batch_axes or None, "model", None),   # x: batch × seq(SP)
+                  P(None, None),                           # router replicated
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(batch_axes or None, "model", None), P()),
+        check_vma=False,
+    )(x, p["router"], p["w_in"], p["w_gate"], p["w_out"])
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Entry point.
+# ---------------------------------------------------------------------------
+
+def moe_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,S,D), aux_loss scalar)."""
+    B, S, D = x.shape
+    mesh, _ = current_mesh_rules()
+    use_a2a = False
+    if mesh is not None and "model" in mesh.axis_names:
+        m = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        bsz = math.prod(s for a, s in zip(mesh.axis_names, mesh.devices.shape)
+                        if a in ("pod", "data"))
+        use_a2a = (m > 1 and S % m == 0 and B % max(bsz, 1) == 0
+                   and cfg.n_experts % m == 0)
+    if use_a2a:
+        out, aux = _moe_a2a(cfg, p, x, mesh)
+    else:
+        out2, aux = _moe_einsum(cfg, p, x.reshape(B * S, D))
+        out = out2.reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(cfg, p["shared"], x)
+    return logical_constraint(out, "batch", "tp_seq", "embed"), aux
+
+
+def count_moe_params(cfg: ModelConfig) -> int:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    n = D * E + E * D * F * 3
+    if cfg.n_shared_experts:
+        n += 3 * D * cfg.n_shared_experts * F
+    return n
+
+
+def count_moe_active_params(cfg: ModelConfig) -> int:
+    D, F = cfg.d_model, cfg.moe_d_ff
+    n = D * cfg.n_experts + cfg.top_k * D * F * 3
+    if cfg.n_shared_experts:
+        n += 3 * D * cfg.n_shared_experts * F
+    return n

@@ -1,0 +1,287 @@
+"""Decoder-only transformer LM: dense, MoE, MLA and VLM-backbone variants.
+
+One module covers llama3.2 / mistral-large / nemotron-4 / gemma (dense),
+qwen3-moe / deepseek-v2 (MoE, the latter with MLA), and internvl2 (VLM —
+patch embeddings from the stubbed vision frontend are prepended to the
+token sequence).
+
+Structure notes:
+  * the layer stack runs under ``jax.lax.scan`` over stacked per-layer
+    params — HLO size and compile time are O(1) in depth;
+  * each scan body is ``jax.checkpoint``-wrapped per ``cfg.remat``;
+  * DPS activation taps (``qctx.tap``) fire on the residual stream after
+    every block; their stats ride the scan carry and merge globally;
+  * decode threads the per-layer KV cache through scan xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.fixed_point import QuantStats
+from repro.dist.sharding import logical_constraint
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models.common import (ParamDef, embed_defs, embed_lookup,
+                                 fused_unembed_xent, init_params, rms_norm,
+                                 layer_norm, softmax_xent, unembed)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def stack_defs(n: int, defs):
+    """Prepend a stacked ``layers`` dim to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.logical,
+                           init=d.init, scale=d.scale, dtype=d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    defs: Dict[str, Any] = {
+        "norm1": ParamDef((cfg.d_model,), (None,), init="ones",
+                          dtype=jnp.float32),
+        "norm2": ParamDef((cfg.d_model,), (None,), init="ones",
+                          dtype=jnp.float32),
+    }
+    if cfg.norm == "layer":
+        defs["norm1_b"] = ParamDef((cfg.d_model,), (None,), init="zeros",
+                                   dtype=jnp.float32)
+        defs["norm2_b"] = ParamDef((cfg.d_model,), (None,), init="zeros",
+                                   dtype=jnp.float32)
+    defs["attn"] = (attn_lib.mla_defs(cfg, dt) if cfg.mla
+                    else attn_lib.gqa_defs(cfg, dt))
+    if cfg.n_experts:
+        defs["moe"] = moe_lib.moe_defs(cfg, dt)
+    else:
+        defs["mlp"] = mlp_lib.mlp_defs(cfg.d_model, cfg.d_ff, cfg.gated_mlp, dt)
+    return defs
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    return {
+        "embed": embed_defs(cfg.vocab, cfg.d_model, tie=cfg.tie_embed, dtype=dt),
+        "layers": stack_defs(cfg.n_layers, layer_defs(cfg)),
+        "final_norm": ParamDef((cfg.d_model,), (None,), init="ones",
+                               dtype=jnp.float32),
+    }
+
+
+def _norm(cfg, x, scale, bias=None):
+    if cfg.norm == "layer":
+        return layer_norm(x, scale, bias)
+    return rms_norm(x, scale)
+
+
+def _block(cfg: ModelConfig, p, x, *, positions, mode, cache, cache_pos,
+           qctx, layer_idx):
+    """One transformer block.  Returns (x, new_cache, aux_loss, stats)."""
+    h = _norm(cfg, x, p["norm1"], p.get("norm1_b"))
+    if cfg.mla:
+        a_out, new_cache = attn_lib.mla_apply(
+            cfg, p["attn"], h, positions=positions, mode=mode, cache=cache,
+            cache_pos=cache_pos)
+    else:
+        a_out, new_cache = attn_lib.gqa_apply(
+            cfg, p["attn"], h, positions=positions, mode=mode, cache=cache,
+            cache_pos=cache_pos)
+    x = x + a_out
+
+    h = _norm(cfg, x, p["norm2"], p.get("norm2_b"))
+    aux_loss = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        m_out, aux_loss = moe_lib.moe_apply(cfg, p["moe"], h)
+    else:
+        m_out = mlp_lib.mlp_apply(cfg, p["mlp"], h)
+    x = x + m_out
+
+    stats = QuantStats.zero()
+    if qctx is not None:
+        x, stats = qctx.tap(x, layer_idx)
+        if stats is None:
+            stats = QuantStats.zero()
+    return x, new_cache, aux_loss, stats
+
+
+def _run_stack(cfg: ModelConfig, layers, x, *, positions, mode="train",
+               cache=None, cache_pos=None, qctx=None):
+    """Scan the layer stack.  Returns (x, new_cache, aux_loss, stats)."""
+
+    def body(carry, xs):
+        h, aux_acc, stats_acc = carry
+        p, idx, layer_cache = xs
+        h, new_cache, aux, stats = _block(
+            cfg, p, h, positions=positions, mode=mode, cache=layer_cache,
+            cache_pos=cache_pos, qctx=qctx, layer_idx=idx)
+        return (h, aux_acc + aux, stats_acc.merge(stats)), new_cache
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.uint32)
+    carry0 = (x, jnp.zeros((), jnp.float32), QuantStats.zero())
+    (x, aux_loss, stats), new_cache = jax.lax.scan(
+        body, carry0, (layers, idxs, cache), unroll=cfg.probe_unroll)
+    if mode == "train":
+        new_cache = None
+    return x, new_cache, aux_loss, stats
+
+
+def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
+            vision_embeds: Optional[jax.Array] = None, qctx=None,
+            mode: str = "train", cache=None, cache_pos=None,
+            hidden_only: bool = False):
+    """Returns (logits | hidden, new_cache, aux_loss, act_stats).
+
+    ``mode="prefill"`` unembeds the LAST position only (the serving loop
+    needs just the next-token logits; a full-vocab (B, S, V) projection at
+    32k prompt length is multiple GB of fp32 per device for nothing).
+    ``hidden_only=True`` skips unembedding — the loss fuses it chunkwise."""
+    x = embed_lookup(params["embed"]["tok"], tokens).astype(_dtype(cfg))
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        x = logical_constraint(x, "batch", "tp_seq", "embed")
+
+    B, S, _ = x.shape
+    if mode == "decode":
+        positions = cache_pos[:, None]                      # (B, 1)
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    if cache is None:
+        # scan requires an xs pytree; use per-layer None via zeros-shaped dummy
+        cache = _dummy_cache(cfg, B)
+
+    x, new_cache, aux_loss, stats = _run_stack(
+        cfg, params["layers"], x, positions=positions, mode=mode,
+        cache=cache, cache_pos=cache_pos, qctx=qctx)
+
+    x = _norm(cfg, x, params["final_norm"])
+    if hidden_only:
+        return x, new_cache, aux_loss, stats
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = unembed(x, params["embed"], cfg.vocab)
+    return logits, new_cache, aux_loss, stats
+
+
+def _dummy_cache(cfg: ModelConfig, batch: int):
+    """Zero-length cache placeholder so scan xs always has the same tree."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, 0))
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_seq: int):
+    """ShapeDtypeStructs of the decode cache (stacked over layers)."""
+    L = cfg.n_layers
+    dt = jnp.int8 if cfg.kv_cache_bits == 8 else _dtype(cfg)
+    if cfg.mla:
+        return (
+            jax.ShapeDtypeStruct((L, batch, max_seq, cfg.kv_lora_rank), dt),
+            jax.ShapeDtypeStruct((L, batch, max_seq, cfg.qk_rope_dim), dt),
+        )
+    shp = (L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return (jax.ShapeDtypeStruct(shp, dt), jax.ShapeDtypeStruct(shp, dt))
+
+
+def cache_logical(cfg: ModelConfig):
+    if cfg.mla:
+        return (("layers", "batch", "kv_seq", None),
+                ("layers", "batch", "kv_seq", None))
+    sp = ("layers", "batch", "kv_seq", "kv", "head_dim")
+    return (sp, sp)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, max_seq))
+
+
+def loss_fn(cfg: ModelConfig):
+    """(params, batch, qctx) -> (loss, aux) for qtrain.make_train_step."""
+
+    def fn(params, batch, qctx=None):
+        tokens = batch["tokens"]
+        hidden, _, aux_loss, stats = forward(
+            cfg, params, tokens[:, :-1],
+            vision_embeds=batch.get("vision_embeds"), qctx=qctx,
+            hidden_only=True)
+        labels = tokens[:, 1:]
+        if "vision_embeds" in batch and batch["vision_embeds"] is not None:
+            nv = batch["vision_embeds"].shape[1]
+            hidden = hidden[:, nv:]
+        loss = fused_unembed_xent(hidden, params["embed"], cfg.vocab, labels,
+                                  batch.get("loss_mask"),
+                                  unroll=cfg.probe_unroll)
+        loss = loss + cfg.router_aux_coef * aux_loss
+        return loss, {"act_stats": stats, "aux_loss": aux_loss}
+
+    return fn
+
+
+def prefill(cfg: ModelConfig, params, tokens: jax.Array, max_seq: int, *,
+            vision_embeds=None, qctx=None):
+    """Run the prompt, return (last_logits, cache padded to max_seq, pos)."""
+    logits, cache, _, _ = forward(cfg, params, tokens,
+                                  vision_embeds=vision_embeds, qctx=qctx,
+                                  mode="prefill")
+    S = cache[0].shape[2]
+    pad = max_seq - S
+    cache = jax.tree.map(
+        lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (c.ndim - 3)),
+        cache)
+    B = tokens.shape[0]
+    pos = jnp.full((B,), S, jnp.int32)
+    return logits[:, -1], cache, pos
+
+
+def decode_step(cfg: ModelConfig, params, tokens: jax.Array, cache, pos,
+                qctx=None):
+    """One token per row.  tokens (B, 1); pos (B,) write positions.
+
+    Returns (logits (B, vocab), new_cache)."""
+    logits, new_cache, _, _ = forward(cfg, params, tokens, qctx=qctx,
+                                      mode="decode", cache=cache,
+                                      cache_pos=pos)
+    return logits[:, -1], new_cache
+
+
+def count_params(cfg: ModelConfig) -> float:
+    per_layer = 2 * cfg.d_model
+    per_layer += (attn_lib.count_mla_params(cfg) if cfg.mla
+                  else attn_lib.count_gqa_params(cfg))
+    if cfg.n_experts:
+        per_layer += moe_lib.count_moe_params(cfg)
+    else:
+        per_layer += mlp_lib.count_mlp_params(cfg.d_model, cfg.d_ff,
+                                              cfg.gated_mlp)
+    total = cfg.n_layers * per_layer + cfg.d_model
+    total += cfg.vocab * cfg.d_model * (1 if cfg.tie_embed else 2)
+    return float(total)
+
+
+def count_active_params(cfg: ModelConfig) -> float:
+    if not cfg.n_experts:
+        return count_params(cfg)
+    per_layer = 2 * cfg.d_model
+    per_layer += (attn_lib.count_mla_params(cfg) if cfg.mla
+                  else attn_lib.count_gqa_params(cfg))
+    per_layer += moe_lib.count_moe_active_params(cfg)
+    total = cfg.n_layers * per_layer + cfg.d_model
+    total += cfg.vocab * cfg.d_model * (1 if cfg.tie_embed else 2)
+    return float(total)

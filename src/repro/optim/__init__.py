@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (AdamWConfig, SGDConfig, make_optimizer,
+                                    inv_decay, cosine_schedule)

@@ -1,0 +1,170 @@
+"""Tests for the DPS controllers (paper Alg. 2 + the Table-1 baselines)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dps import (DPSHyper, CONTROLLERS, make_controller,
+                            PaperController)
+from repro.core.fixed_point import FixedPointFormat, QuantStats, quantize
+
+
+def stats(count=1000, overflow=0, rel_err=0.0, nonzero=None, max_abs=1.0):
+    nz = count if nonzero is None else nonzero
+    return QuantStats(
+        count=jnp.float32(count), nonzero=jnp.float32(nz),
+        overflow=jnp.float32(overflow),
+        abs_err_sum=jnp.float32(rel_err * nz), rel_err_sum=jnp.float32(rel_err * nz),
+        abs_sum=jnp.float32(nz), max_abs=jnp.float32(max_abs))
+
+
+def test_paper_alg2_all_four_branches():
+    h = DPSHyper(r_max=1e-4, e_max=1e-4, il_init=8, fl_init=8)
+    c = PaperController(h)
+    s0 = c.init()
+
+    # R high, E high -> both grow
+    s = c.update(s0, stats(overflow=10, rel_err=0.5))
+    assert (int(s.il), int(s.fl)) == (9, 9)
+    # R high, E low -> IL grows, FL shrinks
+    s = c.update(s0, stats(overflow=10, rel_err=0.0))
+    assert (int(s.il), int(s.fl)) == (9, 7)
+    # R low, E high -> IL shrinks, FL grows
+    s = c.update(s0, stats(overflow=0, rel_err=0.5))
+    assert (int(s.il), int(s.fl)) == (7, 9)
+    # R low, E low -> both shrink (the paper's "aggressive" property)
+    s = c.update(s0, stats(overflow=0, rel_err=0.0))
+    assert (int(s.il), int(s.fl)) == (7, 7)
+
+
+def test_paper_threshold_is_percent_scale():
+    """E_max = R_max = 0.01% = 1e-4 (paper §4)."""
+    h = DPSHyper()
+    assert h.r_max == 1e-4 and h.e_max == 1e-4
+    c = PaperController(h)
+    s0 = c.init()
+    # overflow rate 2e-4 > 1e-4 -> grow
+    s = c.update(s0, stats(count=10000, overflow=2, rel_err=0.0))
+    assert int(s.il) == h.il_init + 1
+
+
+def test_clamping_keeps_grid_exact():
+    """IL - 1 + FL never exceeds 24 (fp32-exact emulation)."""
+    h = DPSHyper(il_init=16, fl_init=23, il_max=16, fl_max=23)
+    c = PaperController(h)
+    s = c.init()
+    for _ in range(5):
+        s = c.update(s, stats(overflow=100, rel_err=1.0))  # push both up
+    assert int(s.il) - 1 + int(s.fl) <= 24
+    assert int(s.il) <= h.il_max
+
+
+def test_paper_converges_to_narrow_format_on_easy_tensor():
+    """Closed loop: quantize a well-scaled tensor, feed stats back; widths
+    should fall until E crosses threshold, then stabilize (paper Fig. 3)."""
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (4096,)) * 0.5
+    h = DPSHyper(il_init=10, fl_init=16, e_max=1e-3)
+    c = PaperController(h)
+    s = c.init()
+    widths = []
+    for i in range(40):
+        q, st = quantize(x, c.fmt(s), key=jax.random.fold_in(key, i))
+        s = c.update(s, st)
+        widths.append(int(s.il) + int(s.fl))
+    assert widths[-1] < widths[0]           # shrank
+    assert min(widths) >= 3                 # did not collapse to nothing
+    # stabilized: last 10 widths within +-2 bits of each other
+    assert max(widths[-10:]) - min(widths[-10:]) <= 4
+
+
+def test_courbariaux_fixed_width_invariant():
+    c = make_controller("courbariaux", DPSHyper(total_bits=16))
+    s = c.init()
+    for ov in (0, 500, 0, 0, 500):
+        s = c.update(s, stats(overflow=ov))
+        assert int(s.il) + int(s.fl) == 16
+    # overflow pushes radix right
+    s2 = c.update(s, stats(overflow=500))
+    assert int(s2.il) == min(int(s.il) + 1, 16 - 0)
+
+
+def test_courbariaux_headroom_moves_radix_left():
+    c = make_controller("courbariaux", DPSHyper(total_bits=16, r_max=1e-2))
+    s0 = c.init()
+    s = c.update(s0, stats(count=10000, overflow=0))       # 0 <= Rmax/2
+    assert int(s.il) == int(s0.il) - 1
+    s = c.update(s0, stats(count=10000, overflow=60))      # Rmax/2 < R <= ... no wait 6e-3 > 5e-3, <=1e-2 -> hold
+    assert int(s.il) == int(s0.il)
+
+
+def test_na_width_grows_on_stall():
+    h = DPSHyper(na_window=5, na_tl_init=8, na_ml=24)
+    c = make_controller("na_mukhopadhyay", h)
+    s = c.init()
+    # constant loss -> stall after window steps -> width bump
+    tl0 = int(s.tl)
+    for _ in range(2 * h.na_window + 2):
+        s = c.update(s, stats(), {"loss": 1.0})
+    assert int(s.tl) > tl0
+    assert int(s.il) + int(s.fl) == int(s.tl)
+    assert c.rounding == "nearest"          # Na uses RTN (Table 1)
+
+
+def test_na_no_growth_while_improving():
+    h = DPSHyper(na_window=5)
+    c = make_controller("na_mukhopadhyay", h)
+    s = c.init()
+    loss = 10.0
+    for _ in range(20):
+        s = c.update(s, stats(), {"loss": loss})
+        loss *= 0.8
+    assert int(s.tl) == h.na_tl_init
+
+
+def test_static_never_moves():
+    c = make_controller("static", DPSHyper(il_init=3, fl_init=10))
+    s = c.init()
+    s2 = c.update(s, stats(overflow=999, rel_err=1.0))
+    assert (int(s2.il), int(s2.fl)) == (3, 10)
+
+
+def test_flexpoint_tracks_max():
+    c = make_controller("flexpoint", DPSHyper(total_bits=16, flex_slack=1.0))
+    s = c.init()
+    s = c.update(s, stats(max_abs=100.0))      # needs ~2^8 range + slack
+    # 2^(IL-1) must cover 200 -> IL >= 9 (ceil(log2(200))+1 = 9)
+    assert int(s.il) >= 9
+    assert int(s.il) + int(s.fl) == 16
+    # decays back down when maxima shrink
+    for _ in range(40):
+        s = c.update(s, stats(max_abs=0.1))
+    assert int(s.il) < 9
+
+
+def test_all_controllers_jittable_and_stable_shape():
+    for name in CONTROLLERS:
+        c = make_controller(name)
+        s = c.init()
+        upd = jax.jit(lambda s, st: c.update(s, st, {"loss": jnp.float32(1.0)}))
+        s2 = upd(s, stats(overflow=5, rel_err=0.2))
+        assert jax.tree.structure(s) == jax.tree.structure(s2)
+        f = c.fmt(s2)
+        assert f.il.dtype == jnp.int32 and f.fl.dtype == jnp.int32
+
+
+def test_controllers_support_per_group_granularity():
+    c = PaperController(DPSHyper())
+    s = c.init(shape=(4,))
+    st = QuantStats(
+        count=jnp.full((4,), 100.0), nonzero=jnp.full((4,), 100.0),
+        overflow=jnp.array([0.0, 50.0, 0.0, 50.0]),
+        abs_err_sum=jnp.zeros((4,)), rel_err_sum=jnp.array([0.0, 0.0, 50.0, 50.0]),
+        abs_sum=jnp.full((4,), 100.0), max_abs=jnp.ones((4,)))
+    s2 = c.update(s, st)
+    np.testing.assert_array_equal(np.asarray(s2.il) - np.asarray(s.il),
+                                  [-1, 1, -1, 1])
+    np.testing.assert_array_equal(np.asarray(s2.fl) - np.asarray(s.fl),
+                                  [-1, -1, 1, 1])

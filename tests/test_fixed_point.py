@@ -1,0 +1,191 @@
+"""Unit + property tests for the ⟨IL, FL⟩ emulation grid."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fixed_point import (FixedPointFormat, QuantStats, quantize,
+                                    quantize_tree, ROUND_NEAREST,
+                                    ROUND_STOCHASTIC)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+def fmt(il, fl):
+    return FixedPointFormat.create(il, fl)
+
+
+def test_grid_snap_nearest():
+    f = fmt(4, 2)  # grid 0.25, range [-8, 7.75]
+    x = jnp.array([0.0, 0.1, 0.125, 0.30, 1.0, -0.30, 7.9, 100.0, -100.0])
+    q, s = quantize(x, f, mode=ROUND_NEAREST)
+    np.testing.assert_allclose(
+        np.asarray(q),
+        [0.0, 0.0, 0.25, 0.25, 1.0, -0.25, 7.75, 7.75, -8.0], rtol=0, atol=0)
+    # 7.9 (31.6 grid units > qmax=31), 100 and -100 all clip:
+    assert int(s.overflow) == 3
+
+
+def test_overflow_boundary_semantics():
+    f = fmt(4, 2)
+    x = jnp.array([7.75, 7.76, -8.0, -8.01])
+    _, s = quantize(x, f, mode=ROUND_NEAREST)
+    assert int(s.overflow) == 2      # only values strictly outside the grid
+
+
+def test_round_half_up_matches_paper_eq1():
+    f = fmt(8, 0)  # integer grid
+    x = jnp.array([0.5, 1.5, 2.5, -0.5, -1.5])
+    q, _ = quantize(x, f, mode=ROUND_NEAREST)
+    # floor(y + 0.5): 0.5->1, 1.5->2, 2.5->3, -0.5->0, -1.5->-1
+    np.testing.assert_array_equal(np.asarray(q), [1.0, 2.0, 3.0, 0.0, -1.0])
+
+
+def test_stochastic_unbiased():
+    f = fmt(4, 4)  # grid 1/16
+    key = jax.random.key(0)
+    x = jnp.full((200_000,), 0.4)   # 6.4 grid units
+    q, _ = quantize(x, f, mode=ROUND_STOCHASTIC, key=key)
+    # E[q] = x; with 200k samples the mean is within ~4 sigma
+    sigma = (1 / 16) * 0.5 / np.sqrt(200_000)
+    assert abs(float(q.mean()) - 0.4) < 4 * sigma
+    # only the two adjacent grid points appear
+    assert set(np.unique(np.asarray(q))) <= {6 / 16, 7 / 16}
+
+
+def test_stochastic_preserves_grid_values():
+    f = fmt(6, 6)
+    key = jax.random.key(1)
+    x = jnp.arange(-32, 32) / 64.0 * 32  # exact grid values
+    q, s = quantize(x, f, mode=ROUND_STOCHASTIC, key=key)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
+    assert float(s.abs_err_sum) == 0.0
+    assert float(s.quant_error()) == 0.0
+
+
+def test_dynamic_fmt_no_recompile():
+    """IL/FL are traced: one compilation serves every precision."""
+    traces = []
+
+    @jax.jit
+    def f(x, il, fl):
+        traces.append(1)
+        q, s = quantize(x, FixedPointFormat(il, fl), mode=ROUND_NEAREST)
+        return q, s.overflow
+
+    x = jnp.linspace(-4, 4, 64)
+    f(x, jnp.int32(4), jnp.int32(2))
+    f(x, jnp.int32(8), jnp.int32(8))
+    f(x, jnp.int32(2), jnp.int32(12))
+    assert len(traces) == 1
+
+
+def test_stats_merge_matches_whole():
+    key = jax.random.key(2)
+    x = jax.random.normal(key, (4096,))
+    f = fmt(4, 8)
+    _, s_all = quantize(x, f, mode=ROUND_NEAREST)
+    _, s_a = quantize(x[:1000], f, mode=ROUND_NEAREST)
+    _, s_b = quantize(x[1000:], f, mode=ROUND_NEAREST)
+    merged = s_a.merge(s_b)
+    for field in ("count", "nonzero", "overflow", "abs_err_sum", "abs_sum"):
+        np.testing.assert_allclose(float(getattr(merged, field)),
+                                   float(getattr(s_all, field)), rtol=1e-6)
+    np.testing.assert_allclose(float(merged.max_abs), float(s_all.max_abs))
+
+
+def test_quantize_tree_predicate():
+    tree = {"w": jnp.ones((8, 8)) * 0.3, "norm_scale": jnp.ones((8,)) * 0.3}
+    f = fmt(4, 1)  # grid 0.5 -> 0.3 rounds to 0.5 or 0.0
+
+    def pred(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        return "norm" not in name
+
+    qt, stats = quantize_tree(tree, f, mode=ROUND_NEAREST, predicate=pred)
+    assert float(stats.count) == 64          # only w counted
+    np.testing.assert_array_equal(np.asarray(qt["norm_scale"]),
+                                  np.asarray(tree["norm_scale"]))
+    assert set(np.unique(np.asarray(qt["w"]))) == {0.5}
+
+
+def test_bf16_roundtrip_dtype():
+    f = fmt(4, 4)
+    x = jnp.array([0.37, -1.12], jnp.bfloat16)
+    q, _ = quantize(x, f, mode=ROUND_NEAREST)
+    assert q.dtype == jnp.bfloat16
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=50, deadline=None)
+    @given(il=st.integers(2, 10), fl=st.integers(0, 14),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_grid_and_range(il, fl, seed):
+        """Outputs always lie on the 2^-FL grid inside the signed range."""
+        key = jax.random.key(seed)
+        x = jax.random.normal(key, (257,)) * (2.0 ** (il - 1))
+        q, s = quantize(x, fmt(il, fl), mode=ROUND_STOCHASTIC,
+                        key=jax.random.fold_in(key, 7))
+        qn = np.asarray(q, np.float64)
+        grid = qn * (2.0 ** fl)
+        np.testing.assert_allclose(grid, np.round(grid), atol=1e-6)
+        assert qn.max() <= 2.0 ** (il - 1) - 2.0 ** (-fl) + 1e-9
+        assert qn.min() >= -(2.0 ** (il - 1)) - 1e-9
+        # error never exceeds one grid step (for non-overflowed values)
+        assert float(s.quant_error("ratio")) >= 0.0
+
+    @settings(max_examples=30, deadline=None)
+    @given(il=st.integers(2, 8), fl=st.integers(1, 12),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_rtn_error_bound(il, fl, seed):
+        """RTN error <= half a grid step for in-range values."""
+        key = jax.random.key(seed)
+        x = jax.random.uniform(key, (311,), minval=-(2.0 ** (il - 2)),
+                               maxval=2.0 ** (il - 2))
+        q, _ = quantize(x, fmt(il, fl), mode=ROUND_NEAREST)
+        err = np.abs(np.asarray(q, np.float64) - np.asarray(x, np.float64))
+        assert err.max() <= 0.5 * 2.0 ** (-fl) + 1e-9
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=30, deadline=None)
+    @given(il=st.integers(2, 8), fl=st.integers(0, 12),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_rtn_idempotent(il, fl, seed):
+        """Grid values are fixed points of the quantizer."""
+        key = jax.random.key(seed)
+        x = jax.random.normal(key, (129,)) * (2.0 ** (il - 2))
+        q1, _ = quantize(x, fmt(il, fl), mode=ROUND_NEAREST)
+        q2, s2 = quantize(q1, fmt(il, fl), mode=ROUND_NEAREST)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        assert float(s2.abs_err_sum) == 0.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(il=st.integers(2, 6), fl=st.integers(1, 10),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_finer_grid_never_worse(il, fl, seed):
+        """RTN error is monotone non-increasing in FL (same range)."""
+        key = jax.random.key(seed)
+        x = jax.random.uniform(key, (257,), minval=-(2.0 ** (il - 2)),
+                               maxval=2.0 ** (il - 2))
+        _, s1 = quantize(x, fmt(il, fl), mode=ROUND_NEAREST)
+        _, s2 = quantize(x, fmt(il, fl + 1), mode=ROUND_NEAREST)
+        assert float(s2.abs_err_sum) <= float(s1.abs_err_sum) + 1e-6
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_stochastic_error_bounded_by_step(seed):
+        """|q - x| < 2^-FL for in-range values, any rounding draw."""
+        key = jax.random.key(seed)
+        x = jax.random.uniform(key, (311,), minval=-3.0, maxval=3.0)
+        q, _ = quantize(x, fmt(4, 9), mode=ROUND_STOCHASTIC,
+                        key=jax.random.fold_in(key, 3))
+        err = np.abs(np.asarray(q, np.float64) - np.asarray(x, np.float64))
+        assert err.max() < 2.0 ** -9 + 1e-9

@@ -1,0 +1,131 @@
+"""Pallas kernel sweep: dps_quant vs the pure-jnp oracle (bit-exact)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fixed_point import FixedPointFormat
+from repro.kernels import ops
+from repro.kernels.dps_quant import dps_quant_pallas
+from repro.kernels.ref import dps_quant_ref, stats_from_vector
+
+SHAPES_2D = [(8, 128), (256, 1024), (300, 1100), (1, 7), (513, 129)]
+FMTS = [(4, 2), (8, 8), (2, 14), (6, 10), (16, 9)]
+
+
+def _bits(key, shape):
+    return jax.random.bits(key, shape=shape, dtype=jnp.uint32)
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("ilfl", [(4, 2), (6, 10)])
+def test_kernel_matches_ref_stochastic(shape, ilfl):
+    il, fl = ilfl
+    key = jax.random.key(hash(shape) % 1000)
+    x = jax.random.normal(key, shape) * (2.0 ** (il - 2))
+    bits = _bits(jax.random.fold_in(key, 1), shape)
+    fmt3 = jnp.array([il, fl, 0], jnp.int32)
+
+    q_k, vec_k = dps_quant_pallas(x, fmt3, bits)
+    q_r, vec_r = dps_quant_ref(x, il, fl, bits)
+
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(vec_k), np.asarray(vec_r),
+                               rtol=1e-6, atol=1e-4)
+
+
+@pytest.mark.parametrize("ilfl", FMTS)
+def test_kernel_matches_ref_nearest(ilfl):
+    il, fl = ilfl
+    key = jax.random.key(il * 31 + fl)
+    x = jax.random.normal(key, (256, 1024)) * (2.0 ** (il - 2))
+    bits = jnp.zeros((256, 1024), jnp.uint32)
+    fmt3 = jnp.array([il, fl, 0], jnp.int32)
+    q_k, vec_k = dps_quant_pallas(x, fmt3, bits, stochastic=False)
+    q_r, vec_r = dps_quant_ref(x, il, fl, bits, mode="nearest")
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(vec_k), np.asarray(vec_r),
+                               rtol=1e-6, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    key = jax.random.key(3)
+    x = (jax.random.normal(key, (64, 256)) * 4).astype(dtype)
+    bits = _bits(jax.random.fold_in(key, 1), (64, 256))
+    fmt3 = jnp.array([5, 6, 0], jnp.int32)
+    q_k, vec_k = dps_quant_pallas(x, fmt3, bits)
+    q_r, vec_r = dps_quant_ref(x, 5, 6, bits)
+    assert q_k.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(q_k, np.float32),
+                                  np.asarray(q_r, np.float32))
+    np.testing.assert_allclose(np.asarray(vec_k), np.asarray(vec_r), rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(17,), (3, 5, 7), (2, 3, 4, 5), (4096,),
+                                   (1025, 3)])
+def test_ops_arbitrary_rank_matches_core(shape):
+    """ops.dps_quantize == core.quantize for any rank (same bits)."""
+    from repro.core.fixed_point import quantize
+    key = jax.random.key(11)
+    x = jax.random.normal(key, shape) * 8
+    n = x.size
+    bits = jax.random.bits(jax.random.fold_in(key, 5), shape=(n,),
+                           dtype=jnp.uint32)
+    fmt = FixedPointFormat.create(5, 7)
+    q_o, s_o = ops.dps_quantize(x, fmt, bits=bits)
+    q_c, s_c = quantize(x, fmt, bits=bits.reshape(shape))
+    np.testing.assert_array_equal(np.asarray(q_o), np.asarray(q_c))
+    assert float(s_o.count) == n
+    np.testing.assert_allclose(float(s_o.abs_err_sum), float(s_c.abs_err_sum),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(s_o.overflow), float(s_c.overflow))
+
+
+def test_ops_padding_excluded_from_stats():
+    """Padded tail lanes must not contaminate count/nonzero."""
+    x = jnp.ones((1000,)) * 0.37          # minor dim pads 1000 -> 1024... n<1024 so minor=1000
+    x = jnp.ones((1500,)) * 0.37          # forces pad with minor=1024
+    fmt = FixedPointFormat.create(4, 2)
+    q, s = ops.dps_quantize(x, fmt, stochastic=False)
+    assert float(s.count) == 1500
+    assert float(s.nonzero) == 1500
+
+
+def test_kernel_dynamic_fmt_single_compile():
+    """fmt3 is a runtime operand: two formats share one executable."""
+    key = jax.random.key(4)
+    x = jax.random.normal(key, (256, 1024))
+    bits = _bits(key, (256, 1024))
+    f = jax.jit(lambda x, fmt3, bits: dps_quant_pallas(x, fmt3, bits))
+    q1, _ = f(x, jnp.array([4, 2, 0], jnp.int32), bits)
+    q2, _ = f(x, jnp.array([8, 12, 0], jnp.int32), bits)
+    # finer grid -> strictly smaller (or equal) error
+    e1 = float(jnp.abs(q1 - x).sum())
+    e2 = float(jnp.abs(q2 - x).sum())
+    assert e2 < e1
+
+
+def test_onchip_prng_variant_traces():
+    """The TPU PRNG path must trace (kernel jaxpr builds; execution needs TPU).
+
+    JAX 0.8 refuses to *lower* non-interpret Pallas on the CPU backend, so
+    abstract evaluation is the strongest CPU-side check: it proves the kernel
+    body (incl. ``pltpu.prng_seed``/``prng_random_bits``) is trace-valid and
+    output shapes/dtypes are right.  Full lowering is exercised on real TPU.
+    """
+    x = jax.ShapeDtypeStruct((256, 1024), jnp.float32)
+    fmt3 = jax.ShapeDtypeStruct((3,), jnp.int32)
+    bits = jax.ShapeDtypeStruct((256, 1024), jnp.uint32)
+    q, stats = jax.eval_shape(
+        lambda x, fmt3, bits: dps_quant_pallas(
+            x, fmt3, bits, use_onchip_prng=True, interpret=False),
+        x, fmt3, bits)
+    assert q.shape == (256, 1024) and q.dtype == jnp.float32
+    assert stats.shape == (7,) and stats.dtype == jnp.float32
+    # and the documented CPU limitation holds (so nobody silently "runs" it):
+    f = jax.jit(lambda x, fmt3, bits: dps_quant_pallas(
+        x, fmt3, bits, use_onchip_prng=True, interpret=False))
+    with pytest.raises(Exception, match="[Ii]nterpret"):
+        f.lower(x, fmt3, bits)

@@ -1,0 +1,212 @@
+"""Substrate tests: optimizers, data pipeline, checkpoint/restore (incl.
+failure injection + elastic restore), sharding rules, fused loss."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.data import MNISTLike, TokenStream, TokenStreamConfig
+from repro.dist.sharding import LogicalRules
+from repro.models.common import fused_unembed_xent, softmax_xent, unembed
+from repro.optim import AdamWConfig, SGDConfig, inv_decay, make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# Optimizers.
+# ---------------------------------------------------------------------------
+
+def test_sgd_matches_reference_momentum():
+    cfg = SGDConfig(lr=0.1, momentum=0.9, weight_decay=0.0, schedule="const")
+    opt = make_optimizer(cfg)
+    p = {"w": jnp.array([1.0, -2.0])}
+    s = opt.init(p)
+    g = {"w": jnp.array([0.5, 0.5])}
+    upd, s = opt.update(g, s, p, count=jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-0.05, -0.05], rtol=1e-6)
+    upd, s = opt.update(g, s, p, count=jnp.int32(1))
+    # mu = 0.9*0.5 + 0.5 = 0.95
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-0.095, -0.095], rtol=1e-6)
+
+
+def test_paper_inv_decay_schedule():
+    f = inv_decay(0.01, 1e-4, 0.75)
+    assert abs(float(f(jnp.int32(0))) - 0.01) < 1e-9
+    # lr(10000) = 0.01 * 2^-0.75
+    np.testing.assert_allclose(float(f(jnp.int32(10000))),
+                               0.01 * 2 ** -0.75, rtol=1e-5)
+
+
+def test_adamw_converges_quadratic():
+    opt = make_optimizer(AdamWConfig(lr=0.05, weight_decay=0.0, warmup=0,
+                                     total_steps=300, clip_norm=0))
+    p = {"w": jnp.array([3.0, -2.0])}
+    s = opt.init(p)
+    for i in range(300):
+        g = {"w": 2 * p["w"]}
+        upd, s = opt.update(g, s, p, count=jnp.int32(i))
+        p = jax.tree.map(lambda a, b: a + b, p, upd)
+    assert float(jnp.abs(p["w"]).max()) < 0.05
+
+
+def test_bf16_sr_momentum_unbiased():
+    """bf16 momentum with stochastic rounding keeps tiny updates alive in
+    expectation (Gupta et al.) — the mean over many steps tracks fp32."""
+    cfg = SGDConfig(lr=1.0, momentum=0.0, weight_decay=0.0,
+                    schedule="const", state_dtype="bfloat16")
+    opt = make_optimizer(cfg)
+    p = {"w": jnp.ones((2048,))}
+    s = opt.init(p)
+    g = {"w": jnp.full((2048,), 1e-4)}   # far below bf16 ulp at 1.0... of mu
+    acc = jnp.zeros((2048,))
+    for i in range(64):
+        upd, s2 = opt.update(g, s, p, count=jnp.int32(i))
+        acc = acc + s2["mu"]["w"].astype(jnp.float32)
+    # E[mu] = 1e-4; mean over steps*elements within 10%
+    assert abs(float(acc.mean()) / 64 - 1e-4) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Data.
+# ---------------------------------------------------------------------------
+
+def test_token_stream_deterministic_and_learnable():
+    ts = TokenStream(TokenStreamConfig(vocab=97, seq_len=32, global_batch=4,
+                                       seed=7))
+    b1, b2 = ts.batch(5), ts.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert b1["tokens"].shape == (4, 33)
+    # affine recurrence: majority of transitions satisfy t+1 = a*t+c mod V
+    toks = np.asarray(ts.batch(0)["tokens"])[0]
+    hits = 0
+    for a in range(1, 8):
+        for c0 in range(97):
+            if ((a * toks[:-1] + c0) % 97 == toks[1:]).mean() > 0.8:
+                hits += 1
+    assert hits >= 1
+
+
+def test_mnist_like_shapes_and_classes():
+    d = MNISTLike(batch=16, n_train=256, n_test=64)
+    b = d.train_batch(0)
+    assert b["images"].shape == (16, 28, 28, 1)
+    assert b["images"].min() >= 0.0 and b["images"].max() <= 1.0
+    assert set(np.unique(d.train_y)) <= set(range(10))
+    # prototypes are distinguishable: nearest-prototype classifier beats 60%
+    from repro.data.mnist import _PROTOS
+    flat = d.test_x.reshape(len(d.test_x), -1)
+    pf = _PROTOS.reshape(10, -1)
+    pred = np.argmin(((flat[:, None] - pf[None]) ** 2).sum(-1), axis=1)
+    assert (pred == d.test_y).mean() > 0.6
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing / fault tolerance.
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "s": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 3, t, meta={"cursor": 3})
+    assert latest_step(str(tmp_path)) == 3
+    restored, meta = restore(str(tmp_path), 3, jax.eval_shape(lambda: t))
+    assert meta == {"cursor": 3}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomicity_partial_write(tmp_path):
+    """A stale .tmp dir never shadows a complete checkpoint."""
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    os.makedirs(tmp_path / "step_00000002.tmp")   # simulated crash mid-write
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_shape_mismatch_fails_loud(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    bad = jax.eval_shape(lambda: {"a": jnp.zeros((3, 3)),
+                                  "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+                                  "s": jnp.int32(0)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore(str(tmp_path), 1, bad)
+
+
+def test_async_checkpointer_and_prune(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save(s, _tree())
+    ck.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [2, 3]
+
+
+def test_train_failure_injection_and_resume(tmp_path):
+    """Driver crashes at step 6, checkpoints, resumes, and finishes."""
+    from repro.launch import train as train_mod
+    args = ["--arch", "llama3_2_3b", "--smoke", "--steps", "10",
+            "--batch", "2", "--seq", "16", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "4", "--log-every", "100"]
+    with pytest.raises(SystemExit) as e:
+        train_mod.main(args + ["--fail-at", "6"])
+    assert e.value.code == 17
+    assert latest_step(str(tmp_path)) == 6
+    history = train_mod.main(args + ["--resume"])
+    assert len(history) == 4            # steps 6..9 after resume
+    assert np.isfinite(history[-1]["loss"])
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules.
+# ---------------------------------------------------------------------------
+
+def test_logical_rules_divisibility_fallback():
+    import os as _os
+    # a tiny fake mesh via the public API on 1 device: rules logic is pure
+    rules = LogicalRules()
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (4, 8)
+            size = 32
+
+    # 30 does not divide model=8 -> falls through to replicated
+    assert rules.resolve_dim("tp", 30, FakeMesh, set()) is None
+    assert rules.resolve_dim("tp", 32, FakeMesh, set()) == "model"
+    # batch binds the data axis when divisible
+    assert rules.resolve_dim("batch", 8, FakeMesh, set()) == "data"
+    assert rules.resolve_dim("batch", 2, FakeMesh, set()) is None
+    # one mesh axis never used twice in a tensor
+    taken = set()
+    assert rules.resolve_dim("tp", 32, FakeMesh, taken) == "model"
+    assert rules.resolve_dim("kv", 32, FakeMesh, taken) is None
+
+
+# ---------------------------------------------------------------------------
+# Fused loss.
+# ---------------------------------------------------------------------------
+
+def test_fused_unembed_xent_matches_reference():
+    key = jax.random.key(0)
+    B, S, D, V = 2, 13, 8, 37
+    x = jax.random.normal(key, (B, S, D))
+    emb = {"tok": jax.random.normal(jax.random.fold_in(key, 1), (64, D))}
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (B, S), 0, V)
+    ref = softmax_xent(unembed(x, emb, V), labels)
+    fused = fused_unembed_xent(x, emb, V, labels, chunk=5)
+    np.testing.assert_allclose(float(fused), float(ref), rtol=1e-6)
+    # gradients agree too
+    g1 = jax.grad(lambda x: softmax_xent(unembed(x, emb, V), labels))(x)
+    g2 = jax.grad(lambda x: fused_unembed_xent(x, emb, V, labels, chunk=5))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
