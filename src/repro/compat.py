@@ -1,0 +1,45 @@
+"""JAX version-compat aliases.
+
+The codebase targets the current JAX API surface; this module backfills the
+pieces the pinned jaxlib spells differently so one source tree runs on both:
+
+  * ``jax.shard_map`` — older releases only ship
+    ``jax.experimental.shard_map.shard_map``, whose replication-check kwarg
+    is ``check_rep`` (newer: ``check_vma``).
+  * ``jax.lax.axis_size`` — the classic spelling is ``lax.psum(1, axis)``,
+    which constant-folds to the (static) axis size.
+
+(The Pallas ``pltpu.CompilerParams`` / ``TPUCompilerParams`` rename is
+handled locally in :mod:`repro.kernels.dps_quant`.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+def _shard_map_backport(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                        check_vma=None, check_rep=None, **kwargs):
+    from jax.experimental.shard_map import shard_map
+
+    if f is None:
+        return functools.partial(
+            _shard_map_backport, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs, check_vma=check_vma, check_rep=check_rep,
+            **kwargs)
+    if check_rep is None:
+        check_rep = True if check_vma is None else bool(check_vma)
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_rep, **kwargs)
+
+
+def install() -> None:
+    """Idempotently install the aliases onto the ``jax`` namespace."""
+    try:
+        jax.shard_map  # noqa: B018  — probes the (possibly deprecated) attr
+    except AttributeError:
+        jax.shard_map = _shard_map_backport
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = lambda axis_name: jax.lax.psum(1, axis_name)

@@ -1,0 +1,23 @@
+"""Distribution subsystem: logical sharding rules + compressed collectives.
+
+``repro.dist.sharding`` binds a mesh and :class:`LogicalRules` into a
+context so model code can express placement as *logical* axis names
+("batch", "tp", "fsdp", ...) that resolve against whatever mesh the run
+builds — or no-op entirely on a single device.
+
+``repro.dist.collectives`` moves gradient/statistics payloads over the
+mesh with the paper's fixed-point quantizer applied to the wire format
+(int8 instead of fp32 — see :func:`dps_allreduce_mean`).
+"""
+
+from repro.dist.sharding import (LogicalRules, axis_rules, current_mesh_rules,
+                                 logical_constraint, model_axis_size,
+                                 tree_specs)
+from repro.dist.collectives import (dps_allreduce_mean, psum_stats,
+                                    wire_decode, wire_encode)
+
+__all__ = [
+    "LogicalRules", "axis_rules", "current_mesh_rules", "logical_constraint",
+    "model_axis_size", "tree_specs",
+    "dps_allreduce_mean", "psum_stats", "wire_decode", "wire_encode",
+]

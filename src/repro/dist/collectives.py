@@ -1,0 +1,109 @@
+"""Compressed collectives: the paper's quantizer on the gradient wire.
+
+A fixed-point format ⟨IL, FL⟩ with IL + FL ≤ 8 puts every grid integer in
+[-128, 127], so a quantized payload travels the interconnect as **int8**
+instead of fp32 — 4× fewer bytes on the wire for the two collective legs
+of an all-reduce.  Stochastic rounding (Gupta et al., 2015) keeps both
+legs unbiased, and the same :class:`QuantStats` the DPS controllers
+consume fall out of the encode for free, so a training loop can feed its
+wire-quantization error straight into the paper's precision controller.
+
+All functions here are written for ``shard_map`` bodies: they take an
+``axis_name`` and use raw ``lax`` collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixed_point import (FixedPointFormat, QuantStats,
+                                    ROUND_STOCHASTIC, exp2_int, quantize)
+
+
+def wire_encode(x: jax.Array, fmt: FixedPointFormat, *,
+                key: Optional[jax.Array] = None,
+                bits: Optional[jax.Array] = None,
+                mode: str = ROUND_STOCHASTIC,
+                compute_stats: bool = True
+                ) -> Tuple[jax.Array, Optional[QuantStats]]:
+    """Quantize ``x`` onto the ⟨IL, FL⟩ grid and emit int8 grid integers.
+
+    The caller must ensure ``IL + FL <= 8`` (grid integers outside int8
+    would wrap).  Returns ``(wire int8, stats)`` where stats measure the
+    quantization event exactly as :func:`repro.core.fixed_point.quantize`.
+    """
+    q, stats = quantize(x, fmt, mode=mode, key=key, bits=bits,
+                        compute_stats=compute_stats)
+    # q is on the grid: q * 2^FL is an exact integer in fp32.  The clip
+    # turns an over-wide (IL + FL > 8) format — fmt is traced, so it can't
+    # be rejected statically — into bounded saturation instead of leaving
+    # the float->int8 convert to wrap backend-dependently.
+    wire = jnp.clip(jnp.round(q.astype(jnp.float32) * exp2_int(fmt.fl)),
+                    -128, 127)
+    return wire.astype(jnp.int8), stats
+
+
+def wire_decode(wire: jax.Array, fmt: FixedPointFormat,
+                dtype=jnp.float32) -> jax.Array:
+    """Grid integers (int8) back to values: ``wire * 2^-FL``."""
+    return (wire.astype(jnp.float32) * exp2_int(-fmt.fl)).astype(dtype)
+
+
+def psum_stats(stats: QuantStats, axis_name) -> QuantStats:
+    """Combine per-rank :class:`QuantStats` across ``axis_name``.
+
+    Sums psum; ``max_abs`` pmaxes — matching ``QuantStats.merge``."""
+    summed = jax.lax.psum((stats.count, stats.nonzero, stats.overflow,
+                           stats.abs_err_sum, stats.rel_err_sum,
+                           stats.abs_sum), axis_name)
+    return QuantStats(*summed, max_abs=jax.lax.pmax(stats.max_abs, axis_name))
+
+
+def dps_allreduce_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
+                       key: jax.Array, *, mode: str = ROUND_STOCHASTIC
+                       ) -> Tuple[jax.Array, QuantStats]:
+    """Mean of per-rank ``x`` over ``axis_name`` with an int8 wire format.
+
+    Reduce-scatter / all-gather decomposition, both legs compressed:
+
+      1. each rank quantizes its full local tensor to the ⟨IL, FL⟩ grid and
+         ships int8 grid integers through a tiled ``all_to_all`` — rank j
+         ends up owning every rank's j-th chunk (reduce-scatter leg);
+      2. the owner sums its chunks in fp32, divides by the axis size,
+         re-quantizes the mean chunk and ``all_gather``s int8 back out.
+
+    Total wire bytes ≈ 2·|x|·1 B vs 2·|x|·4 B for an fp32 ring all-reduce.
+    With stochastic rounding each leg's error is < one grid step (2^-FL),
+    so the result is within two grid steps of the exact mean and unbiased.
+
+    Returns ``(mean, stats)``; ``stats`` describe this rank's dispatch-leg
+    quantization of the |x| local elements (so ``psum_stats(stats, axis)``
+    counts each global element exactly once).  Must run inside
+    ``shard_map``; ``key`` may be identical across ranks (it is decorrelated
+    with ``axis_index`` here).
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, idx))
+
+    shape, size = x.shape, x.size
+    chunk = -(-size // n)
+    pad = n * chunk - size
+
+    # leg 1: quantize the local tensor (stats cover exactly these elements),
+    # pad the int8 wire, and scatter chunk j to rank j.
+    wire, stats = wire_encode(x.reshape(-1), fmt, key=k1, mode=mode)
+    wire = jnp.pad(wire, (0, pad)).reshape(n, chunk)
+    wire = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)                       # (n, chunk)
+    part = wire_decode(wire, fmt).sum(axis=0) / n               # (chunk,)
+
+    # leg 2: re-quantize the owned mean chunk, gather int8 everywhere.
+    wire2, _ = wire_encode(part, fmt, key=k2, mode=mode,
+                           compute_stats=False)
+    full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
+    mean = wire_decode(full, fmt, x.dtype)[:size].reshape(shape)
+    return mean, stats

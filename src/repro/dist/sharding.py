@@ -1,0 +1,168 @@
+"""Logical-axis sharding: rules, mesh context, and constraint helpers.
+
+Model code never names mesh axes.  It names *logical* axes — "batch",
+"tp", "fsdp", "expert", ... — and this module resolves them against the
+mesh the current run built (or resolves them to nothing on one device).
+Resolution applies the **divisibility fallback**: a logical axis binds a
+mesh axis only when the tensor dimension divides the mesh-axis size;
+otherwise the dimension stays replicated.  A mesh axis is never used for
+two dimensions of the same tensor.
+
+The binding between a concrete :class:`jax.sharding.Mesh` and a
+:class:`LogicalRules` instance is a dynamic context (:func:`axis_rules`):
+
+    with mesh, axis_rules(mesh, LogicalRules()):
+        jitted = jax.jit(step, in_shardings=..., out_shardings=...)
+        ...
+
+Inside the context, :func:`logical_constraint` emits
+``with_sharding_constraint``; outside any context it is the identity, so
+single-device smoke paths trace the exact same model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# One candidate assignment: a single mesh axis or a tuple of mesh axes that
+# shard a dimension jointly (e.g. batch over ("pod", "data")).
+Axis = Union[str, Tuple[str, ...]]
+
+# Logical-axis -> mesh-axis candidates, tried in order.  First candidate
+# whose axes (a) all exist in the mesh, (b) are not already taken by another
+# dimension of the same tensor, and (c) whose combined size divides the
+# tensor dimension, wins.  Logical names absent from this table ("embed",
+# "seq", "kv_seq", "head_dim", "layers", ...) always replicate.
+DEFAULT_RULES: Tuple[Tuple[str, Tuple[Axis, ...]], ...] = (
+    ("batch", (("pod", "data"), "data")),
+    ("batch2d", (("pod", "data", "model"), ("data", "model"))),
+    ("fsdp", (("pod", "data"), "data")),
+    ("tp", ("model",)),
+    ("tp_seq", ("model",)),
+    ("heads", ("model",)),
+    ("kv", ("model",)),
+    ("expert", ("model",)),
+    ("vocab_out", ("model",)),
+)
+
+
+def _axis_sizes(mesh) -> dict:
+    # not mesh.shape: sharding-rules tests duck-type the mesh with only
+    # ``axis_names`` and ``devices.shape``
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    """Logical-axis resolution table with divisibility fallback."""
+
+    rules: Tuple[Tuple[str, Tuple[Axis, ...]], ...] = DEFAULT_RULES
+
+    def candidates(self, logical: str) -> Tuple[Axis, ...]:
+        for name, cands in self.rules:
+            if name == logical:
+                return cands
+        return ()
+
+    def _resolve(self, logical: Optional[str], dim: int, sizes: dict,
+                 taken: set) -> Optional[Axis]:
+        if logical is None:
+            return None
+        for cand in self.candidates(logical):
+            axes = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a not in sizes or a in taken for a in axes):
+                continue
+            n = math.prod(sizes[a] for a in axes)
+            if n <= 1 or dim % n:
+                continue
+            taken.update(axes)
+            return cand
+        return None
+
+    def resolve_dim(self, logical: Optional[str], dim: int, mesh,
+                    taken: set) -> Optional[Axis]:
+        """Resolve one tensor dimension to a mesh axis (or ``None``).
+
+        ``taken`` is mutated: axes consumed here are unavailable for the
+        remaining dimensions of the same tensor.
+        """
+        return self._resolve(logical, dim, _axis_sizes(mesh), taken)
+
+    def spec(self, logical: Sequence[Optional[str]], shape: Sequence[int],
+             mesh) -> P:
+        """PartitionSpec for a whole tensor (one shared ``taken`` set)."""
+        assert len(logical) == len(shape), (tuple(logical), tuple(shape))
+        sizes, taken = _axis_sizes(mesh), set()
+        return P(*[self._resolve(name, dim, sizes, taken)
+                   for name, dim in zip(logical, shape)])
+
+
+def _is_axes_leaf(x) -> bool:
+    """A logical-axes annotation: None or a tuple of str/None entries."""
+    return x is None or (isinstance(x, tuple)
+                         and all(e is None or isinstance(e, str) for e in x))
+
+
+def tree_specs(logical, struct, mesh: Mesh, rules: LogicalRules):
+    """Resolve a pytree of logical-axes tuples against ``struct``'s shapes.
+
+    ``logical`` mirrors ``struct`` with each array leaf replaced by its
+    logical-axes tuple (see ``models.common.logical_tree``).  Returns the
+    same tree of :class:`NamedSharding`.
+    """
+    return jax.tree.map(
+        lambda log, s: NamedSharding(mesh, rules.spec(log, s.shape, mesh)),
+        logical, struct, is_leaf=_is_axes_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Mesh + rules context.
+# ---------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: LogicalRules):
+    """Bind ``(mesh, rules)`` for :func:`logical_constraint` et al."""
+    _CTX.stack.append((mesh, rules))
+    try:
+        yield mesh, rules
+    finally:
+        _CTX.stack.pop()
+
+
+def current_mesh_rules() -> Tuple[Optional[Mesh], Optional[LogicalRules]]:
+    """The innermost ``axis_rules`` binding, or ``(None, None)``."""
+    if _CTX.stack:
+        return _CTX.stack[-1]
+    return None, None
+
+
+def model_axis_size() -> int:
+    """Size of the mesh's "model" axis in the current context (1 outside)."""
+    mesh, _ = current_mesh_rules()
+    if mesh is None:
+        return 1
+    return int(_axis_sizes(mesh).get("model", 1))
+
+
+def logical_constraint(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` via logical names; identity off-mesh."""
+    mesh, rules = current_mesh_rules()
+    if mesh is None:
+        return x
+    spec = rules.spec(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -41,6 +41,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# JAX renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams; support both so
+# the kernel compiles against the pinned jaxlib and newer releases alike.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 # stats accumulator layout (must match ref.dps_quant_ref)
 N_STATS = 7
 _IDX_COUNT, _IDX_NZ, _IDX_OVER, _IDX_AERR, _IDX_RERR, _IDX_ASUM, _IDX_MAX = range(7)
@@ -166,7 +171,7 @@ def dps_quant_pallas(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
             jax.ShapeDtypeStruct((Mp, Np), x.dtype),
             jax.ShapeDtypeStruct((N_STATS,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,11 @@
+"""Make ``python -m pytest -q`` work from the repo root without an explicit
+``PYTHONPATH=src``: put ``src`` at the front of ``sys.path`` for this test
+session (and for subprocess-based tests, which set PYTHONPATH themselves)."""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
