@@ -1,0 +1,129 @@
+"""Gradient all-reduce wire benchmark: fp32 vs the int8 DPS codec (§dist).
+
+Compares three ways to average a gradient-sized tensor across a host-device
+data mesh:
+
+  * ``fp32``    — ``lax.pmean``: XLA's stock all-reduce,
+  * ``int8_jnp``    — ``dps_allreduce_mean`` with the jnp wire codec,
+  * ``int8_kernel`` — the same collective with the fused Pallas
+    ``dps_quant_wire`` codec (interpret mode on CPU — numerics-identical,
+    walltime is emulation cost only; honest kernel timing needs a TPU).
+
+Reported per variant: ring-model wire bytes parsed from the compiled HLO
+(see ``repro.launch.hlo_stats``) and walltime per step.  The headline
+claim is the ISSUE/ROADMAP one: the int8 two-leg path moves ≤ ~1/4 the
+wire bytes of the fp32 all-reduce.
+
+Run standalone (multi-device): ``PYTHONPATH=src python -m
+benchmarks.bench_collectives`` — the module forces an 8-way host platform
+before JAX initializes.  Under ``benchmarks.run`` (JAX already live with
+one device) it degrades to a note.
+"""
+
+from __future__ import annotations
+
+import os
+
+# only the standalone entry point (python -m benchmarks.bench_collectives)
+# may mutate process-global XLA flags, and only before JAX initializes; a
+# plain import (benchmarks.run, pytest collection) must stay side-effect
+# free.
+if __name__ == "__main__" and "jax" not in __import__("sys").modules:
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import is_quick, save_result
+from repro.core.fixed_point import FixedPointFormat
+from repro.dist.collectives import dps_allreduce_mean
+from repro.launch.hlo_stats import collective_wire_bytes
+
+
+def _time_steps(fn, args, iters: int) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e3
+
+
+def run():
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        out = {"skipped": True,
+               "note": "needs a multi-device mesh; run standalone "
+                       "(python -m benchmarks.bench_collectives)"}
+        save_result("collectives", out)
+        return out
+
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    size = (1 << 20) if is_quick() else (1 << 24)     # fp32 elements per rank
+    iters = 3 if is_quick() else 20
+    fmt = FixedPointFormat.create(3, 5)
+    x = jax.random.normal(jax.random.key(0), (n_dev, size)) * 0.5
+    key = jax.random.key(1)
+
+    def fp32_body(xs, key):
+        return jax.lax.pmean(xs[0], "data")
+
+    def int8_body(backend):
+        def body(xs, key):
+            m, _ = dps_allreduce_mean(xs[0], fmt, "data", key,
+                                      backend=backend)
+            return m
+        return body
+
+    variants = {}
+    results = {}
+    for name, body in (("fp32", fp32_body),
+                       ("int8_jnp", int8_body("jnp")),
+                       ("int8_kernel", int8_body("kernel"))):
+        fn = jax.jit(jax.shard_map(body, mesh=mesh,
+                                   in_specs=(P("data", None), P()),
+                                   out_specs=P(), check_vma=False))
+        hlo = fn.lower(x, key).compile().as_text()
+        wire = collective_wire_bytes(hlo)
+        ms = _time_steps(fn, (x, key), iters)
+        variants[name] = fn
+        results[name] = {"wire_bytes": wire["total"],
+                         "wire_bytes_by_dtype": wire["by_dtype"],
+                         "ms_per_step": ms}
+
+    # the two codecs draw identical rounding bits from the same key, so the
+    # collective's result must be bit-identical across backends.
+    m_jnp = variants["int8_jnp"](x, key)
+    m_ker = variants["int8_kernel"](x, key)
+    codecs_bitexact = bool(jnp.array_equal(m_jnp, m_ker))
+
+    ratio = results["int8_jnp"]["wire_bytes"] / results["fp32"]["wire_bytes"]
+    out = {
+        "n_devices": n_dev,
+        "elements_per_rank": size,
+        "fp32_wire_bytes": results["fp32"]["wire_bytes"],
+        "int8_wire_bytes": results["int8_jnp"]["wire_bytes"],
+        "wire_ratio_int8_over_fp32": ratio,
+        "per_variant": results,
+        "codecs_bitexact": codecs_bitexact,
+        "note": "CPU container: int8_kernel runs the Pallas codec in "
+                "interpret mode (numerics only; walltime not a kernel "
+                "measurement)",
+        "claims": {
+            "int8_wire_le_quarter_fp32": ratio <= 0.26,
+            "codec_backends_bitexact": codecs_bitexact,
+        },
+    }
+    save_result("collectives", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1, default=float))

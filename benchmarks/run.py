@@ -18,14 +18,16 @@ import traceback
 
 
 def main():
-    from benchmarks import (bench_bitwidths, bench_convergence, bench_quant,
-                            bench_rounding, bench_schemes, roofline)
+    from benchmarks import (bench_bitwidths, bench_collectives,
+                            bench_convergence, bench_quant, bench_rounding,
+                            bench_schemes, roofline)
     suites = [
         ("convergence (paper Fig. 4)", bench_convergence.run),
         ("bitwidths (paper Fig. 3)", bench_bitwidths.run),
         ("rounding (Gupta comparison)", bench_rounding.run),
         ("schemes (paper Table 1)", bench_schemes.run),
         ("quantizer hot-spot", bench_quant.run),
+        ("collectives (int8 gradient wire)", bench_collectives.run),
         ("roofline (dry-run artifacts)", roofline.run),
     ]
     failures = []

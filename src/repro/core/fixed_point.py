@@ -143,6 +143,39 @@ def _uniform_from_bits(bits: jax.Array) -> jax.Array:
     return (bits >> (32 - _U_BITS)).astype(jnp.float32) * _U_SCALE
 
 
+def _grid_round(x: jax.Array, fmt_b: FixedPointFormat, mode: str,
+                bits: Optional[jax.Array], key: Optional[jax.Array]):
+    """Shared grid-rounding core of :func:`quantize` / :func:`wire_quantize`.
+
+    Returns ``(xf, over_range, yc, q_int, inv_scale)`` where ``q_int`` is
+    the rounded grid integer clipped to the ⟨IL, FL⟩ range and ``yc`` the
+    range-clipped value in grid units.  One implementation of the paper's
+    Eq. (1)/(2) keeps the emulation and the wire codec bit-identical.
+    """
+    xf = x.astype(jnp.float32)
+    scale, inv_scale, qmin, qmax = grid_bounds(fmt_b)
+
+    y = xf * scale
+    over_range = (y > qmax) | (y < qmin)
+    yc = jnp.clip(y, qmin, qmax)
+
+    if mode == ROUND_STOCHASTIC:
+        if bits is None:
+            if key is None:
+                raise ValueError("stochastic rounding needs `bits` or `key`")
+            bits = jax.random.bits(key, shape=x.shape, dtype=jnp.uint32)
+        u = _uniform_from_bits(bits)
+        q_int = jnp.floor(yc + u)
+    elif mode == ROUND_NEAREST:
+        q_int = jnp.floor(yc + 0.5)
+    else:
+        raise ValueError(f"unknown rounding mode {mode!r}")
+    # floor(qmax + u) can exceed qmax when u -> 1 only if yc == qmax exactly
+    # and u == 1 (excluded); the extra clip guards fp edge cases for free.
+    q_int = jnp.clip(q_int, qmin, qmax)
+    return xf, over_range, yc, q_int, inv_scale
+
+
 def quantize(
     x: jax.Array,
     fmt: FixedPointFormat,
@@ -166,27 +199,7 @@ def quantize(
     responsibilities: R -> IL, E -> FL).
     """
     orig_dtype = x.dtype
-    xf = x.astype(jnp.float32)
-    scale, inv_scale, qmin, qmax = grid_bounds(fmt)
-
-    y = xf * scale
-    over = (y > qmax) | (y < qmin)
-    yc = jnp.clip(y, qmin, qmax)
-
-    if mode == ROUND_STOCHASTIC:
-        if bits is None:
-            if key is None:
-                raise ValueError("stochastic rounding needs `bits` or `key`")
-            bits = jax.random.bits(key, shape=x.shape, dtype=jnp.uint32)
-        u = _uniform_from_bits(bits)
-        q_int = jnp.floor(yc + u)
-    elif mode == ROUND_NEAREST:
-        q_int = jnp.floor(yc + 0.5)
-    else:
-        raise ValueError(f"unknown rounding mode {mode!r}")
-    # floor(qmax + u) can exceed qmax when u -> 1 only if yc == qmax exactly
-    # and u == 1 (excluded); the extra clip guards fp edge cases for free.
-    q_int = jnp.clip(q_int, qmin, qmax)
+    xf, over, yc, q_int, inv_scale = _grid_round(x, fmt, mode, bits, key)
     q = q_int * inv_scale
 
     stats = None
@@ -206,6 +219,79 @@ def quantize(
             max_abs=jnp.max(jnp.abs(xf)) if x.size else jnp.float32(0),
         )
     return q.astype(orig_dtype), stats
+
+
+# Capacity of the int8 wire payload used by repro.dist.collectives: grid
+# integers outside [-128, 127] saturate (and are counted as overflow).
+WIRE_QMIN = -128.0
+WIRE_QMAX = 127.0
+
+
+def wire_quantize(
+    x: jax.Array,
+    fmt: FixedPointFormat,
+    *,
+    mode: str = ROUND_STOCHASTIC,
+    bits: Optional[jax.Array] = None,
+    key: Optional[jax.Array] = None,
+    compute_stats: bool = True,
+    mask: Optional[jax.Array] = None,
+):
+    """Quantize ``x`` onto the ⟨IL, FL⟩ grid and emit int8 *grid integers*.
+
+    The wire payload is ``round(q · 2^FL)`` saturated at int8 capacity
+    ``[-128, 127]``.  For IL + FL ≤ 8 the grid fits the wire exactly and
+    the result is bit-identical to :func:`quantize` followed by the
+    integer conversion; for over-wide formats the saturated elements are
+    counted into ``stats.overflow`` and the reported rounding error is
+    measured against the *decoded wire value*, so a controller consuming
+    these stats sees wire clipping as what it is — overflow.
+
+    Per-group formats: when ``fmt.il``/``fmt.fl`` have shape ``[G]`` (or
+    any non-scalar shape), the leading ``fmt.il.ndim`` dims of ``x`` must
+    equal ``fmt.il.shape``; stats reduce over the remaining trailing dims,
+    so every stats leaf comes out with shape ``fmt.il.shape``.
+
+    ``mask`` (same shape as x, 1/0) excludes padding from the statistics
+    and zeroes the corresponding wire bytes.
+
+    Returns ``(wire int8 with x's shape, stats | None)``.
+    """
+    nd = fmt.il.ndim
+    if x.ndim < nd or x.shape[:nd] != fmt.il.shape:
+        raise ValueError(
+            f"per-group format {fmt.il.shape} needs x leading dims to match, "
+            f"got x shape {x.shape}")
+    bshape = fmt.il.shape + (1,) * (x.ndim - nd)
+    fmt_b = FixedPointFormat(fmt.il.reshape(bshape), fmt.fl.reshape(bshape))
+    axes = tuple(range(nd, x.ndim))
+
+    m = jnp.ones(x.shape, jnp.float32) if mask is None else mask.astype(jnp.float32)
+    xf, over_range, yc, q_int, inv_scale = _grid_round(x, fmt_b, mode, bits, key)
+    sat = jnp.clip(q_int, WIRE_QMIN, WIRE_QMAX)
+    wire = (sat * m).astype(jnp.int8)
+
+    stats = None
+    if compute_stats:
+        over = ((over_range | (q_int != sat)).astype(jnp.float32)) * m
+        x_ref = yc * inv_scale              # range-clipped reference value
+        dec = sat * inv_scale               # what the receiver will decode
+        abs_err = jnp.abs(dec - x_ref) * m
+        abs_ref = jnp.abs(x_ref) * m
+        nz = (abs_ref > 0.0).astype(jnp.float32)
+        rel = jnp.where(abs_ref > 0.0,
+                        abs_err / jnp.where(abs_ref > 0.0, abs_ref, 1.0), 0.0)
+        stats = QuantStats(
+            count=jnp.sum(m, axis=axes),
+            nonzero=jnp.sum(nz, axis=axes),
+            overflow=jnp.sum(over, axis=axes),
+            abs_err_sum=jnp.sum(abs_err, axis=axes),
+            rel_err_sum=jnp.sum(rel, axis=axes),
+            abs_sum=jnp.sum(abs_ref, axis=axes),
+            max_abs=(jnp.max(jnp.abs(xf) * m, axis=axes) if x.size
+                     else jnp.zeros(fmt.il.shape, jnp.float32)),
+        )
+    return wire, stats
 
 
 def quantize_tree(tree, fmt: FixedPointFormat, *, mode: str = ROUND_STOCHASTIC,

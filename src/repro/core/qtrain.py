@@ -22,10 +22,12 @@ Everything here is shape-polymorphic and mesh-agnostic: stats are plain
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import dps as dps_lib
 from repro.core import fixed_point as fxp
@@ -50,6 +52,14 @@ class QuantConfig:
     hyper_grads: dps_lib.DPSHyper = dps_lib.DPSHyper(il_init=8, fl_init=16)
     stat_scope: str = "global"          # "global" | "last_layer"
     master_weights: bool = False        # keep an fp copy (beyond-paper)
+    # Opt-in compressed gradient synchronization: when set (8 to start),
+    # parameter gradients are averaged across the data axis by an explicit
+    # shard_map'ed int8-wire ``dps_allreduce_mean`` instead of GSPMD's
+    # implicit fp32 psum, and the wire-leg QuantStats merge into the grads
+    # DPS stats — so wire quantization error steers ⟨IL, FL⟩.  Needs
+    # ``make_train_step(..., mesh=...)``; degrades to the identity on
+    # single-device meshes.
+    grad_allreduce_bits: Optional[int] = None
 
     def controllers(self):
         mk = dps_lib.make_controller
@@ -187,7 +197,7 @@ class TrainState:
 
 
 def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
-                    accum_steps: int = 1):
+                    accum_steps: int = 1, mesh=None, data_axis: str = "data"):
     """Build a quantized SGD/AdamW train step around ``loss_fn``.
 
     ``loss_fn(params, batch, qctx) -> (loss, aux)`` where ``aux`` is a dict
@@ -199,9 +209,41 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     sequentially with fp32 gradient accumulation — the standard way to fit
     the large train cells in per-device HBM (activation memory scales with
     the microbatch, gradients are one extra params-sized buffer).
+
+    ``qcfg.grad_allreduce_bits`` + ``mesh``: the forward/backward runs
+    inside a ``shard_map`` over ``data_axis`` (params replicated, batch
+    split) and parameter gradients are averaged by the int8-wire
+    :func:`repro.dist.collectives.dps_allreduce_mean` — ~4× fewer gradient
+    wire bytes than the implicit fp32 psum.  The wire format is derived
+    from the grads controller's ⟨IL, FL⟩ (:func:`wire_format`), and the
+    dispatch-leg QuantStats merge into the grads stats the DPS bundle
+    update consumes.  The path engages only on pure data-parallel meshes
+    (every non-``data_axis`` mesh axis of size 1): JAX 0.4's partial-manual
+    ``shard_map`` (``auto=``) miscompiles the mixed GSPMD/manual case, so
+    tensor-parallel meshes fall back to the implicit psum with a warning.
+    On a single-device mesh (or ``mesh=None``) the path degrades to the
+    identity all-reduce: the step is bit-identical to the uncompressed one.
     """
     ctrls = qcfg.controllers()
     rounding = getattr(ctrls["weights"], "rounding", qcfg.rounding)
+
+    wire_bits = qcfg.grad_allreduce_bits
+    if wire_bits is not None and not 2 <= wire_bits <= 8:
+        raise ValueError(f"grad_allreduce_bits={wire_bits}: the wire payload "
+                         "is int8, so only 2..8 grid bits are supported")
+    axis_sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+                  if mesh is not None else {})
+    n_data = int(axis_sizes.get(data_axis, 1))
+    wire_sync = wire_bits is not None and n_data > 1
+    if wire_sync and any(s > 1 for a, s in axis_sizes.items()
+                         if a != data_axis):
+        warnings.warn(
+            "grad_allreduce_bits needs a pure data-parallel mesh (all "
+            f"non-'{data_axis}' axes of size 1); got {axis_sizes}. Falling "
+            "back to the implicit fp32 gradient all-reduce.")
+        wire_sync = False
+    if wire_sync:
+        from repro.dist import collectives  # deferred: dist imports core
 
     def _grads(qparams, batch, fmts, k_a, microbatch_idx):
         qctx = None
@@ -236,6 +278,36 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         grads = jax.tree.map(lambda x, p: (x / n).astype(p.dtype), g, qparams)
         return (loss / n, {"act_stats": stats}), grads
 
+    def _wire_synced_grads(qparams, batch, fmts, k_a, k_r):
+        """Per-shard fwd/bwd + compressed gradient mean over ``data_axis``.
+
+        Runs the whole gradient computation inside a full-manual
+        ``shard_map``: each data shard sees its slice of the batch,
+        computes local gradients, and the tree-wide
+        ``dps_allreduce_mean`` replaces the implicit psum.  Scalars
+        (loss, acc) come back pmean'ed and QuantStats psum'ed, so the
+        caller sees the same global quantities as the GSPMD path.
+        """
+        def body(qparams, batch, fmts, k_a, k_r):
+            rank = jax.lax.axis_index(data_axis)
+            wfmt = collectives.wire_format(fmts["grads"], wire_bits)
+            (loss, aux), grads = _accum_grads(
+                qparams, batch, fmts, jax.random.fold_in(k_a, rank))
+            grads, wstats = collectives.dps_allreduce_mean_tree(
+                grads, wfmt, data_axis, k_r, mode=rounding)
+            wstats = collectives.psum_stats(wstats, data_axis)
+            loss = jax.lax.pmean(loss, data_axis)
+            aux = {k: (collectives.psum_stats(v, data_axis)
+                       if isinstance(v, QuantStats)
+                       else jax.lax.pmean(v, data_axis))
+                   for k, v in aux.items()}
+            return (loss, aux), grads, wstats
+
+        fn = jax.shard_map(body, mesh=mesh,
+                           in_specs=(P(), P(data_axis), P(), P(), P()),
+                           out_specs=(P(), P(), P()), check_vma=False)
+        return fn(qparams, batch, fmts, k_a, k_r)
+
     def train_step(state: TrainState, batch):
         key = jax.random.fold_in(state.rng, state.step)
         k_w, k_g, k_a = jax.random.split(key, 3)
@@ -243,13 +315,26 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
 
         # -- forward/backward in the quantized regime (Alg. 1 lines 9-20) --
         qparams, w_stats = quantize_params(state.params, fmts["weights"], qcfg, k_w)
-        (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
+        if wire_sync:
+            # the wire path derives its own RNG stream instead of widening
+            # the step's key split, so the default path stays bit-identical
+            # to a step built without a mesh.
+            k_r = jax.random.fold_in(key, 0x57495245)  # "WIRE"
+            (loss, aux), grads, wire_stats = _wire_synced_grads(
+                qparams, batch, fmts, k_a, k_r)
+        else:
+            (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
+            wire_stats = None
 
         grads, g_stats = quantize_grads(grads, fmts["grads"], qcfg, k_g)
         if "dlogits_stats" in aux and qcfg.stat_scope == "last_layer":
             g_stats = aux["dlogits_stats"]
         elif "dlogits_stats" in aux:
             g_stats = g_stats.merge(aux["dlogits_stats"])
+        if wire_stats is not None:
+            # wire error feeds the grads controller: a too-coarse wire grid
+            # raises E (-> FL up), wire clipping raises R (-> IL up).
+            g_stats = g_stats.merge(wire_stats)
         if qcfg.stat_scope == "last_layer" and "last_act_stats" in aux:
             a_stats = aux["last_act_stats"]
         else:
@@ -277,9 +362,14 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             "E_a": a_stats.quant_error(), "R_a": a_stats.overflow_rate(),
             "E_g": g_stats.quant_error(), "R_g": g_stats.overflow_rate(),
         }
+        if wire_stats is not None:
+            metrics["E_wire"] = wire_stats.quant_error()
+            metrics["R_wire"] = wire_stats.overflow_rate()
         new_state = TrainState(
             step=state.step + 1, params=new_params, opt_state=opt_state,
             dps=new_dps, rng=state.rng, last_loss=loss.astype(jnp.float32))
         return new_state, metrics
 
+    # introspection for drivers/tests: did the compressed path engage?
+    train_step.wire_sync_active = wire_sync
     return train_step

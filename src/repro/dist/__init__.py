@@ -1,23 +1,65 @@
 """Distribution subsystem: logical sharding rules + compressed collectives.
 
-``repro.dist.sharding`` binds a mesh and :class:`LogicalRules` into a
-context so model code can express placement as *logical* axis names
-("batch", "tp", "fsdp", ...) that resolve against whatever mesh the run
-builds — or no-op entirely on a single device.
+Sharding (``repro.dist.sharding``)
+----------------------------------
+Binds a mesh and :class:`LogicalRules` into a context so model code can
+express placement as *logical* axis names ("batch", "tp", "fsdp", ...)
+that resolve against whatever mesh the run builds — or no-op entirely on
+a single device.
 
-``repro.dist.collectives`` moves gradient/statistics payloads over the
-mesh with the paper's fixed-point quantizer applied to the wire format
-(int8 instead of fp32 — see :func:`dps_allreduce_mean`).
+The int8 wire format (``repro.dist.collectives``)
+-------------------------------------------------
+Gradient payloads travel the interconnect as **grid integers**: a value
+``x`` quantized onto the paper's ⟨IL, FL⟩ fixed-point grid is shipped as
+``round(x · 2^FL)`` in one int8 byte (IL + FL ≤ 8 keeps every grid
+integer in [-128, 127]; statically wider formats are rejected eagerly,
+traced ones saturate with the clipped count folded into
+``QuantStats.overflow``).  The receiver decodes with ``wire · 2^-FL``.
+
+:func:`dps_allreduce_mean` is the collective built on that codec: a
+reduce-scatter (tiled ``all_to_all``) plus ``all_gather``, **both legs
+int8** — ≈ 2·|x| wire bytes against ≈ 8·|x| for an fp32 ring all-reduce.
+Stochastic rounding keeps each leg unbiased and under one grid step of
+error, so the result lands within **two grid steps (2·2^-FL)** of the
+exact mean.  Encoding runs through the fused Pallas ``dps_quant_wire``
+kernel on TPU (one read-x/write-wire HBM pass, stats in SMEM) and plain
+jnp ops elsewhere; formats may be per-group (⟨IL, FL⟩ of shape [G] over
+contiguous chunks of the flattened tensor).
+
+Training integration — ``QuantConfig.grad_allreduce_bits``
+----------------------------------------------------------
+The knob that turns the codec into the gradient hot path::
+
+    from repro.core import qtrain
+    from repro.optim import SGDConfig, make_optimizer
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    qcfg = qtrain.QuantConfig(grad_allreduce_bits=8)
+    step = qtrain.make_train_step(loss_fn, make_optimizer(SGDConfig()),
+                                  qcfg, mesh=mesh)
+    state, metrics = jax.jit(step)(state, batch)   # metrics["E_wire"], ...
+
+The forward/backward runs per data shard under ``shard_map`` and the
+parameter-gradient mean is computed by :func:`dps_allreduce_mean` with a
+wire format derived from the grads controller's ⟨IL, FL⟩
+(:func:`wire_format`).  The dispatch-leg :class:`QuantStats` merge into
+the grads stats the DPS controller consumes, so wire quantization error
+and wire clipping steer next step's ⟨IL, FL⟩ exactly like any other
+quantization event.  Single-device meshes degrade to the identity
+all-reduce; the CLI spelling is ``repro.launch.train
+--grad-allreduce-bits 8``.
 """
 
 from repro.dist.sharding import (LogicalRules, axis_rules, current_mesh_rules,
                                  logical_constraint, model_axis_size,
                                  tree_specs)
-from repro.dist.collectives import (dps_allreduce_mean, psum_stats,
-                                    wire_decode, wire_encode)
+from repro.dist.collectives import (dps_allreduce_mean,
+                                    dps_allreduce_mean_tree, psum_stats,
+                                    wire_decode, wire_encode, wire_format)
 
 __all__ = [
     "LogicalRules", "axis_rules", "current_mesh_rules", "logical_constraint",
     "model_axis_size", "tree_specs",
-    "dps_allreduce_mean", "psum_stats", "wire_decode", "wire_encode",
+    "dps_allreduce_mean", "dps_allreduce_mean_tree", "psum_stats",
+    "wire_decode", "wire_encode", "wire_format",
 ]

@@ -6,10 +6,22 @@ instead of fp32 — 4× fewer bytes on the wire for the two collective legs
 of an all-reduce.  Stochastic rounding (Gupta et al., 2015) keeps both
 legs unbiased, and the same :class:`QuantStats` the DPS controllers
 consume fall out of the encode for free, so a training loop can feed its
-wire-quantization error straight into the paper's precision controller.
+wire-quantization error straight into the paper's precision controller
+(see ``QuantConfig.grad_allreduce_bits`` in :mod:`repro.core.qtrain`).
 
-All functions here are written for ``shard_map`` bodies: they take an
-``axis_name`` and use raw ``lax`` collectives.
+Codec backends: on TPU the encode runs as the fused Pallas
+``dps_quant_wire`` kernel (one read-x/write-wire HBM pass, stats ride in
+SMEM); elsewhere it runs as plain jnp ops.  ``backend="auto"`` picks per
+``jax.default_backend()``; both backends are bit-exact against
+``repro.kernels.ref.dps_quant_wire_ref``.
+
+Formats may be **per-group**: an ⟨IL, FL⟩ of shape ``[G]`` splits the
+flattened tensor into G contiguous chunks (per-layer groups — the grads
+DPS controller state is the natural producer) and returns ``[G]``-shaped
+:class:`QuantStats`.  A scalar format (the default) is the global case.
+
+All collective functions here are written for ``shard_map`` bodies: they
+take an ``axis_name`` and use raw ``lax`` collectives.
 """
 
 from __future__ import annotations
@@ -18,38 +30,156 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.fixed_point import (FixedPointFormat, QuantStats,
-                                    ROUND_STOCHASTIC, exp2_int, quantize)
+                                    ROUND_NEAREST, ROUND_STOCHASTIC, exp2_int,
+                                    wire_quantize)
+
+# int8 wire capacity: IL + FL beyond this saturates grid integers.
+WIRE_BITS = 8
+
+
+def wire_format(fmt: FixedPointFormat, wire_bits: int = WIRE_BITS
+                ) -> FixedPointFormat:
+    """Derive the wire ⟨IL, FL⟩ from a (wider) compute format.
+
+    Keeps the radix position — IL, the overflow guard — and spends the
+    remaining ``wire_bits`` on fraction: ``⟨min(IL, wire_bits - 1),
+    wire_bits - IL⟩``.  A controller that moves IL in response to wire
+    overflow therefore moves the wire radix with it.
+    """
+    if not 2 <= wire_bits <= WIRE_BITS:
+        raise ValueError(f"wire_bits must be in [2, {WIRE_BITS}] for an int8 "
+                         f"payload, got {wire_bits}")
+    il = jnp.clip(jnp.asarray(fmt.il, jnp.int32), 1, wire_bits - 1)
+    return FixedPointFormat(il, (wire_bits - il).astype(jnp.int32))
+
+
+def _concrete_ilfl(fmt: FixedPointFormat):
+    """(il, fl) as numpy when statically known, else None (traced)."""
+    if isinstance(fmt.il, jax.core.Tracer) or isinstance(fmt.fl, jax.core.Tracer):
+        return None
+    return np.asarray(fmt.il), np.asarray(fmt.fl)
+
+
+def _validate_capacity(fmt: FixedPointFormat):
+    """Raise eagerly on statically over-wide formats (IL + FL > 8).
+
+    Traced formats can't be rejected at trace time; for those the encode
+    saturates at ±127 and counts the saturated elements into
+    ``QuantStats.overflow`` so the controller sees the wire clipping.
+    """
+    conc = _concrete_ilfl(fmt)
+    if conc is None:
+        return
+    il, fl = conc
+    total = il.astype(np.int64) + fl.astype(np.int64)
+    if np.any(total > WIRE_BITS):
+        raise ValueError(
+            f"⟨IL, FL⟩ = ⟨{il}, {fl}⟩ exceeds the int8 wire: IL + FL = "
+            f"{total} > {WIRE_BITS}.  Grid integers would saturate at ±127; "
+            f"derive a wire format with wire_format(fmt) instead.")
+
+
+def _group_layout(size: int, groups: int) -> Tuple[int, int]:
+    """(chunk, pad) splitting ``size`` elements into ``groups`` chunks."""
+    chunk = -(-size // groups)
+    return chunk, groups * chunk - size
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("kernel", "jnp"):
+        raise ValueError(f"unknown wire codec backend {backend!r}; "
+                         "expected 'auto', 'kernel' or 'jnp'")
+    return backend
 
 
 def wire_encode(x: jax.Array, fmt: FixedPointFormat, *,
                 key: Optional[jax.Array] = None,
                 bits: Optional[jax.Array] = None,
                 mode: str = ROUND_STOCHASTIC,
-                compute_stats: bool = True
+                compute_stats: bool = True,
+                backend: str = "auto",
                 ) -> Tuple[jax.Array, Optional[QuantStats]]:
     """Quantize ``x`` onto the ⟨IL, FL⟩ grid and emit int8 grid integers.
 
-    The caller must ensure ``IL + FL <= 8`` (grid integers outside int8
-    would wrap).  Returns ``(wire int8, stats)`` where stats measure the
-    quantization event exactly as :func:`repro.core.fixed_point.quantize`.
+    Statically over-wide formats (IL + FL > 8) raise eagerly; traced
+    formats saturate at ±127 with the saturated count folded into
+    ``stats.overflow``.  ``bits`` (uint32, x.size elements) supplies the
+    rounding noise deterministically; ``key`` draws it.
+
+    Per-group formats (``fmt.il.shape == [G]``): the flattened ``x`` is
+    split into G contiguous chunks of ``ceil(x.size / G)`` elements (the
+    last chunk may be short) and chunk g is encoded with ⟨IL[g], FL[g]⟩;
+    stats come back with shape ``[G]``.  The round-trip is element-exact
+    with G independent global-format calls on the chunks (given the same
+    ``bits`` slices).  Grouped encode always uses the jnp codec — the
+    fused kernel takes one SMEM-prefetched format per call.
+
+    ``backend``: "auto" (fused Pallas kernel on TPU, jnp elsewhere),
+    "kernel", or "jnp".  Both are bit-exact against
+    ``repro.kernels.ref.dps_quant_wire_ref``.
+
+    Returns ``(wire int8 with x's shape, stats)``.
     """
-    q, stats = quantize(x, fmt, mode=mode, key=key, bits=bits,
-                        compute_stats=compute_stats)
-    # q is on the grid: q * 2^FL is an exact integer in fp32.  The clip
-    # turns an over-wide (IL + FL > 8) format — fmt is traced, so it can't
-    # be rejected statically — into bounded saturation instead of leaving
-    # the float->int8 convert to wrap backend-dependently.
-    wire = jnp.clip(jnp.round(q.astype(jnp.float32) * exp2_int(fmt.fl)),
-                    -128, 127)
-    return wire.astype(jnp.int8), stats
+    if mode not in (ROUND_STOCHASTIC, ROUND_NEAREST):
+        # reject here so both backends fail identically (the kernel path
+        # folds mode into a boolean and would otherwise silently round
+        # to nearest)
+        raise ValueError(f"unknown rounding mode {mode!r}")
+    _validate_capacity(fmt)
+    if fmt.il.ndim == 0:
+        if _resolve_backend(backend) == "kernel":
+            from repro.kernels import ops
+            stochastic = mode == ROUND_STOCHASTIC
+            b = bits.reshape(-1) if bits is not None else None
+            wire, stats = ops.dps_quantize_wire(x, fmt, key=key, bits=b,
+                                                stochastic=stochastic)
+            return wire, (stats if compute_stats else None)
+        if bits is not None:
+            bits = bits.reshape(x.shape)
+        return wire_quantize(x, fmt, mode=mode, key=key, bits=bits,
+                             compute_stats=compute_stats)
+
+    # --- per-group path (jnp codec) ---
+    if fmt.il.ndim != 1:
+        raise ValueError(f"per-group formats must be rank-1 [G], got shape "
+                         f"{fmt.il.shape}")
+    groups = fmt.il.shape[0]
+    n = x.size
+    chunk, pad = _group_layout(n, groups)
+    if bits is None and mode == ROUND_STOCHASTIC:
+        if key is None:
+            raise ValueError("stochastic rounding needs `bits` or `key`")
+        bits = jax.random.bits(key, shape=(n,), dtype=jnp.uint32)
+    xg = jnp.pad(x.reshape(-1), (0, pad)).reshape(groups, chunk)
+    bg = (jnp.pad(bits.reshape(-1), (0, pad)).reshape(groups, chunk)
+          if bits is not None else None)
+    mask = jnp.pad(jnp.ones((n,), jnp.float32), (0, pad)).reshape(groups, chunk)
+    wire, stats = wire_quantize(xg, fmt, mode=mode, bits=bg,
+                                compute_stats=compute_stats, mask=mask)
+    return wire.reshape(-1)[:n].reshape(x.shape), stats
 
 
 def wire_decode(wire: jax.Array, fmt: FixedPointFormat,
                 dtype=jnp.float32) -> jax.Array:
-    """Grid integers (int8) back to values: ``wire * 2^-FL``."""
-    return (wire.astype(jnp.float32) * exp2_int(-fmt.fl)).astype(dtype)
+    """Grid integers (int8) back to values: ``wire * 2^-FL``.
+
+    Accepts the same scalar or ``[G]``-shaped formats as
+    :func:`wire_encode` (grouped decode uses the matching contiguous-chunk
+    layout over the flattened payload).
+    """
+    if fmt.il.ndim == 0:
+        return (wire.astype(jnp.float32) * exp2_int(-fmt.fl)).astype(dtype)
+    groups = fmt.il.shape[0]
+    n = wire.size
+    chunk, pad = _group_layout(n, groups)
+    wg = jnp.pad(wire.reshape(-1), (0, pad)).reshape(groups, chunk)
+    dec = wg.astype(jnp.float32) * exp2_int(-fmt.fl)[:, None]
+    return dec.reshape(-1)[:n].reshape(wire.shape).astype(dtype)
 
 
 def psum_stats(stats: QuantStats, axis_name) -> QuantStats:
@@ -63,7 +193,8 @@ def psum_stats(stats: QuantStats, axis_name) -> QuantStats:
 
 
 def dps_allreduce_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
-                       key: jax.Array, *, mode: str = ROUND_STOCHASTIC
+                       key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
+                       backend: str = "auto",
                        ) -> Tuple[jax.Array, QuantStats]:
     """Mean of per-rank ``x`` over ``axis_name`` with an int8 wire format.
 
@@ -79,23 +210,31 @@ def dps_allreduce_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
     With stochastic rounding each leg's error is < one grid step (2^-FL),
     so the result is within two grid steps of the exact mean and unbiased.
 
+    ``backend`` selects the wire codec (see :func:`wire_encode`).
+
     Returns ``(mean, stats)``; ``stats`` describe this rank's dispatch-leg
     quantization of the |x| local elements (so ``psum_stats(stats, axis)``
     counts each global element exactly once).  Must run inside
     ``shard_map``; ``key`` may be identical across ranks (it is decorrelated
     with ``axis_index`` here).
     """
+    if fmt.il.ndim != 0:
+        # the two legs chunk the flattened tensor per-rank, which does not
+        # line up with the [G] contiguous-group layout; group-aligned
+        # chunking is a ROADMAP item.
+        raise ValueError("dps_allreduce_mean takes a global (scalar) format;"
+                         " per-group formats are encode/decode-only for now")
     n = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     k1, k2 = jax.random.split(jax.random.fold_in(key, idx))
 
     shape, size = x.shape, x.size
-    chunk = -(-size // n)
-    pad = n * chunk - size
+    chunk, pad = _group_layout(size, n)
 
     # leg 1: quantize the local tensor (stats cover exactly these elements),
     # pad the int8 wire, and scatter chunk j to rank j.
-    wire, stats = wire_encode(x.reshape(-1), fmt, key=k1, mode=mode)
+    wire, stats = wire_encode(x.reshape(-1), fmt, key=k1, mode=mode,
+                              backend=backend)
     wire = jnp.pad(wire, (0, pad)).reshape(n, chunk)
     wire = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0,
                               tiled=True)                       # (n, chunk)
@@ -103,7 +242,33 @@ def dps_allreduce_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
 
     # leg 2: re-quantize the owned mean chunk, gather int8 everywhere.
     wire2, _ = wire_encode(part, fmt, key=k2, mode=mode,
-                           compute_stats=False)
+                           compute_stats=False, backend=backend)
     full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
     mean = wire_decode(full, fmt, x.dtype)[:size].reshape(shape)
     return mean, stats
+
+
+def dps_allreduce_mean_tree(tree, fmt: FixedPointFormat, axis_name,
+                            key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
+                            backend: str = "auto"):
+    """:func:`dps_allreduce_mean` over a whole pytree in ONE collective pair.
+
+    Leaves are flattened and concatenated into a single fp32 buffer before
+    the collective, so the per-step gradient sync costs one all_to_all +
+    one all_gather regardless of how many (possibly tiny) leaves the tree
+    has — not 2·L launches each padded to the axis size.  Returns
+    ``(mean_tree, stats)`` with every leaf cast back to its own dtype.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return tree, QuantStats.zero(fmt.il.shape)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    mean, stats = dps_allreduce_mean(flat, fmt, axis_name, key, mode=mode,
+                                     backend=backend)
+    out, off = [], 0
+    for leaf in leaves:
+        out.append(mean[off:off + leaf.size].reshape(leaf.shape)
+                   .astype(leaf.dtype))
+        off += leaf.size
+    return jax.tree_util.tree_unflatten(treedef, out), stats

@@ -13,6 +13,15 @@ whole event into one kernel:
                   accumulator that lives across the grid (dimension_semantics
                   = 'arbitrary' keeps the accumulation race-free).
 
+Two tensor-output flavours share one kernel body:
+
+  * ``dps_quant_pallas`` — emulation: write the dequantized grid value q.
+  * ``dps_quant_wire_pallas`` — the collectives' **int8 wire**: write the
+    grid integer ``round(q·2^FL)`` saturated at [-128, 127] (saturation
+    counts into the overflow stat).  The int8 tile is 4× smaller than the
+    input tile, so the wire payload costs one read-x/write-wire pass and
+    never exists as an fp32 intermediate in HBM.
+
 Two variants of the stochastic-rounding noise source:
 
   * ``use_onchip_prng=False`` (default; CPU-validatable): uniform bits enter
@@ -59,9 +68,10 @@ def _kernel(fmt_ref,            # SMEM: (3,) int32 [il, fl, seed]
             x_ref,              # VMEM: (bm, bn) input tile
             bits_ref,           # VMEM: (bm, bn) uint32 tile (portable path)
             mask_ref,           # VMEM: (bm, bn) float32 1/0 validity tile
-            q_ref,              # VMEM out: (bm, bn)
+            q_ref,              # VMEM out: (bm, bn); int8 wire if emit_wire
             stats_ref,          # SMEM out: (N_STATS,) float32 accumulator
-            *, stochastic: bool, use_onchip_prng: bool):
+            *, stochastic: bool, use_onchip_prng: bool,
+            emit_wire: bool = False):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -99,8 +109,19 @@ def _kernel(fmt_ref,            # SMEM: (3,) int32 [il, fl, seed]
     else:
         q_int = jnp.floor(yc + 0.5)
     q_int = jnp.clip(q_int, qmin, qmax)
-    q = q_int * inv_scale
-    q_ref[...] = (q * m).astype(q_ref.dtype)
+    if emit_wire:
+        # wire variant: emit int8 grid integers, saturated at int8 capacity.
+        # Saturated elements count as overflow (wire clipping IS overflow
+        # from the receiver's point of view) and the error is measured
+        # against the decoded wire value, matching fixed_point.wire_quantize.
+        sat = jnp.clip(q_int, -128.0, 127.0)
+        over = (((y > qmax) | (y < qmin) | (q_int != sat))
+                .astype(jnp.float32) * m)
+        q_ref[...] = (sat * m).astype(q_ref.dtype)
+        q = sat * inv_scale
+    else:
+        q = q_int * inv_scale
+        q_ref[...] = (q * m).astype(q_ref.dtype)
 
     # --- on-tile stats reduction (rounding error vs clipped reference) ---
     x_ref_val = yc * inv_scale
@@ -123,19 +144,10 @@ def _kernel(fmt_ref,            # SMEM: (3,) int32 [il, fl, seed]
     stats_ref[_IDX_MAX] = jnp.maximum(stats_ref[_IDX_MAX], jnp.max(jnp.abs(x) * m))
 
 
-@functools.partial(jax.jit, static_argnames=("stochastic", "use_onchip_prng",
-                                             "block", "interpret"))
-def dps_quant_pallas(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
-                     mask: jax.Array | None = None,
-                     *, stochastic: bool = True, use_onchip_prng: bool = False,
-                     block=DEFAULT_BLOCK, interpret: bool = True):
-    """Run the fused kernel on a 2-D fp32/bf16 array.
-
-    ``fmt3`` = int32[3] = [il, fl, seed].  ``bits`` uint32, same shape as x
-    (ignored when ``use_onchip_prng``).  ``mask`` (float32 1/0, same shape)
-    marks elements that belong in the statistics; grid padding added here is
-    masked automatically.  Returns ``(q, stats_vec[7])``.
-    """
+def _pallas_quant(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
+                  mask: jax.Array | None,
+                  *, stochastic: bool, use_onchip_prng: bool,
+                  block, interpret: bool, emit_wire: bool):
     M, N = x.shape
     if mask is None:
         mask = jnp.ones((M, N), jnp.float32)
@@ -149,8 +161,10 @@ def dps_quant_pallas(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
     mask = jnp.pad(mask, ((0, Mp - M), (0, Np - N)))
 
     grid = (Mp // bm, Np // bn)
+    out_dtype = jnp.int8 if emit_wire else x.dtype
     kernel = functools.partial(_kernel, stochastic=stochastic,
-                               use_onchip_prng=use_onchip_prng)
+                               use_onchip_prng=use_onchip_prng,
+                               emit_wire=emit_wire)
     q, stats = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -168,7 +182,7 @@ def dps_quant_pallas(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
             ],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+            jax.ShapeDtypeStruct((Mp, Np), out_dtype),
             jax.ShapeDtypeStruct((N_STATS,), jnp.float32),
         ],
         compiler_params=_CompilerParams(
@@ -177,3 +191,43 @@ def dps_quant_pallas(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
         interpret=interpret,
     )(fmt3, xp, bp, mask)
     return q[:M, :N], stats
+
+
+@functools.partial(jax.jit, static_argnames=("stochastic", "use_onchip_prng",
+                                             "block", "interpret"))
+def dps_quant_pallas(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
+                     mask: jax.Array | None = None,
+                     *, stochastic: bool = True, use_onchip_prng: bool = False,
+                     block=DEFAULT_BLOCK, interpret: bool = True):
+    """Run the fused kernel on a 2-D fp32/bf16 array.
+
+    ``fmt3`` = int32[3] = [il, fl, seed].  ``bits`` uint32, same shape as x
+    (ignored when ``use_onchip_prng``).  ``mask`` (float32 1/0, same shape)
+    marks elements that belong in the statistics; grid padding added here is
+    masked automatically.  Returns ``(q, stats_vec[7])``.
+    """
+    return _pallas_quant(x, fmt3, bits, mask, stochastic=stochastic,
+                         use_onchip_prng=use_onchip_prng, block=block,
+                         interpret=interpret, emit_wire=False)
+
+
+@functools.partial(jax.jit, static_argnames=("stochastic", "use_onchip_prng",
+                                             "block", "interpret"))
+def dps_quant_wire_pallas(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
+                          mask: jax.Array | None = None,
+                          *, stochastic: bool = True,
+                          use_onchip_prng: bool = False,
+                          block=DEFAULT_BLOCK, interpret: bool = True):
+    """Fused quantize → **int8 wire** + stats in one read-x/write-wire pass.
+
+    Same contract as :func:`dps_quant_pallas` except the tensor output is
+    the int8 grid-integer wire payload (what the collectives ship), with
+    int8 saturation folded into the overflow count.  Bit-exact against
+    ``ref.dps_quant_wire_ref`` on the portable (bits-operand) path.  The
+    int8 tile is 4× smaller than the fp32 input tile, so HBM traffic is
+    read-x + write-wire (+ bits on the portable path) — the wire payload
+    never exists as an fp32 intermediate in HBM.
+    """
+    return _pallas_quant(x, fmt3, bits, mask, stochastic=stochastic,
+                         use_onchip_prng=use_onchip_prng, block=block,
+                         interpret=interpret, emit_wire=True)

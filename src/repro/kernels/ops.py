@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.fixed_point import FixedPointFormat, QuantStats
 from repro.kernels import ref as ref_lib
-from repro.kernels.dps_quant import dps_quant_pallas
+from repro.kernels.dps_quant import dps_quant_pallas, dps_quant_wire_pallas
 
 _ON_TPU = None
 
@@ -28,17 +28,9 @@ def _on_tpu() -> bool:
     return _ON_TPU
 
 
-def dps_quantize(x: jax.Array, fmt: FixedPointFormat, *,
-                 key: jax.Array | None = None,
-                 bits: jax.Array | None = None,
-                 stochastic: bool = True,
-                 onchip_prng: bool = False,
-                 block=None, interpret: bool | None = None):
-    """Fused quantize+stats for an arbitrary-rank tensor.
-
-    Returns ``(q, QuantStats)``.  Exactly matches
-    ``repro.kernels.ref.dps_quant_ref`` for the bits-operand path.
-    """
+def _fold_and_call(pallas_fn, x, fmt, *, key, bits, stochastic, onchip_prng,
+                   block, interpret):
+    """Shared any-rank → 2-D tiling adapter around a dps_quant kernel."""
     if interpret is None:
         interpret = not _on_tpu()
     orig_shape = x.shape
@@ -74,7 +66,42 @@ def dps_quantize(x: jax.Array, fmt: FixedPointFormat, *,
                   interpret=interpret)
     if block is not None:
         kwargs["block"] = block
-    q2, vec = dps_quant_pallas(x2, fmt3, bits2, mask2, **kwargs)
+    q2, vec = pallas_fn(x2, fmt3, bits2, mask2, **kwargs)
 
     q = q2.reshape(-1)[:n].reshape(orig_shape)
     return q, ref_lib.stats_from_vector(vec)
+
+
+def dps_quantize(x: jax.Array, fmt: FixedPointFormat, *,
+                 key: jax.Array | None = None,
+                 bits: jax.Array | None = None,
+                 stochastic: bool = True,
+                 onchip_prng: bool = False,
+                 block=None, interpret: bool | None = None):
+    """Fused quantize+stats for an arbitrary-rank tensor.
+
+    Returns ``(q, QuantStats)``.  Exactly matches
+    ``repro.kernels.ref.dps_quant_ref`` for the bits-operand path.
+    """
+    return _fold_and_call(dps_quant_pallas, x, fmt, key=key, bits=bits,
+                          stochastic=stochastic, onchip_prng=onchip_prng,
+                          block=block, interpret=interpret)
+
+
+def dps_quantize_wire(x: jax.Array, fmt: FixedPointFormat, *,
+                      key: jax.Array | None = None,
+                      bits: jax.Array | None = None,
+                      stochastic: bool = True,
+                      onchip_prng: bool = False,
+                      block=None, interpret: bool | None = None):
+    """Fused quantize → int8 wire payload + stats for an arbitrary-rank
+    tensor, in one read-x/write-wire HBM pass.
+
+    Returns ``(wire int8 with x's shape, QuantStats)``.  Exactly matches
+    ``repro.kernels.ref.dps_quant_wire_ref`` (and therefore the jnp codec in
+    ``repro.dist.collectives``) for the bits-operand path; int8 saturation
+    of over-wide formats is counted into ``stats.overflow``.
+    """
+    return _fold_and_call(dps_quant_wire_pallas, x, fmt, key=key, bits=bits,
+                          stochastic=stochastic, onchip_prng=onchip_prng,
+                          block=block, interpret=interpret)

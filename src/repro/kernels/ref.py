@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.fixed_point import (FixedPointFormat, QuantStats, quantize,
-                                    ROUND_STOCHASTIC)
+                                    wire_quantize, ROUND_STOCHASTIC)
 
 
 def dps_quant_ref(x: jax.Array, il: jax.Array, fl: jax.Array,
@@ -28,6 +28,20 @@ def dps_quant_ref(x: jax.Array, il: jax.Array, fl: jax.Array,
     vec = jnp.stack([s.count, s.nonzero, s.overflow, s.abs_err_sum,
                      s.rel_err_sum, s.abs_sum, s.max_abs])
     return q, vec
+
+
+def dps_quant_wire_ref(x: jax.Array, il: jax.Array, fl: jax.Array,
+                       bits: jax.Array, mode: str = ROUND_STOCHASTIC):
+    """Oracle for the fused *wire* kernel: ``(wire int8, stats_vector[7])``.
+
+    Same accumulator layout as :func:`dps_quant_ref`, but the tensor output
+    is the int8 grid-integer payload and int8 saturation is folded into the
+    overflow count (see :func:`repro.core.fixed_point.wire_quantize`)."""
+    fmt = FixedPointFormat(jnp.asarray(il, jnp.int32), jnp.asarray(fl, jnp.int32))
+    wire, s = wire_quantize(x, fmt, mode=mode, bits=bits, compute_stats=True)
+    vec = jnp.stack([s.count, s.nonzero, s.overflow, s.abs_err_sum,
+                     s.rel_err_sum, s.abs_sum, s.max_abs])
+    return wire, vec
 
 
 def stats_from_vector(vec: jax.Array) -> QuantStats:

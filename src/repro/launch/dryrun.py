@@ -27,7 +27,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 from typing import Any, Dict
@@ -47,46 +46,9 @@ from repro.optim import SGDConfig, make_optimizer
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
-COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                  "collective-permute")
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
-_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
-                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
-                "u16": 2}
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Per-collective-type bytes from optimized HLO (max operand/result
-    shape per instruction — the ring-transfer approximation)."""
-    out = {k: 0.0 for k in COLLECTIVE_OPS}
-    counts = {k: 0 for k in COLLECTIVE_OPS}
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", s)
-        if not m:
-            continue
-        rest = m.group(1)
-        op = None
-        for cand in COLLECTIVE_OPS:
-            if re.search(rf"\b{cand}(-start|-done)?\(", rest):
-                op = cand
-                break
-        if op is None or f"{op}-done" in rest:
-            continue
-        sizes = [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(rest)]
-        if sizes:
-            out[op] += max(sizes)
-            counts[op] += 1
-    out["counts"] = counts
-    return out
+# HLO collective accounting lives in hlo_stats (shared with benchmarks and
+# the multi-device tests); re-exported here for historical importers.
+from repro.launch.hlo_stats import COLLECTIVE_OPS, collective_bytes  # noqa: E402
 
 
 def _mesh_and_rules(multi_pod: bool):
@@ -94,18 +56,23 @@ def _mesh_and_rules(multi_pod: bool):
     return mesh, LogicalRules()
 
 
-def _qcfg() -> qtrain.QuantConfig:
-    return qtrain.QuantConfig(enabled=True, controller="paper")
+def _qcfg(grad_allreduce_bits=None) -> qtrain.QuantConfig:
+    return qtrain.QuantConfig(enabled=True, controller="paper",
+                              grad_allreduce_bits=grad_allreduce_bits)
 
 
 def _optimizer():
     return make_optimizer(SGDConfig())
 
 
-def _compile_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
-    qcfg = _qcfg()
+def _compile_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                   grad_allreduce_bits=None):
+    qcfg = _qcfg(grad_allreduce_bits)
     opt = _optimizer()
-    step = specs_lib.build_train_step(cfg, qcfg, opt)
+    # On the production meshes (model axis > 1) the compressed all-reduce
+    # falls back to the implicit psum with a warning — qtrain only engages
+    # the shard_map path on pure data-parallel meshes.
+    step = specs_lib.build_train_step(cfg, qcfg, opt, mesh=mesh)
     state_sh = specs_lib.train_state_shardings(cfg, mesh, rules, opt, qcfg)
     batch_sh = specs_lib.train_batch_shardings(cfg, shape, mesh, rules)
     astate = specs_lib.abstract_train_state(cfg, opt, qcfg)
@@ -226,14 +193,18 @@ def _extract(compiled) -> Dict[str, Any]:
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             probes: bool = True, overrides: Dict[str, Any] = None
-             ) -> Dict[str, Any]:
+             probes: bool = True, overrides: Dict[str, Any] = None,
+             grad_allreduce_bits: int = None) -> Dict[str, Any]:
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     shape = SHAPES[shape_name]
     mesh, rules = _mesh_and_rules(multi_pod)
     compile_fn = KIND_COMPILERS[shape.kind]
+    if shape.kind == "train" and grad_allreduce_bits is not None:
+        import functools
+        compile_fn = functools.partial(
+            _compile_train, grad_allreduce_bits=grad_allreduce_bits)
 
     t0 = time.time()
     lowered, compiled = compile_fn(cfg, shape, mesh, rules)
@@ -271,6 +242,11 @@ def main():
                     default="single")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--grad-allreduce-bits", type=int, default=None,
+                    help="compile train cells with the compressed int8 "
+                         "gradient all-reduce requested (engages on pure "
+                         "data-parallel meshes; falls back with a warning "
+                         "when the mesh has a model axis)")
     ap.add_argument("--out", default=RESULTS_DIR)
     args = ap.parse_args()
 
@@ -300,7 +276,8 @@ def main():
             # probes (FLOP correction) only for the single-pod roofline
             # table; the multi-pod pass proves the "pod" axis shards
             stats = run_cell(arch, sh, mp,
-                             probes=not args.no_probes and not mp)
+                             probes=not args.no_probes and not mp,
+                             grad_allreduce_bits=args.grad_allreduce_bits)
             with open(out_path, "w") as f:
                 json.dump(stats, f, indent=1)
             print(f"  ok: flops={stats['flops']:.3e} "

@@ -1,0 +1,90 @@
+"""Optimized-HLO collective accounting shared by dryrun, benchmarks, tests.
+
+Two views of the same parse:
+
+* :func:`collective_bytes` — per-collective-type max-operand bytes (the
+  dry-run's historical metric; kept for the roofline JSON schema).
+* :func:`collective_wire_bytes` — per-(op, dtype) **wire** bytes under the
+  ring-transfer model: an all-reduce moves ~2× its payload over the
+  interconnect (reduce-scatter + all-gather phases), the other collectives
+  ~1×.  This is the honest way to compare an fp32 gradient all-reduce
+  against the compressed int8 two-leg path (all-to-all + all-gather), and
+  what the ``grad_allreduce_bits`` regression test asserts on.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2}
+
+# interconnect traversals per payload byte under the ring model
+_RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _collective_instructions(hlo_text: str):
+    """Yield ``(op, [(dtype, bytes), ...])`` per collective instruction."""
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", s)
+        if not m:
+            continue
+        rest = m.group(1)
+        op = None
+        for cand in COLLECTIVE_OPS:
+            if re.search(rf"\b{cand}(-start|-done)?\(", rest):
+                op = cand
+                break
+        if op is None or f"{op}-done" in rest:
+            continue
+        sizes = [(d, _shape_bytes(d, dims))
+                 for d, dims in _SHAPE_RE.findall(rest)]
+        if sizes:
+            yield op, sizes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-type bytes from optimized HLO (max operand/result
+    shape per instruction — the ring-transfer approximation)."""
+    out = {k: 0.0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for op, sizes in _collective_instructions(hlo_text):
+        out[op] += max(b for _, b in sizes)
+        counts[op] += 1
+    out["counts"] = counts
+    return out
+
+
+def collective_wire_bytes(hlo_text: str) -> Dict[str, object]:
+    """Ring-model wire bytes per (op, dtype) plus totals.
+
+    Returns ``{"by_op_dtype": {op: {dtype: bytes}}, "total": float,
+    "by_dtype": {dtype: bytes}}`` where every instruction contributes
+    ``ring_factor(op) × max-shape bytes`` under its max-shape dtype.
+    """
+    by_op: Dict[str, Dict[str, float]] = {}
+    by_dtype: Dict[str, float] = {}
+    total = 0.0
+    for op, sizes in _collective_instructions(hlo_text):
+        dtype, nbytes = max(sizes, key=lambda t: t[1])
+        wire = _RING_FACTOR[op] * nbytes
+        by_op.setdefault(op, {})
+        by_op[op][dtype] = by_op[op].get(dtype, 0.0) + wire
+        by_dtype[dtype] = by_dtype.get(dtype, 0.0) + wire
+        total += wire
+    return {"by_op_dtype": by_op, "by_dtype": by_dtype, "total": total}

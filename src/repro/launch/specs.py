@@ -159,11 +159,15 @@ def prefill_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def build_train_step(cfg: ModelConfig, qcfg: qtrain.QuantConfig, optimizer,
-                     accum_steps: Optional[int] = None):
+                     accum_steps: Optional[int] = None, mesh: Optional[Mesh] = None):
+    """Train step for one arch.  ``mesh`` is only needed when
+    ``qcfg.grad_allreduce_bits`` is set: the compressed gradient all-reduce
+    runs as an explicit ``shard_map`` over the mesh's data axis (see
+    :func:`repro.core.qtrain.make_train_step`)."""
     mod = registry(cfg.family)
     accum = cfg.train_accum if accum_steps is None else accum_steps
     return qtrain.make_train_step(mod.loss_fn(cfg), optimizer, qcfg,
-                                  accum_steps=accum)
+                                  accum_steps=accum, mesh=mesh)
 
 
 def build_decode_step(cfg: ModelConfig):

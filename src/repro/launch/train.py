@@ -30,7 +30,7 @@ from repro.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.configs.base import get_config, smoke as smoke_cfg
 from repro.core import qtrain
 from repro.data import TokenStream, TokenStreamConfig
-from repro.dist.sharding import LogicalRules, axis_rules
+from repro.dist.sharding import DEFAULT_RULES, LogicalRules, axis_rules
 from repro.launch import specs as specs_lib
 from repro.models import registry
 from repro.models.common import init_params
@@ -39,9 +39,16 @@ from repro.optim import AdamWConfig, SGDConfig, make_optimizer
 
 def build(cfg, qcfg, opt_cfg, mesh=None):
     opt = make_optimizer(opt_cfg)
-    step_fn = specs_lib.build_train_step(cfg, qcfg, opt)
+    step_fn = specs_lib.build_train_step(cfg, qcfg, opt, mesh=mesh)
     if mesh is not None:
-        rules = LogicalRules()
+        if getattr(step_fn, "wire_sync_active", False):
+            # compressed gradient all-reduce = classic data parallelism:
+            # params replicate across the data axis (the shard_map pins them
+            # to P()); binding "fsdp" would re-gather every leaf per step.
+            rules = LogicalRules(rules=tuple(
+                r for r in DEFAULT_RULES if r[0] != "fsdp"))
+        else:
+            rules = LogicalRules()
         state_sh = specs_lib.train_state_shardings(cfg, mesh, rules, opt, qcfg)
         jitted = jax.jit(step_fn, in_shardings=(state_sh, None),
                          out_shardings=(state_sh, None), donate_argnums=(0,))
@@ -61,6 +68,11 @@ def main(argv=None):
     ap.add_argument("--controller", default="paper",
                     help="DPS controller (paper|courbariaux|na_mukhopadhyay|"
                          "static|flexpoint) or 'off'")
+    ap.add_argument("--grad-allreduce-bits", type=int, default=None,
+                    help="compress the gradient all-reduce to an int8 wire "
+                         "of this many grid bits (2-8); builds a data-axis "
+                         "mesh over all local devices and feeds the wire "
+                         "QuantStats into the grads DPS controller")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -76,10 +88,17 @@ def main(argv=None):
         cfg = smoke_cfg(cfg)
     qcfg = qtrain.QuantConfig(enabled=args.controller != "off",
                               controller=args.controller
-                              if args.controller != "off" else "paper")
+                              if args.controller != "off" else "paper",
+                              grad_allreduce_bits=args.grad_allreduce_bits)
     opt_cfg = (AdamWConfig(total_steps=args.steps) if args.optimizer == "adamw"
                else SGDConfig())
-    opt, jitted = build(cfg, qcfg, opt_cfg)
+    mesh = None
+    if args.grad_allreduce_bits is not None and jax.device_count() > 1:
+        # a pure data-parallel mesh over every local device — the regime the
+        # compressed all-reduce targets.  On one device qtrain degrades the
+        # path to the identity, so no mesh is built.
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    opt, jitted = build(cfg, qcfg, opt_cfg, mesh=mesh)
 
     mod = registry(cfg.family)
     data = TokenStream(TokenStreamConfig(vocab=cfg.vocab, seq_len=args.seq,

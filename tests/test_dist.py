@@ -114,6 +114,118 @@ def test_wire_codec_roundtrip_int8_cpu():
     np.testing.assert_array_equal(np.asarray(w2), np.asarray(grid))
 
 
+def test_wire_encode_rejects_overwide_static_format():
+    """IL + FL > 8 with concrete widths must fail eagerly, not saturate."""
+    import jax
+    import pytest
+    from repro.core.fixed_point import FixedPointFormat
+    from repro.dist.collectives import wire_encode
+
+    x = jax.numpy.ones((16,))
+    with pytest.raises(ValueError, match="exceeds the int8 wire"):
+        wire_encode(x, FixedPointFormat.create(4, 8), key=jax.random.key(0))
+
+
+def test_wire_encode_traced_overwide_counts_saturation_as_overflow():
+    """Traced formats can't be rejected statically: saturated elements must
+    surface in QuantStats.overflow so the controller sees wire clipping."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.fixed_point import FixedPointFormat
+    from repro.dist.collectives import wire_encode
+
+    def enc(x, il, fl):
+        wire, s = wire_encode(x, FixedPointFormat(il, fl), mode="nearest")
+        return wire, s.overflow
+
+    # <4,8>: x=0.9 -> grid integer 230 > 127 -> saturates, every element
+    wire, over = jax.jit(enc)(jnp.full((64,), 0.9), jnp.int32(4), jnp.int32(8))
+    assert float(over) == 64.0
+    assert int(jnp.abs(wire.astype(jnp.int32)).max()) == 127
+    # same format, in-range x: no saturation, no overflow
+    _, over2 = jax.jit(enc)(jnp.full((64,), 0.25), jnp.int32(4), jnp.int32(8))
+    assert float(over2) == 0.0
+
+
+def test_wire_encode_per_group_matches_independent_calls():
+    """[G]-shaped ⟨IL, FL⟩ == G independent global-format calls on the
+    contiguous chunks, element- and stat-exact — including the
+    non-divisible last-group boundary (1000 = 2·334 + 332)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.fixed_point import FixedPointFormat
+    from repro.dist.collectives import wire_decode, wire_encode
+
+    n, il, fl = 1000, [3, 2, 4], [5, 6, 4]
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (n,)) * 0.7
+    bits = jax.random.bits(jax.random.fold_in(key, 1), shape=(n,),
+                           dtype=jnp.uint32)
+    fmt_g = FixedPointFormat(jnp.array(il, jnp.int32),
+                             jnp.array(fl, jnp.int32))
+
+    for mode, b in (("stochastic", bits), ("nearest", None)):
+        wg, sg = wire_encode(x, fmt_g, bits=b, mode=mode)
+        assert wg.shape == x.shape and wg.dtype == jnp.int8
+        dec_g = wire_decode(wg, fmt_g)
+        chunk = -(-n // 3)
+        for g in range(3):
+            lo, hi = g * chunk, min((g + 1) * chunk, n)
+            f = FixedPointFormat.create(il[g], fl[g])
+            wi, si = wire_encode(x[lo:hi], f,
+                                 bits=b[lo:hi] if b is not None else None,
+                                 mode=mode)
+            np.testing.assert_array_equal(np.asarray(wg[lo:hi]),
+                                          np.asarray(wi))
+            for field in ("count", "nonzero", "overflow", "abs_err_sum",
+                          "rel_err_sum", "abs_sum", "max_abs"):
+                np.testing.assert_allclose(
+                    float(getattr(sg, field)[g]), float(getattr(si, field)),
+                    rtol=1e-6, atol=1e-5)
+            np.testing.assert_array_equal(np.asarray(dec_g[lo:hi]),
+                                          np.asarray(wire_decode(wi, f)))
+
+
+def test_wire_encode_rejects_unknown_mode_on_both_backends():
+    """A typo'd rounding mode must raise identically on the jnp and the
+    kernel backend (the kernel folds mode into a boolean internally and
+    would otherwise silently round to nearest)."""
+    import jax
+    import pytest
+    from repro.core.fixed_point import FixedPointFormat
+    from repro.dist.collectives import wire_encode
+
+    x = jax.numpy.ones((16,))
+    fmt = FixedPointFormat.create(3, 5)
+    for backend in ("jnp", "kernel"):
+        with pytest.raises(ValueError, match="rounding mode"):
+            wire_encode(x, fmt, key=jax.random.key(0), mode="stochastc",
+                        backend=backend)
+
+
+def test_wire_codec_backends_bitexact():
+    """The fused-kernel codec (interpret mode here) and the jnp codec draw
+    the same rounding bits from the same key, so wire and stats agree."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.fixed_point import FixedPointFormat
+    from repro.dist.collectives import wire_encode
+
+    fmt = FixedPointFormat.create(3, 5)
+    key = jax.random.key(9)
+    x = jax.random.normal(key, (2000,)) * 0.5
+    w_j, s_j = wire_encode(x, fmt, key=jax.random.fold_in(key, 1),
+                           backend="jnp")
+    w_k, s_k = wire_encode(x, fmt, key=jax.random.fold_in(key, 1),
+                           backend="kernel")
+    np.testing.assert_array_equal(np.asarray(w_j), np.asarray(w_k))
+    for field in ("count", "overflow", "abs_err_sum", "max_abs"):
+        np.testing.assert_allclose(float(getattr(s_j, field)),
+                                   float(getattr(s_k, field)), rtol=1e-6)
+
+
 def test_dps_allreduce_mean_single_device_inprocess():
     """dps_allreduce_mean end-to-end on this process's 1-device mesh: the
     degenerate collectives still run and the result lands on the wire grid."""

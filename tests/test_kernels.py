@@ -7,8 +7,9 @@ import pytest
 
 from repro.core.fixed_point import FixedPointFormat
 from repro.kernels import ops
-from repro.kernels.dps_quant import dps_quant_pallas
-from repro.kernels.ref import dps_quant_ref, stats_from_vector
+from repro.kernels.dps_quant import dps_quant_pallas, dps_quant_wire_pallas
+from repro.kernels.ref import (dps_quant_ref, dps_quant_wire_ref,
+                               stats_from_vector)
 
 SHAPES_2D = [(8, 128), (256, 1024), (300, 1100), (1, 7), (513, 129)]
 FMTS = [(4, 2), (8, 8), (2, 14), (6, 10), (16, 9)]
@@ -105,6 +106,92 @@ def test_kernel_dynamic_fmt_single_compile():
     e1 = float(jnp.abs(q1 - x).sum())
     e2 = float(jnp.abs(q2 - x).sum())
     assert e2 < e1
+
+
+# ---------------------------------------------------------------------------
+# Fused wire variant (int8 grid-integer payload).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(256, 1024), (300, 1100), (17, 33)])
+@pytest.mark.parametrize("ilfl", [(3, 5), (2, 6)])
+def test_wire_kernel_matches_ref_stochastic(shape, ilfl):
+    il, fl = ilfl
+    key = jax.random.key(il * 131 + fl)
+    x = jax.random.normal(key, shape) * (2.0 ** (il - 1))
+    bits = _bits(jax.random.fold_in(key, 1), shape)
+    fmt3 = jnp.array([il, fl, 0], jnp.int32)
+    w_k, vec_k = dps_quant_wire_pallas(x, fmt3, bits)
+    w_r, vec_r = dps_quant_wire_ref(x, il, fl, bits)
+    assert w_k.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    np.testing.assert_allclose(np.asarray(vec_k), np.asarray(vec_r),
+                               rtol=1e-6, atol=1e-4)
+
+
+def test_wire_kernel_saturates_overwide_format_into_overflow():
+    """IL + FL > 8: grid integers beyond ±127 saturate and count as
+    overflow — bit-exact between kernel and reference."""
+    key = jax.random.key(7)
+    x = jax.random.normal(key, (256, 1024)) * 4.0   # y = x·2^8 well past 127
+    bits = _bits(jax.random.fold_in(key, 1), (256, 1024))
+    fmt3 = jnp.array([8, 8, 0], jnp.int32)
+    w_k, vec_k = dps_quant_wire_pallas(x, fmt3, bits)
+    w_r, vec_r = dps_quant_wire_ref(x, 8, 8, bits)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    np.testing.assert_allclose(np.asarray(vec_k), np.asarray(vec_r),
+                               rtol=1e-6, atol=1e-4)
+    assert float(vec_k[2]) > 0.0                     # saturation counted
+    w = np.asarray(w_k, np.int32)
+    assert w.max() == 127 and w.min() == -128        # pinned at capacity
+
+
+@pytest.mark.parametrize("shape", [(17,), (3, 5, 7), (1500,)])
+def test_ops_wire_matches_ref_and_masks_padding(shape):
+    key = jax.random.key(13)
+    x = jax.random.normal(key, shape) * 2
+    n = x.size
+    bits = jax.random.bits(jax.random.fold_in(key, 5), shape=(n,),
+                           dtype=jnp.uint32)
+    fmt = FixedPointFormat.create(3, 5)
+    w_o, s_o = ops.dps_quantize_wire(x, fmt, bits=bits)
+    w_r, vec_r = dps_quant_wire_ref(x.reshape(-1), 3, 5, bits)
+    assert w_o.shape == shape and w_o.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(w_o.reshape(-1)),
+                                  np.asarray(w_r))
+    assert float(s_o.count) == n                     # padding masked out
+    np.testing.assert_allclose(float(s_o.abs_err_sum), float(vec_r[3]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_wire_kernel_dynamic_fmt_single_compile():
+    """⟨IL, FL⟩ rides the SMEM scalar prefetch: per-step format changes
+    reuse the compiled wire kernel."""
+    key = jax.random.key(4)
+    x = jax.random.normal(key, (256, 1024))
+    bits = _bits(key, (256, 1024))
+    f = jax.jit(lambda x, fmt3, bits: dps_quant_wire_pallas(x, fmt3, bits))
+    w1, _ = f(x, jnp.array([3, 5, 0], jnp.int32), bits)
+    w2, _ = f(x, jnp.array([2, 6, 0], jnp.int32), bits)
+    assert f._cache_size() == 1          # one executable, two formats
+    # and each wire matches its format's reference encode
+    for w, (il, fl) in ((w1, (3, 5)), (w2, (2, 6))):
+        w_r, _ = dps_quant_wire_ref(x, il, fl, bits)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(w_r))
+
+
+def test_onchip_prng_wire_variant_traces():
+    """The TPU PRNG wire path must trace with int8 outputs (see
+    test_onchip_prng_variant_traces for why eval_shape is the CPU-side
+    bound)."""
+    x = jax.ShapeDtypeStruct((256, 1024), jnp.float32)
+    fmt3 = jax.ShapeDtypeStruct((3,), jnp.int32)
+    bits = jax.ShapeDtypeStruct((256, 1024), jnp.uint32)
+    w, stats = jax.eval_shape(
+        lambda x, fmt3, bits: dps_quant_wire_pallas(
+            x, fmt3, bits, use_onchip_prng=True, interpret=False),
+        x, fmt3, bits)
+    assert w.shape == (256, 1024) and w.dtype == jnp.int8
+    assert stats.shape == (7,) and stats.dtype == jnp.float32
 
 
 def test_onchip_prng_variant_traces():

@@ -1,0 +1,188 @@
+"""Multi-device regression tests for the compressed gradient all-reduce
+(``QuantConfig.grad_allreduce_bits``): run in a subprocess under
+``xla_force_host_platform_device_count=8`` like tests/test_dist.py.
+
+Covers the ISSUE-2 acceptance criteria:
+  (a) ``grad_allreduce_bits=None`` with a mesh matches the meshless step
+      bit-exactly (the flag is a pure opt-in),
+  (b) ``=8`` keeps the synced gradient within two wire grid steps of the
+      fp32 mean (asserted through the SGD update) and trains MNIST-tiny
+      with the same loss trend,
+  (c) the grads DPS controller's ⟨IL, FL⟩ trajectory visibly responds to
+      the wire QuantStats,
+  (d) the int8 path moves ≤ ~1/4 the gradient wire bytes of the fp32
+      all-reduce (ring model, parsed from compiled HLO).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_grad_allreduce_off_matches_meshless_step_bitexact():
+    run_with_devices("""
+        import jax, jax.numpy as jnp
+        from repro.core import qtrain
+        from repro.models import lenet
+        from repro.optim import SGDConfig, make_optimizer
+
+        mesh = jax.make_mesh((8,), ("data",))
+        qcfg = qtrain.QuantConfig(enabled=True)   # grad_allreduce_bits=None
+        opt = make_optimizer(SGDConfig())
+        params = lenet.init(jax.random.key(0))
+        state = qtrain.TrainState.create(params, opt.init(params), qcfg,
+                                         jax.random.key(1))
+        batch = {"images": jax.random.normal(jax.random.key(2), (64, 28, 28, 1)),
+                 "labels": jax.random.randint(jax.random.key(3), (64,), 0, 10)}
+
+        step_ref = qtrain.make_train_step(lenet.loss_fn, opt, qcfg)
+        step_mesh = qtrain.make_train_step(lenet.loss_fn, opt, qcfg, mesh=mesh)
+        assert not step_mesh.wire_sync_active
+        s1, m1 = jax.jit(step_ref)(state, batch)
+        s2, m2 = jax.jit(step_mesh)(state, batch)
+        assert float(m1["loss"]) == float(m2["loss"])
+        for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+            assert jnp.array_equal(a, b), "bits=None must be a pure no-op"
+        print("OK")
+    """)
+
+
+def test_grad_allreduce8_update_within_two_grid_steps():
+    """fp32 training + int8 wire only: the one perturbation is the
+    all-reduce codec, so a single SGD update must stay within
+    lr · 2·2^-FL of the uncompressed step, element-wise."""
+    run_with_devices("""
+        import jax, jax.numpy as jnp
+        from repro.core import qtrain
+        from repro.core.dps import DPSHyper
+        from repro.models import lenet
+        from repro.optim import SGDConfig, make_optimizer
+
+        mesh = jax.make_mesh((8,), ("data",))
+        # wire format derives from the grads controller: static <6,2>
+        # (range +-32 covers the per-shard init grads, max |g| ~ 26)
+        hg = DPSHyper(il_init=6, fl_init=2)
+        base = dict(enabled=False, controller="static", hyper_grads=hg)
+        qcfg0 = qtrain.QuantConfig(**base)
+        qcfg8 = qtrain.QuantConfig(**base, grad_allreduce_bits=8)
+        opt = make_optimizer(SGDConfig())
+        params = lenet.init(jax.random.key(0))
+        state = qtrain.TrainState.create(params, opt.init(params), qcfg0,
+                                         jax.random.key(1))
+        batch = {"images": jax.random.normal(jax.random.key(2),
+                                             (64, 28, 28, 1)) * 0.5,
+                 "labels": jax.random.randint(jax.random.key(3), (64,), 0, 10)}
+
+        s0, _ = jax.jit(qtrain.make_train_step(lenet.loss_fn, opt, qcfg0))(
+            state, batch)
+        step8 = qtrain.make_train_step(lenet.loss_fn, opt, qcfg8, mesh=mesh)
+        assert step8.wire_sync_active
+        s8, m8 = jax.jit(step8)(state, batch)
+
+        assert float(m8["R_wire"]) == 0.0, "grads must fit the <6,2> range"
+        assert float(m8["E_wire"]) > 0.0, "wire stats must be live"
+        lr = 0.01                       # SGDConfig default, momentum step 1
+        bound = lr * 2 * 2.0 ** -2 + 1e-6
+        diff = max(float(jnp.abs(a - b).max()) for a, b in
+                   zip(jax.tree.leaves(s0.params), jax.tree.leaves(s8.params)))
+        assert diff <= bound, (diff, bound)
+        print("OK diff", diff, "bound", bound)
+    """)
+
+
+def test_grad_allreduce8_trend_controller_and_wire_bytes():
+    run_with_devices("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import qtrain
+        from repro.core.dps import DPSHyper
+        from repro.data import MNISTLike
+        from repro.launch.hlo_stats import collective_wire_bytes
+        from repro.models import lenet
+        from repro.optim import SGDConfig, make_optimizer
+
+        mesh = jax.make_mesh((8,), ("data",))
+        # e_max=5% lets the uncompressed run equilibrate FL below its
+        # start (grads at grid 2^-12 round with ~1% relative error), while
+        # the int8 wire (grid 2^-4) rounds most gradient elements to zero
+        # -> E ~ 1 >> e_max -> FL must climb.  That asymmetry is the
+        # "controller responds to wire stats" signal under test.  r_max
+        # is loosened to 0.5%: with the paper's hair-trigger 0.01% every
+        # stray clip ratchets IL up and the derived wire grid (2^-(8-IL))
+        # coarsens until training destabilizes — a real dynamic of wire-
+        # fed DPS worth pinning, but not the subject of this test.
+        hg = DPSHyper(il_init=4, fl_init=12, e_max=5e-2, r_max=5e-3)
+        qcfg0 = qtrain.QuantConfig(enabled=True, hyper_grads=hg)
+        qcfg8 = qtrain.QuantConfig(enabled=True, hyper_grads=hg,
+                                   grad_allreduce_bits=8)
+        opt = make_optimizer(SGDConfig())
+        data = MNISTLike(batch=64, seed=0)
+        params = lenet.init(jax.random.key(0))
+
+        repl = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()),
+            qtrain.TrainState.create(params, opt.init(params), qcfg0,
+                                     jax.random.key(1)))
+        batch_sh = {"images": NamedSharding(mesh, P("data")),
+                    "labels": NamedSharding(mesh, P("data"))}
+
+        def run(qcfg, steps=40):
+            step = qtrain.make_train_step(lenet.loss_fn, opt, qcfg, mesh=mesh)
+            jitted = jax.jit(step, in_shardings=(repl, batch_sh),
+                             out_shardings=None)
+            state = qtrain.TrainState.create(params, opt.init(params), qcfg,
+                                             jax.random.key(1))
+            hist = {"loss": [], "fl_g": [], "il_g": []}
+            for i in range(steps):
+                state, m = jitted(state, data.train_batch(i))
+                hist["loss"].append(float(m["loss"]))
+                hist["fl_g"].append(float(m["fl_g"]))
+                hist["il_g"].append(float(m["il_g"]))
+            hlo = jitted.lower(state, data.train_batch(0)).compile().as_text()
+            return hist, hlo
+
+        h0, hlo0 = run(qcfg0)
+        h8, hlo8 = run(qcfg8)
+
+        # (b) same loss trend: both converge on MNIST-tiny
+        assert np.isfinite(h8["loss"]).all()
+        assert np.mean(h8["loss"][-10:]) < 0.6 * h8["loss"][0], h8["loss"]
+        assert np.mean(h0["loss"][-10:]) < 0.6 * h0["loss"][0], h0["loss"]
+        gap = abs(np.mean(h8["loss"][-10:]) - np.mean(h0["loss"][-10:]))
+        assert gap < 0.8, (gap, h0["loss"][-10:], h8["loss"][-10:])
+
+        # (c) the grads controller visibly responds to wire stats: the
+        # coarse int8 wire keeps E above threshold, so FL climbs instead
+        # of decaying toward fl_min as in the uncompressed run.
+        assert h8["fl_g"] != h0["fl_g"], "wire stats had no effect on <IL,FL>"
+        assert h8["fl_g"][-1] > h0["fl_g"][-1], (h8["fl_g"], h0["fl_g"])
+
+        # (d) wire bytes: int8 grad sync <= ~1/4 of the fp32 all-reduce
+        w0 = collective_wire_bytes(hlo0)
+        w8 = collective_wire_bytes(hlo8)
+        f32_ar = w0["by_op_dtype"].get("all-reduce", {}).get("f32", 0.0)
+        s8_wire = w8["by_dtype"].get("s8", 0.0)
+        n_params = sum(p.size for p in jax.tree.leaves(params))
+        assert f32_ar >= 8 * n_params * 0.9, (f32_ar, n_params)
+        assert s8_wire > 0.0
+        assert s8_wire <= 0.26 * f32_ar, (s8_wire, f32_ar)
+        # residual f32 all-reduces in the compressed step are stats/loss
+        # scalars, not gradient payloads
+        f32_ar8 = w8["by_op_dtype"].get("all-reduce", {}).get("f32", 0.0)
+        assert f32_ar8 < 0.01 * f32_ar, (f32_ar8, f32_ar)
+        print("OK", s8_wire / f32_ar)
+    """)
