@@ -20,7 +20,7 @@ import traceback
 def main():
     from benchmarks import (bench_bitwidths, bench_collectives,
                             bench_convergence, bench_quant, bench_rounding,
-                            bench_schemes, roofline)
+                            bench_schemes, bench_zero, roofline)
     suites = [
         ("convergence (paper Fig. 4)", bench_convergence.run),
         ("bitwidths (paper Fig. 3)", bench_bitwidths.run),
@@ -28,6 +28,7 @@ def main():
         ("schemes (paper Table 1)", bench_schemes.run),
         ("quantizer hot-spot", bench_quant.run),
         ("collectives (int8 gradient wire)", bench_collectives.run),
+        ("ZeRO-1 (sharded optimizer + int8 wire)", bench_zero.run),
         ("roofline (dry-run artifacts)", roofline.run),
     ]
     failures = []

@@ -60,6 +60,18 @@ class QuantConfig:
     # ``make_train_step(..., mesh=...)``; degrades to the identity on
     # single-device meshes.
     grad_allreduce_bits: Optional[int] = None
+    # ZeRO-1: shard the optimizer state across the data axis into this many
+    # slices (must equal the mesh's data-axis size when it engages).  The
+    # param tree is flattened into the padded 1-D ZeroPartitioner layout so
+    # non-divisible leaves still shard; each rank steps its slice locally
+    # and the updated parameter shards are all-gathered back.  Combined
+    # with ``grad_allreduce_bits``, both collective legs (reduce-scatter of
+    # grads, all-gather of params) ride the int8 wire.  Optimizer state is
+    # created with :func:`zero_opt_state` instead of ``optimizer.init``.
+    # Engages on pure data-parallel meshes only (same JAX partial-manual
+    # shard_map constraint as the compressed all-reduce); degrades to the
+    # replicated step on a single device or without a mesh.
+    zero_opt_shards: Optional[int] = None
 
     def controllers(self):
         mk = dps_lib.make_controller
@@ -196,6 +208,42 @@ class TrainState:
         )
 
 
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return (dict(zip(mesh.axis_names, mesh.devices.shape))
+            if mesh is not None else {})
+
+
+def zero_opt_engaged(qcfg: QuantConfig, mesh, data_axis: str = "data") -> bool:
+    """Does the ZeRO-1 sharded-optimizer path engage for (qcfg, mesh)?
+
+    Mirrors :func:`make_train_step`'s own checks so launch code and specs
+    can size/shard the optimizer state consistently with the step that will
+    actually run: requires ``zero_opt_shards`` set, a mesh whose
+    ``data_axis`` is larger than 1, and a pure data-parallel mesh (every
+    other axis of size 1 — the partial-manual shard_map constraint).
+    """
+    if qcfg.zero_opt_shards is None:
+        return False
+    sizes = _mesh_axis_sizes(mesh)
+    if int(sizes.get(data_axis, 1)) <= 1:
+        return False
+    return not any(s > 1 for a, s in sizes.items() if a != data_axis)
+
+
+def zero_opt_state(optimizer, params, n_shards: int):
+    """ZeRO-1 optimizer state: one flat padded vector per state tensor.
+
+    Returns ``optimizer.init_shard`` over the :class:`ZeroPartitioner`
+    flat layout — a GLOBAL ``[padded_size]`` array per state leaf, meant to
+    be placed with ``NamedSharding(mesh, P("data"))`` so each rank holds
+    ``1/n_shards`` of it (see ``launch.specs.train_state_shardings``).
+    """
+    from repro.dist.sharding import ZeroPartitioner  # deferred: dist imports core
+    part = ZeroPartitioner.create(params, n_shards)
+    flat = jax.eval_shape(lambda t: part.flatten(t), params)
+    return optimizer.init_shard(flat)
+
+
 def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                     accum_steps: int = 1, mesh=None, data_axis: str = "data"):
     """Build a quantized SGD/AdamW train step around ``loss_fn``.
@@ -223,6 +271,24 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     tensor-parallel meshes fall back to the implicit psum with a warning.
     On a single-device mesh (or ``mesh=None``) the path degrades to the
     identity all-reduce: the step is bit-identical to the uncompressed one.
+
+    ``qcfg.zero_opt_shards`` + ``mesh``: ZeRO-1.  The optimizer state lives
+    as flat ``P(data_axis)``-sharded slices of the ZeroPartitioner layout
+    (1/n of the replicated bytes per device) and the optimizer steps one
+    slice per rank inside the shard_map.  Without ``grad_allreduce_bits``
+    the gradients come from the ordinary (implicit-psum) backward pass and
+    the update legs are exact, so the step is **bit-exact** with the
+    replicated one — fp32 state, ``clip_norm`` off (the cross-shard norm
+    psum sums in a different order than the per-leaf norm), and optimizer
+    scalars whose products are f32-exact (e.g. power-of-two
+    lr/momentum/weight_decay; otherwise layout-dependent FMA contraction
+    may drift the state by 1 ULP/step, see ``SGD._leaf``); with it, one
+    fused shard_map body runs
+    per-shard fwd/bwd → int8 ``dps_reduce_scatter_mean`` → local optimizer
+    → int8 ``dps_allgather_params``, the grads-leg wire stats feed the
+    grads controller and the params-leg wire stats feed the weights
+    controller.  Same pure-data-parallel constraint and single-device
+    degradation as above.
     """
     ctrls = qcfg.controllers()
     rounding = getattr(ctrls["weights"], "rounding", qcfg.rounding)
@@ -231,8 +297,7 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     if wire_bits is not None and not 2 <= wire_bits <= 8:
         raise ValueError(f"grad_allreduce_bits={wire_bits}: the wire payload "
                          "is int8, so only 2..8 grid bits are supported")
-    axis_sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
-                  if mesh is not None else {})
+    axis_sizes = _mesh_axis_sizes(mesh)
     n_data = int(axis_sizes.get(data_axis, 1))
     wire_sync = wire_bits is not None and n_data > 1
     if wire_sync and any(s > 1 for a, s in axis_sizes.items()
@@ -242,8 +307,26 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             f"non-'{data_axis}' axes of size 1); got {axis_sizes}. Falling "
             "back to the implicit fp32 gradient all-reduce.")
         wire_sync = False
-    if wire_sync:
+
+    zero_opt = qcfg.zero_opt_shards is not None and n_data > 1
+    if zero_opt and not zero_opt_engaged(qcfg, mesh, data_axis):
+        warnings.warn(
+            "zero_opt_shards needs a pure data-parallel mesh (all "
+            f"non-'{data_axis}' axes of size 1); got {axis_sizes}. Falling "
+            "back to the replicated optimizer state.")
+        zero_opt = False
+    if zero_opt and qcfg.zero_opt_shards != n_data:
+        raise ValueError(
+            f"zero_opt_shards={qcfg.zero_opt_shards} must equal the mesh's "
+            f"'{data_axis}' axis size ({n_data}): the optimizer state shards "
+            "over that axis")
+    if zero_opt and not hasattr(optimizer, "update_shard"):
+        raise TypeError(f"{type(optimizer).__name__} has no shard-local "
+                        "update_shard/init_shard interface; ZeRO-1 needs it")
+    if wire_sync or zero_opt:
         from repro.dist import collectives  # deferred: dist imports core
+    if zero_opt:
+        from repro.dist.sharding import ZeroPartitioner
 
     def _grads(qparams, batch, fmts, k_a, microbatch_idx):
         qctx = None
@@ -308,6 +391,95 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                            out_specs=(P(), P(), P()), check_vma=False)
         return fn(qparams, batch, fmts, k_a, k_r)
 
+    def _zero_wire_step(part, full_quant, qparams, pflat, opt_state, batch,
+                        fmts, count, k_a, k_g, k_r):
+        """Fused ZeRO-1 step body: per-shard fwd/bwd, int8 reduce-scatter of
+        the flat gradients, shard-local optimizer, all-gather of the
+        updated parameter shards.
+
+        ``full_quant`` (static) says every param leaf passes the policy's
+        ``param_predicate``: the flat layout erases leaf identity, so the
+        params all-gather rides the int8 wire — and the optimizer-input
+        gradient quantization applies to the flat slice — only when no
+        leaf is policy-excluded and no fp master copy is promised;
+        otherwise the params leg gathers fp32 (gradient wire compression
+        still applies to every leaf, exactly like ``dps_allreduce_mean``).
+
+        Returns ``((loss, aux), new_flat_params, new_opt_state, g_wire,
+        p_wire, g_stats)`` where ``g_wire``/``p_wire`` are the psum'ed
+        QuantStats of the two wire legs (gradients / parameters) and
+        ``g_stats`` the optimizer-input gradient quantization stats.
+        """
+        def body(qparams, pflat, opt_local, batch, fmts, count, k_a, k_g, k_r):
+            rank = jax.lax.axis_index(data_axis)
+            gfmt = collectives.wire_format(fmts["grads"], wire_bits)
+            wfmt = collectives.wire_format(fmts["weights"], wire_bits)
+            k1, k2 = jax.random.split(k_r)
+            (loss, aux), grads = _accum_grads(
+                qparams, batch, fmts, jax.random.fold_in(k_a, rank))
+            gshard, g_wire = collectives.dps_reduce_scatter_mean(
+                part.flatten(grads), gfmt, data_axis, k1, mode=rounding)
+            if full_quant and qcfg.enabled and qcfg.policy.quantize_grads:
+                # optimizer-input gradient quantization (Alg. 1), on this
+                # rank's slice with the step's own rounding mode (matching
+                # the replicated quantize_grads); the pad region quantizes
+                # zeros exactly so the stats only gain pad counts, never
+                # error.
+                gshard, g_stats = fxp.quantize(
+                    gshard, fmts["grads"], mode=qcfg.rounding,
+                    key=jax.random.fold_in(k_g, rank))
+            else:
+                g_stats = QuantStats.zero()
+            pshard = part.shard(pflat, rank)
+            upd, new_opt = optimizer.update_shard(gshard, opt_local, pshard,
+                                                  count, axis_name=data_axis)
+            if full_quant:
+                new_flat, p_wire = collectives.dps_allgather_params(
+                    pshard + upd, wfmt, data_axis, k2, mode=rounding)
+            else:
+                new_flat = jax.lax.all_gather(pshard + upd, data_axis,
+                                              axis=0, tiled=True)
+                p_wire = QuantStats.zero()
+            g_wire = collectives.psum_stats(g_wire, data_axis)
+            p_wire = collectives.psum_stats(p_wire, data_axis)
+            g_stats = collectives.psum_stats(g_stats, data_axis)
+            loss = jax.lax.pmean(loss, data_axis)
+            aux = {k: (collectives.psum_stats(v, data_axis)
+                       if isinstance(v, QuantStats)
+                       else jax.lax.pmean(v, data_axis))
+                   for k, v in aux.items()}
+            return (loss, aux), new_flat, new_opt, g_wire, p_wire, g_stats
+
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), P(data_axis), P(data_axis), P(), P(), P(),
+                      P(), P()),
+            out_specs=((P(), P()), P(), P(data_axis), P(), P(), P()),
+            check_vma=False)
+        return fn(qparams, pflat, opt_state, batch, fmts, count, k_a, k_g,
+                  k_r)
+
+    def _zero_plain_opt(part, gflat, pflat, opt_state, count):
+        """ZeRO-1 optimizer leg without wire compression: slice the (already
+        averaged, replicated) flat gradients, step the local shard, and
+        all-gather the updated parameter shards in fp32.  Every leg is an
+        exact copy, so the reassembled parameters are bit-identical to the
+        replicated optimizer step whenever the shard-local optimizer math
+        is (see ``make_train_step``'s ZeRO note on FMA contraction)."""
+        def body(gflat, pflat, opt_local, count):
+            rank = jax.lax.axis_index(data_axis)
+            upd, new_opt = optimizer.update_shard(
+                part.shard(gflat, rank), opt_local, part.shard(pflat, rank),
+                count, axis_name=data_axis)
+            new_flat = jax.lax.all_gather(part.shard(pflat, rank) + upd,
+                                          data_axis, axis=0, tiled=True)
+            return new_flat, new_opt
+
+        fn = jax.shard_map(body, mesh=mesh,
+                           in_specs=(P(), P(), P(data_axis), P()),
+                           out_specs=(P(), P(data_axis)), check_vma=False)
+        return fn(gflat, pflat, opt_state, count)
+
     def train_step(state: TrainState, batch):
         key = jax.random.fold_in(state.rng, state.step)
         k_w, k_g, k_a = jax.random.split(key, 3)
@@ -315,35 +487,86 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
 
         # -- forward/backward in the quantized regime (Alg. 1 lines 9-20) --
         qparams, w_stats = quantize_params(state.params, fmts["weights"], qcfg, k_w)
-        if wire_sync:
-            # the wire path derives its own RNG stream instead of widening
-            # the step's key split, so the default path stays bit-identical
-            # to a step built without a mesh.
-            k_r = jax.random.fold_in(key, 0x57495245)  # "WIRE"
-            (loss, aux), grads, wire_stats = _wire_synced_grads(
-                qparams, batch, fmts, k_a, k_r)
+        g_wire = p_wire = wire_stats = None
+        if zero_opt:
+            # ZeRO-1: the optimizer steps flat P(data)-sharded slices of the
+            # ZeroPartitioner layout, then the updated parameter shards are
+            # gathered back into the (replicated) tree.
+            part = ZeroPartitioner.create(state.params, n_data)
+            pflat = part.flatten(state.params)
+            if wire_sync:
+                # the flat wire legs can't honor per-leaf carve-outs: only
+                # engage them on the params/optimizer side when the policy
+                # would quantize every leaf anyway and no fp master copy
+                # is promised (static decision, uniform across steps).
+                pred = qcfg.policy.param_predicate()
+                full_quant = (not qcfg.master_weights and all(
+                    pred(path, leaf) for path, leaf in
+                    jax.tree_util.tree_flatten_with_path(state.params)[0]))
+                if not full_quant:
+                    warnings.warn(
+                        "zero_opt_shards + grad_allreduce_bits: the policy "
+                        "excludes some param leaves (or master_weights is "
+                        "set), and the flat ZeRO layout cannot skip them "
+                        "per-leaf — gathering updated params in fp32 and "
+                        "skipping the flat optimizer-input gradient "
+                        "quantization (the gradient wire stays int8).")
+                k_r = jax.random.fold_in(key, 0x57495245)  # "WIRE"
+                (loss, aux), new_flat, opt_state, g_wire, p_wire, g_stats = \
+                    _zero_wire_step(part, full_quant, qparams, pflat,
+                                    state.opt_state, batch, fmts, state.step,
+                                    k_a, k_g, k_r)
+                wire_stats = g_wire.merge(p_wire)
+            else:
+                # exact legs: grads from the ordinary (implicit-psum)
+                # backward pass, slice + step + fp32 gather — bit-exact
+                # with the replicated optimizer step.
+                (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
+                grads, g_stats = quantize_grads(grads, fmts["grads"], qcfg,
+                                                k_g)
+                new_flat, opt_state = _zero_plain_opt(
+                    part, part.flatten(grads), pflat, state.opt_state,
+                    state.step)
+            new_params = part.unflatten(new_flat)
         else:
-            (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
-            wire_stats = None
+            if wire_sync:
+                # the wire path derives its own RNG stream instead of
+                # widening the step's key split, so the default path stays
+                # bit-identical to a step built without a mesh.
+                k_r = jax.random.fold_in(key, 0x57495245)  # "WIRE"
+                (loss, aux), grads, wire_stats = _wire_synced_grads(
+                    qparams, batch, fmts, k_a, k_r)
+            else:
+                (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
+            grads, g_stats = quantize_grads(grads, fmts["grads"], qcfg, k_g)
+            # -- update (Alg. 1 line 18) --
+            updates, opt_state = optimizer.update(grads, state.opt_state,
+                                                  state.params,
+                                                  count=state.step)
+            new_params = jax.tree.map(lambda p, u: p + u, state.params,
+                                      updates)
 
-        grads, g_stats = quantize_grads(grads, fmts["grads"], qcfg, k_g)
         if "dlogits_stats" in aux and qcfg.stat_scope == "last_layer":
             g_stats = aux["dlogits_stats"]
         elif "dlogits_stats" in aux:
             g_stats = g_stats.merge(aux["dlogits_stats"])
         if wire_stats is not None:
-            # wire error feeds the grads controller: a too-coarse wire grid
+            # wire error feeds the controllers: a too-coarse wire grid
             # raises E (-> FL up), wire clipping raises R (-> IL up).
-            g_stats = g_stats.merge(wire_stats)
+            if zero_opt:
+                # grads leg steers the grads controller; the params
+                # all-gather leg quantizes *weights*, so it steers the
+                # weights controller instead.
+                g_stats = g_stats.merge(g_wire)
+                w_stats = w_stats.merge(p_wire)
+            else:
+                g_stats = g_stats.merge(wire_stats)
         if qcfg.stat_scope == "last_layer" and "last_act_stats" in aux:
             a_stats = aux["last_act_stats"]
         else:
             a_stats = aux.get("act_stats", QuantStats.zero())
 
-        # -- update + re-snap weights to the grid (Alg. 1 lines 18-19) --
-        updates, opt_state = optimizer.update(grads, state.opt_state,
-                                              state.params, count=state.step)
-        new_params = jax.tree.map(lambda p, u: p + u, state.params, updates)
+        # -- re-snap weights to the grid (Alg. 1 line 19) --
         if qcfg.enabled and qcfg.policy.quantize_weights and not qcfg.master_weights:
             new_params, w_stats2 = quantize_params(
                 new_params, fmts["weights"], qcfg, jax.random.fold_in(k_w, 1))
@@ -370,6 +593,7 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             dps=new_dps, rng=state.rng, last_loss=loss.astype(jnp.float32))
         return new_state, metrics
 
-    # introspection for drivers/tests: did the compressed path engage?
+    # introspection for drivers/tests: did the compressed paths engage?
     train_step.wire_sync_active = wire_sync
+    train_step.zero_opt_active = zero_opt
     return train_step

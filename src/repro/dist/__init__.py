@@ -26,6 +26,14 @@ kernel on TPU (one read-x/write-wire HBM pass, stats in SMEM) and plain
 jnp ops elsewhere; formats may be per-group (⟨IL, FL⟩ of shape [G] over
 contiguous chunks of the flattened tensor).
 
+:func:`dps_reduce_scatter_mean` / :func:`dps_allgather_params` split the
+same schedule into ZeRO-1's two halves: the scatter leg leaves the mean
+**sharded** (one flat chunk per rank, the
+:class:`~repro.dist.sharding.ZeroPartitioner` padded layout) so each rank
+steps its slice of the optimizer locally, and the gather leg ships the
+updated parameter shards back — both int8.  See ``dist/README.md`` for
+when each schedule engages.
+
 Training integration — ``QuantConfig.grad_allreduce_bits``
 ----------------------------------------------------------
 The knob that turns the codec into the gradient hot path::
@@ -50,16 +58,18 @@ all-reduce; the CLI spelling is ``repro.launch.train
 --grad-allreduce-bits 8``.
 """
 
-from repro.dist.sharding import (LogicalRules, axis_rules, current_mesh_rules,
-                                 logical_constraint, model_axis_size,
-                                 tree_specs)
-from repro.dist.collectives import (dps_allreduce_mean,
-                                    dps_allreduce_mean_tree, psum_stats,
+from repro.dist.sharding import (LogicalRules, ZeroPartitioner, axis_rules,
+                                 current_mesh_rules, logical_constraint,
+                                 model_axis_size, tree_specs)
+from repro.dist.collectives import (dps_allgather_params, dps_allreduce_mean,
+                                    dps_allreduce_mean_tree,
+                                    dps_reduce_scatter_mean, psum_stats,
                                     wire_decode, wire_encode, wire_format)
 
 __all__ = [
-    "LogicalRules", "axis_rules", "current_mesh_rules", "logical_constraint",
-    "model_axis_size", "tree_specs",
-    "dps_allreduce_mean", "dps_allreduce_mean_tree", "psum_stats",
+    "LogicalRules", "ZeroPartitioner", "axis_rules", "current_mesh_rules",
+    "logical_constraint", "model_axis_size", "tree_specs",
+    "dps_allgather_params", "dps_allreduce_mean", "dps_allreduce_mean_tree",
+    "dps_reduce_scatter_mean", "psum_stats",
     "wire_decode", "wire_encode", "wire_format",
 ]

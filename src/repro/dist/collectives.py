@@ -248,6 +248,88 @@ def dps_allreduce_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
     return mean, stats
 
 
+def dps_reduce_scatter_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
+                            key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
+                            backend: str = "auto",
+                            ) -> Tuple[jax.Array, QuantStats]:
+    """Reduce-scatter mean over ``axis_name`` with the int8 wire on the
+    scatter leg — the ZeRO half-collective.
+
+    Each rank quantizes its *full* local tensor onto the ⟨IL, FL⟩ grid and
+    ships int8 grid integers through a tiled ``all_to_all``, so rank j ends
+    up holding every rank's j-th chunk; the owner decodes, sums in fp32 and
+    divides by the axis size.  This is exactly leg 1 of
+    :func:`dps_allreduce_mean` — but where the all-reduce immediately
+    re-quantizes and gathers the mean back out, ZeRO-1 keeps it **sharded**
+    so each rank can run its slice of the optimizer locally
+    (:func:`dps_allgather_params` is the return leg, applied to the updated
+    parameter shard instead of the gradient mean).
+
+    Wire bytes ≈ |x|·1 B per rank vs |x|·4 B for an fp32 reduce-scatter;
+    stochastic rounding keeps the leg unbiased with error < one grid step
+    (2^-FL) on every element of the mean.
+
+    Returns ``(shard, stats)``: ``shard`` is this rank's chunk of the
+    flattened, zero-padded mean — shape ``[ceil(x.size / n)]``, the padded
+    1-D layout of :class:`repro.dist.sharding.ZeroPartitioner` — and
+    ``stats`` cover this rank's dispatch-leg encode of its |x| local
+    elements (``psum_stats(stats, axis)`` counts each global element exactly
+    once).  Must run inside ``shard_map``; ``key`` may be identical across
+    ranks (it is decorrelated with ``axis_index`` here).
+    """
+    if fmt.il.ndim != 0:
+        raise ValueError("dps_reduce_scatter_mean takes a global (scalar) "
+                         "format; per-group formats are encode/decode-only "
+                         "for now")
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    chunk, pad = _group_layout(x.size, n)
+
+    wire, stats = wire_encode(x.reshape(-1), fmt,
+                              key=jax.random.fold_in(key, idx), mode=mode,
+                              backend=backend)
+    wire = jnp.pad(wire, (0, pad)).reshape(n, chunk)
+    wire = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)                       # (n, chunk)
+    shard = wire_decode(wire, fmt).sum(axis=0) / n              # (chunk,)
+    return shard, stats
+
+
+def dps_allgather_params(shard: jax.Array, fmt: FixedPointFormat, axis_name,
+                         key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
+                         backend: str = "auto",
+                         ) -> Tuple[jax.Array, QuantStats]:
+    """All-gather per-rank parameter shards with an int8 wire — the ZeRO
+    return leg.
+
+    Each rank quantizes its updated shard (the slice of the flattened
+    parameter vector it just stepped locally) onto the ⟨IL, FL⟩ grid, ships
+    int8 grid integers through a tiled ``all_gather``, and every rank
+    decodes the concatenation.  Wire bytes ≈ |shard|·1 B per rank vs
+    |shard|·4 B fp32.  Note the decode quantizes the *parameters* onto the
+    wire grid — derive ``fmt`` from the weights controller
+    (:func:`wire_format`) so that grid tracks the weight range, and feed the
+    returned stats back into the weights controller so wire clipping and
+    rounding error steer next step's ⟨IL, FL⟩.
+
+    Returns ``(full, stats)``: ``full`` is the flat ``[n · shard.size]``
+    gathered vector (identical on every rank), ``stats`` cover this rank's
+    encode of its |shard| elements (``psum_stats`` → every global element
+    counted exactly once).  Must run inside ``shard_map``; ``key`` may be
+    identical across ranks.
+    """
+    if fmt.il.ndim != 0:
+        raise ValueError("dps_allgather_params takes a global (scalar) "
+                         "format; per-group formats are encode/decode-only "
+                         "for now")
+    idx = jax.lax.axis_index(axis_name)
+    wire, stats = wire_encode(shard.reshape(-1), fmt,
+                              key=jax.random.fold_in(key, idx), mode=mode,
+                              backend=backend)
+    full = jax.lax.all_gather(wire, axis_name, axis=0, tiled=True)
+    return wire_decode(full, fmt), stats
+
+
 def dps_allreduce_mean_tree(tree, fmt: FixedPointFormat, axis_name,
                             key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
                             backend: str = "auto"):

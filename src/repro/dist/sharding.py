@@ -29,6 +29,7 @@ import threading
 from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # One candidate assignment: a single mesh axis or a tuple of mesh axes that
@@ -120,6 +121,95 @@ def tree_specs(logical, struct, mesh: Mesh, rules: LogicalRules):
     return jax.tree.map(
         lambda log, s: NamedSharding(mesh, rules.spec(log, s.shape, mesh)),
         logical, struct, is_leaf=_is_axes_leaf)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 parameter partitioning.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ZeroPartitioner:
+    """Padded 1-D layout that shards *any* param tree across N ranks.
+
+    :class:`LogicalRules` can only bind "fsdp" to the data axis when a
+    tensor dimension divides the mesh-axis size — everything else stays
+    replicated.  ZeRO-1 sidesteps the divisibility gap entirely: the whole
+    tree is flattened (leaf order = ``tree_flatten`` order) into one fp32
+    vector, zero-padded to a multiple of ``n_shards``, and sharded as equal
+    contiguous slices.  Non-divisible leaves, scalars, and leaves smaller
+    than the axis all shard, because slice boundaries ignore leaf
+    boundaries.
+
+    The layout is the contract between the three ZeRO pieces:
+
+    * ``flatten(grads)`` feeds
+      :func:`repro.dist.collectives.dps_reduce_scatter_mean`, whose
+      per-rank chunk is exactly ``shard(flatten(x), rank)`` of the mean;
+    * the optimizer steps one ``[shard_size]`` slice per rank
+      (``SGD.update_shard`` / ``AdamW.update_shard``);
+    * :func:`repro.dist.collectives.dps_allgather_params` (or a plain
+      ``all_gather``) reassembles the flat vector, and ``unflatten``
+      restores shapes and dtypes.
+
+    Padding is always zero: zero gradients and zero parameters produce zero
+    optimizer updates, so the pad region stays zero for SGD/AdamW and
+    round-trips exactly.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    n_shards: int
+
+    @staticmethod
+    def create(tree, n_shards: int) -> "ZeroPartitioner":
+        """Build from a concrete or abstract (ShapeDtypeStruct) tree."""
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if not leaves:
+            raise ValueError("ZeroPartitioner needs a non-empty tree")
+        return ZeroPartitioner(
+            treedef=treedef,
+            shapes=tuple(tuple(l.shape) for l in leaves),
+            dtypes=tuple(l.dtype for l in leaves),
+            n_shards=int(n_shards))
+
+    @property
+    def size(self) -> int:
+        """Unpadded element count of the flattened tree."""
+        return sum(math.prod(s) for s in self.shapes)
+
+    @property
+    def shard_size(self) -> int:
+        return -(-self.size // self.n_shards)
+
+    @property
+    def padded_size(self) -> int:
+        return self.shard_size * self.n_shards
+
+    def flatten(self, tree) -> jax.Array:
+        """Tree -> fp32 ``[padded_size]`` (zero-padded, tree_flatten order)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        flat = jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in leaves])
+        return jnp.pad(flat, (0, self.padded_size - self.size))
+
+    def unflatten(self, flat: jax.Array):
+        """``[padded_size]`` (or ``[size]``) -> tree with original
+        shapes/dtypes; the pad region is dropped."""
+        out, off = [], 0
+        for shape, dtype in zip(self.shapes, self.dtypes):
+            n = math.prod(shape)
+            out.append(flat[off:off + n].reshape(shape).astype(dtype))
+            off += n
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def shard(self, flat: jax.Array, index) -> jax.Array:
+        """Rank ``index``'s ``[shard_size]`` slice (``index`` may be traced,
+        e.g. ``lax.axis_index`` inside ``shard_map``)."""
+        return jax.lax.dynamic_slice(
+            flat, (index * self.shard_size,), (self.shard_size,))
 
 
 # ---------------------------------------------------------------------------

@@ -48,7 +48,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 # HLO collective accounting lives in hlo_stats (shared with benchmarks and
 # the multi-device tests); re-exported here for historical importers.
-from repro.launch.hlo_stats import COLLECTIVE_OPS, collective_bytes  # noqa: E402
+from repro.launch.hlo_stats import (COLLECTIVE_OPS,  # noqa: E402
+                                    collective_bytes, wire_bytes_summary)
 
 
 def _mesh_and_rules(multi_pod: bool):
@@ -56,9 +57,10 @@ def _mesh_and_rules(multi_pod: bool):
     return mesh, LogicalRules()
 
 
-def _qcfg(grad_allreduce_bits=None) -> qtrain.QuantConfig:
+def _qcfg(grad_allreduce_bits=None, zero_opt_shards=None) -> qtrain.QuantConfig:
     return qtrain.QuantConfig(enabled=True, controller="paper",
-                              grad_allreduce_bits=grad_allreduce_bits)
+                              grad_allreduce_bits=grad_allreduce_bits,
+                              zero_opt_shards=zero_opt_shards)
 
 
 def _optimizer():
@@ -66,16 +68,22 @@ def _optimizer():
 
 
 def _compile_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
-                   grad_allreduce_bits=None):
-    qcfg = _qcfg(grad_allreduce_bits)
+                   grad_allreduce_bits=None, zero_opt=False):
+    zero_shards = None
+    if zero_opt:
+        zero_shards = int(dict(zip(mesh.axis_names,
+                                   mesh.devices.shape)).get("data", 1))
+    qcfg = _qcfg(grad_allreduce_bits, zero_shards)
     opt = _optimizer()
     # On the production meshes (model axis > 1) the compressed all-reduce
-    # falls back to the implicit psum with a warning — qtrain only engages
-    # the shard_map path on pure data-parallel meshes.
+    # and ZeRO-1 fall back (with a warning) to the implicit psum /
+    # replicated optimizer state — qtrain only engages the shard_map paths
+    # on pure data-parallel meshes.  abstract_train_state makes the same
+    # call, so the opt-state layout always matches the step.
     step = specs_lib.build_train_step(cfg, qcfg, opt, mesh=mesh)
     state_sh = specs_lib.train_state_shardings(cfg, mesh, rules, opt, qcfg)
     batch_sh = specs_lib.train_batch_shardings(cfg, shape, mesh, rules)
-    astate = specs_lib.abstract_train_state(cfg, opt, qcfg)
+    astate = specs_lib.abstract_train_state(cfg, opt, qcfg, mesh=mesh)
     abatch = specs_lib.train_batch_specs(cfg, shape)
     repl = NamedSharding(mesh, P())
 
@@ -182,6 +190,9 @@ def _extract(compiled) -> Dict[str, Any]:
         "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
         "collective_bytes": {k: v for k, v in coll.items() if k != "counts"},
         "collective_counts": coll["counts"],
+        # ring-model wire bytes split int8 vs fp32 — the accounting the
+        # compressed schedules (--grad-allreduce-bits / --zero-opt) move
+        "collective_wire_bytes": wire_bytes_summary(hlo),
     }
     for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
                  "output_size_in_bytes", "alias_size_in_bytes",
@@ -194,17 +205,19 @@ def _extract(compiled) -> Dict[str, Any]:
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              probes: bool = True, overrides: Dict[str, Any] = None,
-             grad_allreduce_bits: int = None) -> Dict[str, Any]:
+             grad_allreduce_bits: int = None,
+             zero_opt: bool = False) -> Dict[str, Any]:
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     shape = SHAPES[shape_name]
     mesh, rules = _mesh_and_rules(multi_pod)
     compile_fn = KIND_COMPILERS[shape.kind]
-    if shape.kind == "train" and grad_allreduce_bits is not None:
+    if shape.kind == "train" and (grad_allreduce_bits is not None or zero_opt):
         import functools
         compile_fn = functools.partial(
-            _compile_train, grad_allreduce_bits=grad_allreduce_bits)
+            _compile_train, grad_allreduce_bits=grad_allreduce_bits,
+            zero_opt=zero_opt)
 
     t0 = time.time()
     lowered, compiled = compile_fn(cfg, shape, mesh, rules)
@@ -247,6 +260,10 @@ def main():
                          "gradient all-reduce requested (engages on pure "
                          "data-parallel meshes; falls back with a warning "
                          "when the mesh has a model axis)")
+    ap.add_argument("--zero-opt", action="store_true",
+                    help="compile train cells with ZeRO-1 sharded optimizer "
+                         "state requested (same pure-data-parallel "
+                         "engagement rule as --grad-allreduce-bits)")
     ap.add_argument("--out", default=RESULTS_DIR)
     args = ap.parse_args()
 
@@ -277,7 +294,8 @@ def main():
             # table; the multi-pod pass proves the "pod" axis shards
             stats = run_cell(arch, sh, mp,
                              probes=not args.no_probes and not mp,
-                             grad_allreduce_bits=args.grad_allreduce_bits)
+                             grad_allreduce_bits=args.grad_allreduce_bits,
+                             zero_opt=args.zero_opt)
             with open(out_path, "w") as f:
                 json.dump(stats, f, indent=1)
             print(f"  ok: flops={stats['flops']:.3e} "

@@ -38,33 +38,50 @@ def _shape_bytes(dtype: str, dims: str) -> int:
 
 
 def _collective_instructions(hlo_text: str):
-    """Yield ``(op, [(dtype, bytes), ...])`` per collective instruction."""
+    """Yield ``(op, dtype, payload_bytes)`` per collective instruction.
+
+    Payload = max shape on the instruction (covers the full-tensor side of
+    an all-reduce / all-gather / reduce-scatter) — except ``all-to-all``,
+    whose CPU lowering decomposes into a tuple of per-rank chunks
+    ``(s8[1,c], ...×n) all-to-all(...)``; there the payload is the *sum*
+    of the result-tuple shapes (equal to the single-array form's full
+    shape), not one chunk.  ``ROOT``-prefixed instructions parse too.
+    """
     for line in hlo_text.splitlines():
         s = line.strip()
-        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", s)
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", s)
         if not m:
             continue
         rest = m.group(1)
-        op = None
+        op = tok = None
         for cand in COLLECTIVE_OPS:
-            if re.search(rf"\b{cand}(-start|-done)?\(", rest):
+            tok = re.search(rf"\b{cand}(-start|-done)?\(", rest)
+            if tok:
                 op = cand
                 break
         if op is None or f"{op}-done" in rest:
             continue
         sizes = [(d, _shape_bytes(d, dims))
                  for d, dims in _SHAPE_RE.findall(rest)]
-        if sizes:
-            yield op, sizes
+        if not sizes:
+            continue
+        if op == "all-to-all":
+            result = [(d, _shape_bytes(d, dims))
+                      for d, dims in _SHAPE_RE.findall(rest[:tok.start()])]
+            use = result or sizes
+            yield op, use[0][0], float(sum(b for _, b in use))
+        else:
+            dtype, nbytes = max(sizes, key=lambda t: t[1])
+            yield op, dtype, float(nbytes)
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Per-collective-type bytes from optimized HLO (max operand/result
-    shape per instruction — the ring-transfer approximation)."""
+    """Per-collective-type payload bytes from optimized HLO (the
+    ring-transfer approximation)."""
     out = {k: 0.0 for k in COLLECTIVE_OPS}
     counts = {k: 0 for k in COLLECTIVE_OPS}
-    for op, sizes in _collective_instructions(hlo_text):
-        out[op] += max(b for _, b in sizes)
+    for op, _, nbytes in _collective_instructions(hlo_text):
+        out[op] += nbytes
         counts[op] += 1
     out["counts"] = counts
     return out
@@ -75,16 +92,32 @@ def collective_wire_bytes(hlo_text: str) -> Dict[str, object]:
 
     Returns ``{"by_op_dtype": {op: {dtype: bytes}}, "total": float,
     "by_dtype": {dtype: bytes}}`` where every instruction contributes
-    ``ring_factor(op) × max-shape bytes`` under its max-shape dtype.
+    ``ring_factor(op) × payload bytes`` (see
+    :func:`_collective_instructions`) under its payload dtype.
     """
     by_op: Dict[str, Dict[str, float]] = {}
     by_dtype: Dict[str, float] = {}
     total = 0.0
-    for op, sizes in _collective_instructions(hlo_text):
-        dtype, nbytes = max(sizes, key=lambda t: t[1])
+    for op, dtype, nbytes in _collective_instructions(hlo_text):
         wire = _RING_FACTOR[op] * nbytes
         by_op.setdefault(op, {})
         by_op[op][dtype] = by_op[op].get(dtype, 0.0) + wire
         by_dtype[dtype] = by_dtype.get(dtype, 0.0) + wire
         total += wire
     return {"by_op_dtype": by_op, "by_dtype": by_dtype, "total": total}
+
+
+def wire_bytes_summary(hlo_text: str) -> Dict[str, float]:
+    """Compact int8-vs-fp32 view of :func:`collective_wire_bytes`.
+
+    The headline accounting for the compressed collective schedules
+    (``grad_allreduce_bits`` / ``zero_opt_shards``): how many ring-model
+    wire bytes ride the int8 payload vs fp32, and the int8 fraction of the
+    total.  Used by the dry-run's per-cell JSON and ``benchmarks/bench_zero``.
+    """
+    w = collective_wire_bytes(hlo_text)
+    int8 = w["by_dtype"].get("s8", 0.0) + w["by_dtype"].get("u8", 0.0)
+    fp32 = w["by_dtype"].get("f32", 0.0)
+    total = w["total"]
+    return {"total": total, "int8": int8, "fp32": fp32,
+            "int8_fraction": (int8 / total) if total else 0.0}

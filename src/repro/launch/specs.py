@@ -78,24 +78,58 @@ def opt_state_shardings(optimizer, p_shards):
     raise TypeError(type(optimizer))
 
 
+def _abstract_opt_state(aparams, optimizer, qcfg: qtrain.QuantConfig,
+                        mesh: Optional[Mesh]):
+    """Optimizer-state template in whichever layout the step will use.
+
+    Mirrors :func:`repro.core.qtrain.zero_opt_engaged`: when the ZeRO-1
+    path engages, the state is the flat padded
+    :func:`~repro.core.qtrain.zero_opt_state` layout (meant to shard
+    ``P("data")``); otherwise the ordinary per-leaf ``optimizer.init``
+    tree.  Keeping this decision in one place prevents a layout mismatch
+    between the checkpoint template, the shardings, and the step.
+    """
+    if qtrain.zero_opt_engaged(qcfg, mesh):
+        return jax.eval_shape(
+            lambda p: qtrain.zero_opt_state(optimizer, p,
+                                            qcfg.zero_opt_shards), aparams)
+    return jax.eval_shape(optimizer.init, aparams)
+
+
 def train_state_shardings(cfg: ModelConfig, mesh: Mesh, rules: LogicalRules,
                           optimizer, qcfg: qtrain.QuantConfig):
     repl = NamedSharding(mesh, P())
     p_shards = param_shardings(cfg, mesh, rules)
+    if qtrain.zero_opt_engaged(qcfg, mesh):
+        # ZeRO-1: every optimizer-state leaf is one flat padded vector
+        # sharded over the data axis — 1/n of the replicated bytes per
+        # device, the point of the scheme.
+        data_sh = NamedSharding(mesh, P("data"))
+        aparams = abstract_params(registry(cfg.family).model_defs(cfg))
+        opt_shards = jax.tree.map(
+            lambda _: data_sh,
+            _abstract_opt_state(aparams, optimizer, qcfg, mesh))
+    else:
+        opt_shards = opt_state_shardings(optimizer, p_shards)
     dps_template = qtrain.init_dps_bundle(qcfg)
     dps_shards = jax.tree.map(lambda _: repl, dps_template)
     return qtrain.TrainState(
-        step=repl, params=p_shards,
-        opt_state=opt_state_shardings(optimizer, p_shards),
+        step=repl, params=p_shards, opt_state=opt_shards,
         dps=dps_shards, rng=repl, last_loss=repl)
 
 
-def abstract_train_state(cfg: ModelConfig, optimizer, qcfg: qtrain.QuantConfig):
-    """ShapeDtypeStruct TrainState (dry-run: no allocation)."""
+def abstract_train_state(cfg: ModelConfig, optimizer, qcfg: qtrain.QuantConfig,
+                         mesh: Optional[Mesh] = None):
+    """ShapeDtypeStruct TrainState (dry-run: no allocation).
+
+    ``mesh`` matters only under ``qcfg.zero_opt_shards``: the optimizer
+    state template switches to the flat ZeRO layout exactly when the step
+    built against this mesh will (see :func:`_abstract_opt_state`).
+    """
     mod = registry(cfg.family)
     defs = mod.model_defs(cfg)
     aparams = abstract_params(defs)
-    opt_state = jax.eval_shape(optimizer.init, aparams)
+    opt_state = _abstract_opt_state(aparams, optimizer, qcfg, mesh)
     dps = jax.eval_shape(lambda: qtrain.init_dps_bundle(qcfg))
     rng = jax.eval_shape(lambda: jax.random.key(0))
     return qtrain.TrainState(

@@ -41,10 +41,13 @@ def build(cfg, qcfg, opt_cfg, mesh=None):
     opt = make_optimizer(opt_cfg)
     step_fn = specs_lib.build_train_step(cfg, qcfg, opt, mesh=mesh)
     if mesh is not None:
-        if getattr(step_fn, "wire_sync_active", False):
-            # compressed gradient all-reduce = classic data parallelism:
+        if (getattr(step_fn, "wire_sync_active", False)
+                or getattr(step_fn, "zero_opt_active", False)):
+            # compressed all-reduce / ZeRO-1 = classic data parallelism:
             # params replicate across the data axis (the shard_map pins them
             # to P()); binding "fsdp" would re-gather every leaf per step.
+            # Under ZeRO the *optimizer state* shards instead, via the flat
+            # P("data") layout in train_state_shardings.
             rules = LogicalRules(rules=tuple(
                 r for r in DEFAULT_RULES if r[0] != "fsdp"))
         else:
@@ -73,6 +76,12 @@ def main(argv=None):
                          "of this many grid bits (2-8); builds a data-axis "
                          "mesh over all local devices and feeds the wire "
                          "QuantStats into the grads DPS controller")
+    ap.add_argument("--zero-opt", action="store_true",
+                    help="ZeRO-1: shard the optimizer state across the "
+                         "data axis (flat padded layout, 1/n state bytes "
+                         "per device); combined with --grad-allreduce-bits "
+                         "both the gradient reduce-scatter and the param "
+                         "all-gather ride the int8 wire")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -86,18 +95,21 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_cfg(cfg)
+    n_dev = jax.device_count()
+    zero_shards = n_dev if (args.zero_opt and n_dev > 1) else None
     qcfg = qtrain.QuantConfig(enabled=args.controller != "off",
                               controller=args.controller
                               if args.controller != "off" else "paper",
-                              grad_allreduce_bits=args.grad_allreduce_bits)
+                              grad_allreduce_bits=args.grad_allreduce_bits,
+                              zero_opt_shards=zero_shards)
     opt_cfg = (AdamWConfig(total_steps=args.steps) if args.optimizer == "adamw"
                else SGDConfig())
     mesh = None
-    if args.grad_allreduce_bits is not None and jax.device_count() > 1:
+    if (args.grad_allreduce_bits is not None or zero_shards) and n_dev > 1:
         # a pure data-parallel mesh over every local device — the regime the
-        # compressed all-reduce targets.  On one device qtrain degrades the
-        # path to the identity, so no mesh is built.
-        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        # compressed all-reduce and ZeRO-1 target.  On one device qtrain
+        # degrades both paths to the replicated step, so no mesh is built.
+        mesh = jax.make_mesh((n_dev,), ("data",))
     opt, jitted = build(cfg, qcfg, opt_cfg, mesh=mesh)
 
     mod = registry(cfg.family)
@@ -111,12 +123,16 @@ def main(argv=None):
         ckpt = AsyncCheckpointer(args.ckpt_dir)
     if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         start = latest_step(args.ckpt_dir)
-        template = specs_lib.abstract_train_state(cfg, opt, qcfg)
+        template = specs_lib.abstract_train_state(cfg, opt, qcfg, mesh=mesh)
         state, meta = restore(args.ckpt_dir, start, template)
         print(f"resumed from step {start} (data cursor {meta.get('cursor')})")
     else:
         params = init_params(jax.random.key(args.seed), mod.model_defs(cfg))
-        state = qtrain.TrainState.create(params, opt.init(params), qcfg,
+        if qtrain.zero_opt_engaged(qcfg, mesh):
+            opt_state = qtrain.zero_opt_state(opt, params, zero_shards)
+        else:
+            opt_state = opt.init(params)
+        state = qtrain.TrainState.create(params, opt_state, qcfg,
                                          jax.random.key(args.seed + 1))
 
     extras = {}

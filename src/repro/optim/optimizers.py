@@ -73,6 +73,36 @@ def _clip_by_norm(tree, max_norm: float):
     return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), n
 
 
+def _clip_by_norm_shard(g: jax.Array, max_norm: float, axis_name):
+    """Shard-local clip against the CROSS-SHARD global norm.
+
+    A ZeRO rank holds one flat slice of the gradient, so the norm that the
+    replicated :func:`_clip_by_norm` computes over the whole tree is
+    recovered by psum-ing per-shard sums of squares over the data axis
+    (zero padding contributes nothing).  ``axis_name=None`` (single shard)
+    degrades to the local norm.
+    """
+    sq = jnp.sum(jnp.square(g.astype(jnp.float32)))
+    if axis_name is not None:
+        sq = jax.lax.psum(sq, axis_name)
+    n = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return (g * scale).astype(g.dtype), n
+
+
+def _shard_key(base: int, count, axis_name):
+    """Per-step (and per-rank, under ZeRO) RNG for the stochastic state cast.
+
+    The sharded path folds in ``axis_index`` so bf16 state updates draw
+    distinct bits per rank; with fp32 state (``_sr_cast`` is the identity)
+    the replicated and sharded paths are bit-identical regardless.
+    """
+    key = jax.random.fold_in(jax.random.key(base), count)
+    if axis_name is not None:
+        key = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    return key
+
+
 @dataclasses.dataclass(frozen=True)
 class SGDConfig:
     lr: float = 0.01
@@ -108,28 +138,68 @@ class SGD:
         dt = jnp.bfloat16 if self.cfg.state_dtype == "bfloat16" else jnp.float32
         return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)}
 
+    def _state_dtype(self):
+        return (jnp.bfloat16 if self.cfg.state_dtype == "bfloat16"
+                else jnp.float32)
+
+    def _leaf(self, lr, dt, g, mu, p, k):
+        # Shared by update (per-leaf) and update_shard (flat ZeRO slice).
+        # Whether LLVM contracts a product-feeding-an-add into an FMA
+        # depends on the fused kernel's codegen, i.e. on tensor layout —
+        # so the two layouts agree bit-exactly exactly when the scalar
+        # products (wd·p, momentum·mu, lr·mu) are exact in f32, e.g. for
+        # power-of-two lr/momentum/weight_decay; otherwise they may drift
+        # by 1 ULP per step (measured on the CPU backend; no HLO-level
+        # construct prevents the contraction).
+        cfg = self.cfg
+        gf = g.astype(jnp.float32) + cfg.weight_decay * p.astype(jnp.float32)
+        mu_new = cfg.momentum * mu.astype(jnp.float32) + gf
+        return (-lr * mu_new).astype(p.dtype), _sr_cast(mu_new, dt, k)
+
     def update(self, grads, state, params, count):
         cfg = self.cfg
         if cfg.clip_norm:
             grads, _ = _clip_by_norm(grads, cfg.clip_norm)
         lr = self.sched(count)
-        dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+        dt = self._state_dtype()
         key = jax.random.fold_in(jax.random.key(17), count)
         leaves, treedef = jax.tree_util.tree_flatten(state["mu"])
         keys = jax.random.split(key, len(leaves))
         keys = jax.tree_util.tree_unflatten(treedef, list(keys))
 
-        def one(g, mu, p, k):
-            gf = g.astype(jnp.float32) + cfg.weight_decay * p.astype(jnp.float32)
-            mu_new = cfg.momentum * mu.astype(jnp.float32) + gf
-            return (-lr * mu_new).astype(p.dtype), _sr_cast(mu_new, dt, k)
-
+        one = lambda g, mu, p, k: self._leaf(lr, dt, g, mu, p, k)
         out = jax.tree.map(one, grads, state["mu"], params, keys)
         updates = jax.tree.map(lambda t: t[0], out,
                                is_leaf=lambda x: isinstance(x, tuple))
         mu = jax.tree.map(lambda t: t[1], out,
                           is_leaf=lambda x: isinstance(x, tuple))
         return updates, {"mu": mu}
+
+    # --- ZeRO-1 shard-local interface (see repro.dist.sharding) ---
+
+    def init_shard(self, flat: jax.Array):
+        """State for one flat slice (or the whole padded flat vector) of the
+        :class:`~repro.dist.sharding.ZeroPartitioner` layout."""
+        return {"mu": jnp.zeros(flat.shape, self._state_dtype())}
+
+    def update_shard(self, grads, state, params, count, axis_name=None):
+        """One optimizer step on this rank's flat parameter slice.
+
+        Identical element-wise math to :meth:`update` (same ``_leaf``), so
+        with fp32 state — and ``clip_norm`` off — the concatenation of
+        per-shard updates is bit-exact with the replicated step.
+        ``clip_norm`` uses the cross-shard global norm (psum over
+        ``axis_name``), which sums squares in a different order than the
+        per-leaf :func:`_global_norm`, so the clip scale (and hence the
+        update) may differ from the replicated step in the last ULP.
+        """
+        cfg = self.cfg
+        if cfg.clip_norm:
+            grads, _ = _clip_by_norm_shard(grads, cfg.clip_norm, axis_name)
+        upd, mu = self._leaf(self.sched(count), self._state_dtype(),
+                             grads, state["mu"], params,
+                             _shard_key(17, count, axis_name))
+        return upd, {"mu": mu}
 
 
 class AdamW:
@@ -142,34 +212,75 @@ class AdamW:
         z = lambda p: jnp.zeros(p.shape, dt)
         return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
 
+    def _state_dtype(self):
+        return (jnp.bfloat16 if self.cfg.state_dtype == "bfloat16"
+                else jnp.float32)
+
+    def _bias_corrections(self, count):
+        cfg = self.cfg
+        t = count.astype(jnp.float32) + 1.0
+        return 1.0 - cfg.b1 ** t, 1.0 - cfg.b2 ** t
+
+    def _leaf(self, lr, bc1, bc2, dt, g, m, v, p, k):
+        # shared by update (per-leaf) and update_shard (flat ZeRO slice);
+        # see SGD._leaf for the FMA-contraction caveat on cross-layout
+        # bit-exactness.
+        cfg = self.cfg
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        step = m_new / bc1 / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        k1, k2 = jax.random.split(k)
+        return ((-lr * step).astype(p.dtype),
+                _sr_cast(m_new, dt, k1), _sr_cast(v_new, dt, k2))
+
     def update(self, grads, state, params, count):
         cfg = self.cfg
         if cfg.clip_norm:
             grads, _ = _clip_by_norm(grads, cfg.clip_norm)
         lr = self.sched(count)
-        t = count.astype(jnp.float32) + 1.0
-        bc1 = 1.0 - cfg.b1 ** t
-        bc2 = 1.0 - cfg.b2 ** t
-        dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+        bc1, bc2 = self._bias_corrections(count)
+        dt = self._state_dtype()
         key = jax.random.fold_in(jax.random.key(23), count)
         leaves, treedef = jax.tree_util.tree_flatten(state["m"])
         keys = jax.random.split(key, len(leaves))
         keys = jax.tree_util.tree_unflatten(treedef, list(keys))
 
-        def one(g, m, v, p, k):
-            gf = g.astype(jnp.float32)
-            m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
-            v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
-            step = m_new / bc1 / (jnp.sqrt(v_new / bc2) + cfg.eps)
-            step = step + cfg.weight_decay * p.astype(jnp.float32)
-            k1, k2 = jax.random.split(k)
-            return ((-lr * step).astype(p.dtype),
-                    _sr_cast(m_new, dt, k1), _sr_cast(v_new, dt, k2))
-
+        one = lambda g, m, v, p, k: self._leaf(lr, bc1, bc2, dt, g, m, v, p, k)
         out = jax.tree.map(one, grads, state["m"], state["v"], params, keys)
         pick = lambda i: jax.tree.map(lambda t: t[i], out,
                                       is_leaf=lambda x: isinstance(x, tuple))
         return pick(0), {"m": pick(1), "v": pick(2)}
+
+    # --- ZeRO-1 shard-local interface (see repro.dist.sharding) ---
+
+    def init_shard(self, flat: jax.Array):
+        """State for one flat slice (or the whole padded flat vector) of the
+        :class:`~repro.dist.sharding.ZeroPartitioner` layout.
+
+        ``m`` and ``v`` are distinct buffers on purpose: aliased leaves
+        crash buffer donation ("Attempt to donate the same buffer twice")
+        under ``jit(..., donate_argnums=...)`` without a resharding copy.
+        """
+        dt = self._state_dtype()
+        return {"m": jnp.zeros(flat.shape, dt), "v": jnp.zeros(flat.shape, dt)}
+
+    def update_shard(self, grads, state, params, count, axis_name=None):
+        """One optimizer step on this rank's flat parameter slice.
+
+        Same element-wise math as :meth:`update`; ``clip_norm`` uses the
+        cross-shard global norm (psum over ``axis_name``).
+        """
+        cfg = self.cfg
+        if cfg.clip_norm:
+            grads, _ = _clip_by_norm_shard(grads, cfg.clip_norm, axis_name)
+        bc1, bc2 = self._bias_corrections(count)
+        upd, m, v = self._leaf(self.sched(count), bc1, bc2,
+                               self._state_dtype(), grads, state["m"],
+                               state["v"], params,
+                               _shard_key(23, count, axis_name))
+        return upd, {"m": m, "v": v}
 
 
 def make_optimizer(cfg):
