@@ -1,2 +1,2 @@
-from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step, restore,
-                                   save, prune)
+from repro.checkpoint.ckpt import (AsyncCheckpointer, flatten_tree,
+                                   latest_step, restore, save, prune)

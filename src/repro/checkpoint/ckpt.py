@@ -52,6 +52,11 @@ def _flatten(tree):
     return flat
 
 
+# the checkpoint's flat key-path addressing, public for callers building
+# ``restore(defaults=...)`` dicts (e.g. qtrain.dps_restore_defaults)
+flatten_tree = _flatten
+
+
 def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None):
     """Atomic synchronous save."""
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
@@ -83,9 +88,19 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def restore(ckpt_dir: str, step: int, template: Any,
-            shardings: Any = None) -> Any:
+            shardings: Any = None, defaults: Optional[dict] = None) -> Any:
     """Restore into the structure of ``template`` (elastic re-shard via
-    ``shardings`` — a matching pytree of NamedSharding or None)."""
+    ``shardings`` — a matching pytree of NamedSharding or None).
+
+    ``defaults`` maps flat key paths (``"dps/wire_grads/il"``) to host
+    arrays used when the checkpoint lacks that array — the schema-upgrade
+    hook.  The concrete case: checkpoints written before the precision-
+    domain registry carry only the legacy three-key DPS bundle
+    (``dps/weights|acts|grads/...``); restoring into a plan that also
+    declares wire domains finds those keys missing and initializes them
+    fresh from the defaults (see ``qtrain.dps_restore_defaults``).  Keys
+    absent from both the checkpoint and ``defaults`` still fail loudly.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -98,8 +113,12 @@ def restore(ckpt_dir: str, step: int, template: Any,
     for (p, leaf), shard in zip(leaves, shard_leaves):
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
         if key not in data:
-            raise KeyError(f"checkpoint missing array {key!r}")
-        arr = data[key]
+            if defaults is not None and key in defaults:
+                arr = np.asarray(defaults[key])
+            else:
+                raise KeyError(f"checkpoint missing array {key!r}")
+        else:
+            arr = data[key]
         if (hasattr(leaf, "dtype")
                 and jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key)):
             out.append(jax.random.wrap_key_data(jax.numpy.asarray(arr)))

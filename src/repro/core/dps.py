@@ -8,9 +8,14 @@ against (Table 1).  Every controller is a pure, jit-safe state machine:
     fmt    = controller.fmt(state)                  # FixedPointFormat to use
 
 ``stats`` is the merged :class:`~repro.core.fixed_point.QuantStats` of the
-attribute (weights / activations / gradients) this controller governs, and
-``aux`` carries scalar training signals (currently the loss, for the
-convergence-based Na & Mukhopadhyay baseline).
+**precision domain** this controller governs, and ``aux`` carries scalar
+training signals (currently the loss, for the convergence-based Na &
+Mukhopadhyay baseline).  Domains are declared by a :class:`PrecisionPlan`
+(domain name -> :class:`DomainSpec`) which builds the named
+:class:`DpsBundle` registry the train step threads through time: the
+paper's three compute attributes (``weights`` / ``acts`` / ``grads``) plus
+dedicated **wire domains** (``wire_grads`` / ``wire_params``) that own the
+int8 collective legs' formats — see :mod:`repro.core.qtrain`.
 
 All updates are branchless ``lax``/``jnp`` arithmetic on traced int32 state,
 so precision changes never recompile the train step.
@@ -19,7 +24,7 @@ so precision changes never recompile the train step.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -312,3 +317,198 @@ def make_controller(name: str, hyper: Optional[DPSHyper] = None):
     if name not in CONTROLLERS:
         raise ValueError(f"unknown DPS controller {name!r}; have {sorted(CONTROLLERS)}")
     return CONTROLLERS[name](hyper or DPSHyper())
+
+
+def wire_hyper(wire_bits: int, il_init: int, slack: float = 1.0) -> DPSHyper:
+    """Hyper-parameters for a *wire* precision domain.
+
+    The wire payload is int8 grid integers, so every width knob is capped at
+    ``wire_bits``: fixed-width controllers (flexpoint / courbariaux) run at
+    ``total_bits = wire_bits``, and dynamic-width controllers (paper) are
+    clamped by ``max_total = wire_bits`` so a wire-domain format can never
+    statically exceed the int8 capacity.
+
+    ``slack`` is the flexpoint headroom exponent (radix placed to cover
+    ``max|x| · 2^slack``).  At 8 bits the budget is too narrow to span a
+    heavy-tailed tensor, so the right placement depends on the tensor
+    class: *gradients* want a **negative** slack — the bulk carries the
+    learning signal and the rare tail tolerates clipping (mild gradient
+    clipping), so spending the grid on the bulk beats covering the max
+    (measured on LeNet/MNIST-tiny: covering max|g| leaves most gradient
+    elements under one grid step and destabilizes training) — while
+    *parameters* are concentrated near their max and biased by clipping,
+    so they want the classic positive headroom.
+    """
+    il0 = min(max(il_init, 1), wire_bits)
+    return DPSHyper(il_min=1, il_max=wire_bits, fl_min=0,
+                    fl_max=max(wire_bits - 1, 1), il_init=il0,
+                    fl_init=wire_bits - il0, total_bits=wire_bits,
+                    max_total=wire_bits, flex_slack=slack)
+
+
+# ---------------------------------------------------------------------------
+# Precision domains: declarative plan -> named controller-state registry.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DomainSpec:
+    """One precision domain: controller kind, hyper, stats routing, groups.
+
+    ``stats`` names the :class:`QuantStats` stream that feeds this domain's
+    controller (empty = the domain's own name).  ``groups`` > 0 declares a
+    per-group ``[G]`` controller state — the format feeds the per-group jnp
+    wire codec (:func:`repro.dist.collectives.wire_encode`); 0 is the global
+    scalar case.  Hashable, so a plan can sit in a jit closure.
+    """
+
+    controller: str = "paper"
+    hyper: DPSHyper = DPSHyper()
+    stats: str = ""
+    groups: int = 0
+
+    def make(self):
+        return make_controller(self.controller, self.hyper)
+
+    def state_shape(self) -> tuple:
+        return (self.groups,) if self.groups else ()
+
+    def stream(self, name: str) -> str:
+        return self.stats or name
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class DpsBundle:
+    """Named per-domain controller states — the DPS registry's pytree.
+
+    Behaves like an ordered, immutable mapping ``{domain: controller state}``
+    and flattens with the domain names as keys, so checkpoints address
+    leaves as ``dps/<domain>/<field>`` (the legacy three-key dict layout is
+    a structural subset — see ``checkpoint.ckpt``).
+    """
+
+    def __init__(self, states):
+        self._states = dict(states)
+
+    def __getitem__(self, name):
+        return self._states[name]
+
+    def __contains__(self, name):
+        return name in self._states
+
+    def __iter__(self):
+        return iter(self._states)
+
+    def __len__(self):
+        return len(self._states)
+
+    def __repr__(self):
+        return f"DpsBundle({list(self._states)})"
+
+    def names(self):
+        return tuple(self._states)
+
+    def items(self):
+        return self._states.items()
+
+    def tree_flatten_with_keys(self):
+        names = tuple(self._states)
+        return ([(jax.tree_util.DictKey(n), self._states[n]) for n in names],
+                names)
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(zip(names, children))
+
+
+# The standard training domains.  ``weights``/``acts``/``grads`` are the
+# paper's three compute attributes; ``wire_grads``/``wire_params`` govern the
+# int8 collective legs (gradient all-reduce / reduce-scatter, ZeRO parameter
+# all-gather) when compressed gradient sync is on.
+COMPUTE_DOMAINS = ("weights", "acts", "grads")
+WIRE_DOMAINS = ("wire_grads", "wire_params")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Declarative registry: domain name -> :class:`DomainSpec`.
+
+    Builds and drives a :class:`DpsBundle`:
+
+        plan   = PrecisionPlan.of(weights=DomainSpec(...), ...)
+        bundle = plan.init()                      # DpsBundle (pytree)
+        fmts   = plan.formats(bundle)             # {domain: FixedPointFormat}
+        bundle = plan.update(bundle, streams, aux)
+
+    ``streams`` is a ``{stream name: QuantStats}`` dict; each domain consumes
+    the stream its spec routes to (its own name by default) and sees zero
+    stats when that stream is absent this step — so a plan may carry domains
+    (e.g. wire domains on a single-device run) that only engage sometimes.
+    Hashable and static: a plan never changes shape under jit.
+    """
+
+    domains: Tuple[Tuple[str, DomainSpec], ...]
+
+    def __post_init__(self):
+        names = [n for n, _ in self.domains]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate precision domains in {names}")
+        for n, spec in self.domains:
+            if spec.controller not in CONTROLLERS:
+                raise ValueError(f"domain {n!r}: unknown controller "
+                                 f"{spec.controller!r}; have "
+                                 f"{sorted(CONTROLLERS)}")
+            if spec.groups < 0:
+                raise ValueError(f"domain {n!r}: groups must be >= 0")
+
+    @staticmethod
+    def of(**domains: DomainSpec) -> "PrecisionPlan":
+        return PrecisionPlan(tuple(domains.items()))
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.domains)
+
+    def spec(self, name: str) -> DomainSpec:
+        for n, s in self.domains:
+            if n == name:
+                return s
+        raise KeyError(f"no precision domain {name!r}; have {self.names}")
+
+    def __contains__(self, name: str) -> bool:
+        return any(n == name for n, _ in self.domains)
+
+    def controller(self, name: str):
+        return self.spec(name).make()
+
+    def init(self) -> DpsBundle:
+        return DpsBundle((n, s.make().init(s.state_shape()))
+                         for n, s in self.domains)
+
+    def formats(self, bundle: DpsBundle):
+        return {n: s.make().fmt(bundle[n]) for n, s in self.domains}
+
+    def update(self, bundle: DpsBundle, streams, aux=None) -> DpsBundle:
+        out = {}
+        for n, s in self.domains:
+            st = streams.get(s.stream(n))
+            shape = s.state_shape()
+            if st is None:
+                st = QuantStats.zero(shape)
+            elif tuple(st.count.shape) != shape:
+                if st.count.ndim == 0:
+                    # a scalar stream feeding a per-group domain drives
+                    # every group with the same global statistics
+                    st = jax.tree.map(
+                        lambda x: jnp.broadcast_to(x, shape), st)
+                else:
+                    # anything else would silently reshape the domain's
+                    # controller state (breaking the static-structure
+                    # invariant jit/checkpoints rely on) or die in
+                    # controller arithmetic with an opaque broadcast error
+                    raise ValueError(
+                        f"domain {n!r} (groups={s.groups}) consumes stream "
+                        f"{s.stream(n)!r} whose stats have shape "
+                        f"{tuple(st.count.shape)}; a routed stream must be "
+                        "scalar or match the domain's group count")
+            out[n] = s.make().update(bundle[n], st, aux)
+        return DpsBundle(out)

@@ -39,6 +39,19 @@ class QuantPolicy:
     quantize_grads: bool = True
     exclude: Sequence[str] = DEFAULT_EXCLUDE
 
+    def quantizes(self, domain: str) -> bool:
+        """Does the policy quantize this precision domain's tensors?
+
+        The three compute domains map onto their enable flags.  Wire domains
+        are always true: the int8 wire is a transport codec whose engagement
+        is decided by ``QuantConfig.grad_allreduce_bits`` (and, for the flat
+        ZeRO params leg, by the per-leaf carve-outs via
+        ``param_predicate``) — not by the numerics policy.
+        """
+        return {"weights": self.quantize_weights,
+                "acts": self.quantize_acts,
+                "grads": self.quantize_grads}.get(domain, True)
+
     def param_predicate(self):
         pats = [re.compile(p) for p in self.exclude]
 

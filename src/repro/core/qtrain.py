@@ -1,4 +1,4 @@
-"""Quantized-training plumbing: taps, per-attribute DPS bundles, train-state.
+"""Quantized-training plumbing: taps, precision-domain registry, train-state.
 
 Wires the paper's Algorithm 1 into an arbitrary JAX model:
 
@@ -11,8 +11,30 @@ Wires the paper's Algorithm 1 into an arbitrary JAX model:
   weight update  — updated weights are re-snapped to the weight grid
                    (stochastic rounding makes tiny updates survive in
                    expectation, the property Gupta et al. identified),
-  scale_precision — one controller per attribute consumes the step's merged
-                   stats and emits the next step's ⟨IL, FL⟩.
+  scale_precision — one controller per **precision domain** consumes the
+                   step's merged stats and emits the next step's ⟨IL, FL⟩.
+
+Precision domains generalize the paper's fixed weights/acts/grads triple: a
+:class:`~repro.core.dps.PrecisionPlan` (``QuantConfig.plan()``) declares a
+named registry of ``{domain: controller kind, hyper, stats routing, group
+count}`` that builds the pytree :class:`~repro.core.dps.DpsBundle` threaded
+through :class:`TrainState`.  The standard plan carries the three compute
+domains plus dedicated **wire domains** when compressed gradient sync is on:
+
+  ``wire_grads``   — owns the int8 format of the gradient all-reduce /
+                     reduce-scatter leg, fed by that leg's wire QuantStats
+                     (default controller "flexpoint": max-abs-driven radix,
+                     Köster et al.);
+  ``wire_params``  — owns the ZeRO-1 parameter all-gather leg's format,
+                     fed by the params-leg wire stats.
+
+Wire stats feed *only* their wire domain — never the compute controllers.
+Deriving the wire grid from the grads controller's IL (the pre-registry
+``wire_format``-of-the-compute-format scheme) let a few clipped wire
+elements ratchet IL up, coarsen the ⟨IL, 8−IL⟩ wire grid, and rail the
+compute FL at its cap chasing irreducible wire error (the instability
+pinned — now as a stability guarantee — by
+``tests/test_train_allreduce.py``).
 
 Everything here is shape-polymorphic and mesh-agnostic: stats are plain
 ``jnp`` reductions, so under ``pjit`` they come out globally reduced, and the
@@ -31,10 +53,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import dps as dps_lib
 from repro.core import fixed_point as fxp
+from repro.core.dps import DpsBundle, DomainSpec, PrecisionPlan
 from repro.core.fixed_point import FixedPointFormat, QuantStats
 from repro.core.policy import QuantPolicy
-
-ATTRS = ("weights", "acts", "grads")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,13 +66,26 @@ class QuantConfig:
     controller: str = "paper"
     rounding: str = fxp.ROUND_STOCHASTIC
     policy: QuantPolicy = QuantPolicy()
-    # one hyper per attribute; the paper runs one Alg.-2 instance each for
-    # weights, activations and gradients (global granularity).
+    # one hyper per compute domain; the paper runs one Alg.-2 instance each
+    # for weights, activations and gradients (global granularity).
     hyper_weights: dps_lib.DPSHyper = dps_lib.DPSHyper()
     hyper_acts: dps_lib.DPSHyper = dps_lib.DPSHyper()
     hyper_grads: dps_lib.DPSHyper = dps_lib.DPSHyper(il_init=8, fl_init=16)
     stat_scope: str = "global"          # "global" | "last_layer"
     master_weights: bool = False        # keep an fp copy (beyond-paper)
+    # Wire precision domains: with compressed gradient sync on, each int8
+    # collective leg runs its own controller — "wire_grads" for the gradient
+    # scatter/all-reduce leg, "wire_params" for the ZeRO parameter all-gather
+    # leg — instead of deriving ⟨IL, 8−IL⟩ from a compute controller (the
+    # ratchet failure documented in dist/README.md).  "flexpoint" places the
+    # wire radix just above the observed max |x| at a fixed wire width, so
+    # stray clipped elements cannot ratchet the grid coarser.
+    wire_controller: str = "flexpoint"
+    hyper_wire_grads: Optional[dps_lib.DPSHyper] = None   # None -> derived
+    hyper_wire_params: Optional[dps_lib.DPSHyper] = None  # None -> derived
+    # Full custom registry: overrides the standard five-domain plan built
+    # from the fields above.
+    precision_plan: Optional[PrecisionPlan] = None
     # Opt-in compressed gradient synchronization: when set (8 to start),
     # parameter gradients are averaged across the data axis by an explicit
     # shard_map'ed int8-wire ``dps_allreduce_mean`` instead of GSPMD's
@@ -73,29 +107,74 @@ class QuantConfig:
     # replicated step on a single device or without a mesh.
     zero_opt_shards: Optional[int] = None
 
-    def controllers(self):
-        mk = dps_lib.make_controller
-        return {
-            "weights": mk(self.controller, self.hyper_weights),
-            "acts": mk(self.controller, self.hyper_acts),
-            "grads": mk(self.controller, self.hyper_grads),
-        }
+    def plan(self) -> PrecisionPlan:
+        """The precision-domain registry this config trains under.
+
+        The standard plan: one domain per compute attribute (same controller
+        kind, per-domain hyper), plus ``wire_grads`` whenever
+        ``grad_allreduce_bits`` is set and ``wire_params`` when ZeRO-1 can
+        additionally put the parameter all-gather on the wire.  A custom
+        ``precision_plan`` replaces all of it.
+        """
+        if self.precision_plan is not None:
+            return self.precision_plan
+        domains = [
+            ("weights", DomainSpec(self.controller, self.hyper_weights)),
+            ("acts", DomainSpec(self.controller, self.hyper_acts)),
+            ("grads", DomainSpec(self.controller, self.hyper_grads)),
+        ]
+        wb = self.grad_allreduce_bits
+        if wb is not None:
+            # default radix placement mirrors the tensor class (see
+            # dps.wire_hyper): gradients start wide (±2^5 covers typical
+            # init grads) and track the bulk two octaves under the max
+            # (slack -2: clip the rare tail, keep grid resolution);
+            # parameters are O(1), concentrated, and bias under clipping,
+            # so their radix covers the max with headroom (slack +1).
+            domains.append(("wire_grads", DomainSpec(
+                self.wire_controller,
+                self.hyper_wire_grads
+                or dps_lib.wire_hyper(wb, il_init=6, slack=-2.0))))
+            if self.zero_opt_shards is not None:
+                domains.append(("wire_params", DomainSpec(
+                    self.wire_controller,
+                    self.hyper_wire_params
+                    or dps_lib.wire_hyper(wb, il_init=2, slack=1.0))))
+        return PrecisionPlan(tuple(domains))
 
 
-def init_dps_bundle(qcfg: QuantConfig) -> Dict[str, Any]:
-    """Initial DPS controller states, one per attribute."""
-    return {k: c.init() for k, c in qcfg.controllers().items()}
+def init_dps_bundle(qcfg: QuantConfig) -> DpsBundle:
+    """Initial DPS registry: one controller state per declared domain."""
+    return qcfg.plan().init()
 
 
-def bundle_formats(qcfg: QuantConfig, bundle) -> Dict[str, FixedPointFormat]:
-    ctrls = qcfg.controllers()
-    return {k: ctrls[k].fmt(bundle[k]) for k in ATTRS}
+def bundle_formats(qcfg: QuantConfig, bundle: DpsBundle
+                   ) -> Dict[str, FixedPointFormat]:
+    """Per-domain ⟨IL, FL⟩ for this step, keyed by domain name."""
+    return qcfg.plan().formats(bundle)
 
 
-def update_dps_bundle(qcfg: QuantConfig, bundle, stats: Dict[str, QuantStats],
-                      aux=None) -> Dict[str, Any]:
-    ctrls = qcfg.controllers()
-    return {k: ctrls[k].update(bundle[k], stats[k], aux) for k in ATTRS}
+def update_dps_bundle(qcfg: QuantConfig, bundle: DpsBundle,
+                      streams: Dict[str, QuantStats], aux=None) -> DpsBundle:
+    """scale_precision over the registry: each domain consumes the stats
+    stream its spec routes to (absent streams read as zero stats)."""
+    return qcfg.plan().update(bundle, streams, aux)
+
+
+def dps_restore_defaults(qcfg: QuantConfig, prefix: str = ".dps") -> dict:
+    """Checkpoint back-compat defaults: a fresh DPS registry, flattened to
+    the checkpoint's ``".dps/<domain>/.<field>"`` key paths (the leading
+    dots are how ``GetAttrKey`` stringifies — ``TrainState`` is a
+    registered dataclass, so its checkpoint keys carry them).
+
+    Pass as ``ckpt.restore(..., defaults=...)`` so a run configured with
+    wire domains resumes from a legacy checkpoint that only carries the
+    three-key compute bundle — the missing domains initialize fresh while
+    everything present in the checkpoint restores normally.
+    """
+    from repro.checkpoint import flatten_tree  # deferred: io imports core
+    return {f"{prefix}/{k}": v
+            for k, v in flatten_tree(init_dps_bundle(qcfg)).items()}
 
 
 # ---------------------------------------------------------------------------
@@ -167,7 +246,7 @@ _qtap.defvjp(_qtap_fwd, _qtap_bwd)
 
 def quantize_params(params, fmt: FixedPointFormat, qcfg: QuantConfig, key):
     """Snap the parameter tree to the weight grid. Returns (qparams, stats)."""
-    if not qcfg.enabled or not qcfg.policy.quantize_weights:
+    if not qcfg.enabled or not qcfg.policy.quantizes("weights"):
         return params, QuantStats.zero()
     return fxp.quantize_tree(params, fmt, mode=qcfg.rounding, key=key,
                              predicate=qcfg.policy.param_predicate())
@@ -175,7 +254,7 @@ def quantize_params(params, fmt: FixedPointFormat, qcfg: QuantConfig, key):
 
 def quantize_grads(grads, fmt: FixedPointFormat, qcfg: QuantConfig, key):
     """Quantize parameter gradients before the optimizer step."""
-    if not qcfg.enabled or not qcfg.policy.quantize_grads:
+    if not qcfg.enabled or not qcfg.policy.quantizes("grads"):
         return grads, QuantStats.zero()
     return fxp.quantize_tree(grads, fmt, mode=qcfg.rounding, key=key,
                              predicate=qcfg.policy.param_predicate())
@@ -262,15 +341,16 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     inside a ``shard_map`` over ``data_axis`` (params replicated, batch
     split) and parameter gradients are averaged by the int8-wire
     :func:`repro.dist.collectives.dps_allreduce_mean` — ~4× fewer gradient
-    wire bytes than the implicit fp32 psum.  The wire format is derived
-    from the grads controller's ⟨IL, FL⟩ (:func:`wire_format`), and the
-    dispatch-leg QuantStats merge into the grads stats the DPS bundle
-    update consumes.  The path engages only on pure data-parallel meshes
-    (every non-``data_axis`` mesh axis of size 1): JAX 0.4's partial-manual
-    ``shard_map`` (``auto=``) miscompiles the mixed GSPMD/manual case, so
-    tensor-parallel meshes fall back to the implicit psum with a warning.
-    On a single-device mesh (or ``mesh=None``) the path degrades to the
-    identity all-reduce: the step is bit-identical to the uncompressed one.
+    wire bytes than the implicit fp32 psum.  The wire ⟨IL, FL⟩ comes from
+    the registry's dedicated ``wire_grads`` domain, and the dispatch-leg
+    QuantStats feed that domain's controller (and only it — compute
+    controllers never see wire events).  The path engages only on pure
+    data-parallel meshes (every non-``data_axis`` mesh axis of size 1):
+    JAX 0.4's partial-manual ``shard_map`` (``auto=``) miscompiles the
+    mixed GSPMD/manual case, so tensor-parallel meshes fall back to the
+    implicit psum with a warning.  On a single-device mesh (or
+    ``mesh=None``) the path degrades to the identity all-reduce: the step
+    is bit-identical to the uncompressed one.
 
     ``qcfg.zero_opt_shards`` + ``mesh``: ZeRO-1.  The optimizer state lives
     as flat ``P(data_axis)``-sharded slices of the ZeroPartitioner layout
@@ -286,12 +366,18 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     fused shard_map body runs
     per-shard fwd/bwd → int8 ``dps_reduce_scatter_mean`` → local optimizer
     → int8 ``dps_allgather_params``, the grads-leg wire stats feed the
-    grads controller and the params-leg wire stats feed the weights
-    controller.  Same pure-data-parallel constraint and single-device
-    degradation as above.
+    ``wire_grads`` domain and the params-leg wire stats feed the
+    ``wire_params`` domain.  Same pure-data-parallel constraint and
+    single-device degradation as above.
     """
-    ctrls = qcfg.controllers()
-    rounding = getattr(ctrls["weights"], "rounding", qcfg.rounding)
+    plan = qcfg.plan()
+    rounding = getattr(plan.controller("weights"), "rounding", qcfg.rounding)
+    grad_domain = getattr(optimizer, "grad_domain", "grads")
+    if grad_domain not in plan:
+        raise ValueError(
+            f"{type(optimizer).__name__}.grad_domain = {grad_domain!r} names "
+            f"no precision domain in the plan ({plan.names}); the optimizer-"
+            "input gradient quantization needs its format from the registry")
 
     wire_bits = qcfg.grad_allreduce_bits
     if wire_bits is not None and not 2 <= wire_bits <= 8:
@@ -323,6 +409,16 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     if zero_opt and not hasattr(optimizer, "update_shard"):
         raise TypeError(f"{type(optimizer).__name__} has no shard-local "
                         "update_shard/init_shard interface; ZeRO-1 needs it")
+    if wire_sync and "wire_grads" not in plan:
+        raise ValueError(
+            "grad_allreduce_bits engages the compressed gradient sync but "
+            f"the precision plan ({plan.names}) declares no 'wire_grads' "
+            "domain to govern the wire format")
+    if wire_sync and zero_opt and "wire_params" not in plan:
+        raise ValueError(
+            "zero_opt_shards + grad_allreduce_bits put the parameter "
+            f"all-gather on the int8 wire, but the precision plan "
+            f"({plan.names}) declares no 'wire_params' domain")
     if wire_sync or zero_opt:
         from repro.dist import collectives  # deferred: dist imports core
     if zero_opt:
@@ -330,7 +426,7 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
 
     def _grads(qparams, batch, fmts, k_a, microbatch_idx):
         qctx = None
-        if qcfg.enabled and qcfg.policy.quantize_acts:
+        if qcfg.enabled and qcfg.policy.quantizes("acts"):
             qctx = QCtx(acts_fmt=fmts["acts"], grads_fmt=fmts["grads"],
                         key=jax.random.fold_in(k_a, microbatch_idx),
                         rounding=rounding, collect_stats=True)
@@ -361,7 +457,27 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         grads = jax.tree.map(lambda x, p: (x / n).astype(p.dtype), g, qparams)
         return (loss / n, {"act_stats": stats}), grads
 
-    def _wire_synced_grads(qparams, batch, fmts, k_a, k_r):
+    def _raw_grad_stats(grads, fmts, k_g, rank):
+        """Compute-grid gradient stats measured on the RAW local gradients.
+
+        In the wire-synced paths the optimizer-input ``quantize_grads``
+        downstream sees gradients that already sit on the (coarser) wire
+        grid, so its stats report near-zero error — fed to the grads
+        controller they would starve it, ratchet the compute FL down, and
+        coarsen the backward-tap grid until training destabilizes
+        (observed on LeNet/MNIST-tiny).  The grads domain therefore
+        consumes this stats-only measurement of the compute grid against
+        the pre-wire gradients — the same quantization event the
+        replicated path scores — while the gradient *values* flow through
+        the wire untouched.
+        """
+        if not (qcfg.enabled and qcfg.policy.quantizes("grads")):
+            return QuantStats.zero()
+        _, st = quantize_grads(grads, fmts[grad_domain], qcfg,
+                               jax.random.fold_in(k_g, rank))
+        return st
+
+    def _wire_synced_grads(qparams, batch, fmts, k_a, k_g, k_r):
         """Per-shard fwd/bwd + compressed gradient mean over ``data_axis``.
 
         Runs the whole gradient computation inside a full-manual
@@ -371,25 +487,27 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         (loss, acc) come back pmean'ed and QuantStats psum'ed, so the
         caller sees the same global quantities as the GSPMD path.
         """
-        def body(qparams, batch, fmts, k_a, k_r):
+        def body(qparams, batch, fmts, k_a, k_g, k_r):
             rank = jax.lax.axis_index(data_axis)
-            wfmt = collectives.wire_format(fmts["grads"], wire_bits)
             (loss, aux), grads = _accum_grads(
                 qparams, batch, fmts, jax.random.fold_in(k_a, rank))
+            g_raw = _raw_grad_stats(grads, fmts, k_g, rank)
             grads, wstats = collectives.dps_allreduce_mean_tree(
-                grads, wfmt, data_axis, k_r, mode=rounding)
+                grads, fmts, data_axis, k_r, mode=rounding,
+                domain="wire_grads")
             wstats = collectives.psum_stats(wstats, data_axis)
+            g_raw = collectives.psum_stats(g_raw, data_axis)
             loss = jax.lax.pmean(loss, data_axis)
             aux = {k: (collectives.psum_stats(v, data_axis)
                        if isinstance(v, QuantStats)
                        else jax.lax.pmean(v, data_axis))
                    for k, v in aux.items()}
-            return (loss, aux), grads, wstats
+            return (loss, aux), grads, wstats, g_raw
 
         fn = jax.shard_map(body, mesh=mesh,
-                           in_specs=(P(), P(data_axis), P(), P(), P()),
-                           out_specs=(P(), P(), P()), check_vma=False)
-        return fn(qparams, batch, fmts, k_a, k_r)
+                           in_specs=(P(), P(data_axis), P(), P(), P(), P()),
+                           out_specs=(P(), P(), P(), P()), check_vma=False)
+        return fn(qparams, batch, fmts, k_a, k_g, k_r)
 
     def _zero_wire_step(part, full_quant, qparams, pflat, opt_state, batch,
                         fmts, count, k_a, k_g, k_r):
@@ -408,34 +526,34 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         Returns ``((loss, aux), new_flat_params, new_opt_state, g_wire,
         p_wire, g_stats)`` where ``g_wire``/``p_wire`` are the psum'ed
         QuantStats of the two wire legs (gradients / parameters) and
-        ``g_stats`` the optimizer-input gradient quantization stats.
+        ``g_stats`` the compute-grid gradient stats measured on the raw
+        local gradients (see ``_raw_grad_stats``).
         """
         def body(qparams, pflat, opt_local, batch, fmts, count, k_a, k_g, k_r):
             rank = jax.lax.axis_index(data_axis)
-            gfmt = collectives.wire_format(fmts["grads"], wire_bits)
-            wfmt = collectives.wire_format(fmts["weights"], wire_bits)
             k1, k2 = jax.random.split(k_r)
             (loss, aux), grads = _accum_grads(
                 qparams, batch, fmts, jax.random.fold_in(k_a, rank))
+            g_stats = _raw_grad_stats(grads, fmts, k_g, rank)
             gshard, g_wire = collectives.dps_reduce_scatter_mean(
-                part.flatten(grads), gfmt, data_axis, k1, mode=rounding)
-            if full_quant and qcfg.enabled and qcfg.policy.quantize_grads:
+                part.flatten(grads), fmts, data_axis, k1, mode=rounding,
+                domain="wire_grads")
+            if full_quant and qcfg.enabled and qcfg.policy.quantizes("grads"):
                 # optimizer-input gradient quantization (Alg. 1), on this
                 # rank's slice with the step's own rounding mode (matching
-                # the replicated quantize_grads); the pad region quantizes
-                # zeros exactly so the stats only gain pad counts, never
-                # error.
-                gshard, g_stats = fxp.quantize(
-                    gshard, fmts["grads"], mode=qcfg.rounding,
-                    key=jax.random.fold_in(k_g, rank))
-            else:
-                g_stats = QuantStats.zero()
+                # the replicated quantize_grads); stats-wise the event is
+                # degenerate — the shard already sits on the wire grid —
+                # so the controller stream is g_stats above, not this.
+                gshard, _ = fxp.quantize(
+                    gshard, fmts[grad_domain], mode=qcfg.rounding,
+                    key=jax.random.fold_in(k_g, 0x524157 + rank))
             pshard = part.shard(pflat, rank)
             upd, new_opt = optimizer.update_shard(gshard, opt_local, pshard,
                                                   count, axis_name=data_axis)
             if full_quant:
                 new_flat, p_wire = collectives.dps_allgather_params(
-                    pshard + upd, wfmt, data_axis, k2, mode=rounding)
+                    pshard + upd, fmts, data_axis, k2, mode=rounding,
+                    domain="wire_params")
             else:
                 new_flat = jax.lax.all_gather(pshard + upd, data_axis,
                                               axis=0, tiled=True)
@@ -522,8 +640,8 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 # backward pass, slice + step + fp32 gather — bit-exact
                 # with the replicated optimizer step.
                 (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
-                grads, g_stats = quantize_grads(grads, fmts["grads"], qcfg,
-                                                k_g)
+                grads, g_stats = quantize_grads(grads, fmts[grad_domain],
+                                                qcfg, k_g)
                 new_flat, opt_state = _zero_plain_opt(
                     part, part.flatten(grads), pflat, state.opt_state,
                     state.step)
@@ -534,11 +652,19 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 # widening the step's key split, so the default path stays
                 # bit-identical to a step built without a mesh.
                 k_r = jax.random.fold_in(key, 0x57495245)  # "WIRE"
-                (loss, aux), grads, wire_stats = _wire_synced_grads(
-                    qparams, batch, fmts, k_a, k_r)
+                (loss, aux), grads, wire_stats, g_raw = _wire_synced_grads(
+                    qparams, batch, fmts, k_a, k_g, k_r)
+                # the optimizer-input snap still applies (Alg. 1), but the
+                # controller stream is the raw-gradient measurement — the
+                # mean already sits on the wire grid, so this event's own
+                # stats are degenerate (see _raw_grad_stats).
+                grads, _ = quantize_grads(grads, fmts[grad_domain], qcfg,
+                                          k_g)
+                g_stats = g_raw
             else:
                 (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
-            grads, g_stats = quantize_grads(grads, fmts["grads"], qcfg, k_g)
+                grads, g_stats = quantize_grads(grads, fmts[grad_domain],
+                                                qcfg, k_g)
             # -- update (Alg. 1 line 18) --
             updates, opt_state = optimizer.update(grads, state.opt_state,
                                                   state.params,
@@ -550,41 +676,43 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             g_stats = aux["dlogits_stats"]
         elif "dlogits_stats" in aux:
             g_stats = g_stats.merge(aux["dlogits_stats"])
-        if wire_stats is not None:
-            # wire error feeds the controllers: a too-coarse wire grid
-            # raises E (-> FL up), wire clipping raises R (-> IL up).
-            if zero_opt:
-                # grads leg steers the grads controller; the params
-                # all-gather leg quantizes *weights*, so it steers the
-                # weights controller instead.
-                g_stats = g_stats.merge(g_wire)
-                w_stats = w_stats.merge(p_wire)
-            else:
-                g_stats = g_stats.merge(wire_stats)
         if qcfg.stat_scope == "last_layer" and "last_act_stats" in aux:
             a_stats = aux["last_act_stats"]
         else:
             a_stats = aux.get("act_stats", QuantStats.zero())
 
         # -- re-snap weights to the grid (Alg. 1 line 19) --
-        if qcfg.enabled and qcfg.policy.quantize_weights and not qcfg.master_weights:
+        if (qcfg.enabled and qcfg.policy.quantizes("weights")
+                and not qcfg.master_weights):
             new_params, w_stats2 = quantize_params(
                 new_params, fmts["weights"], qcfg, jax.random.fold_in(k_w, 1))
             w_stats = w_stats.merge(w_stats2)
 
-        # -- scale_precision (Alg. 2, one controller per attribute) --
-        stats = {"weights": w_stats, "acts": a_stats, "grads": g_stats}
-        new_dps = update_dps_bundle(qcfg, state.dps, stats, {"loss": loss})
+        # -- scale_precision (Alg. 2, one controller per domain) --
+        # Each wire leg feeds its own wire domain, never a compute
+        # controller: a clipped wire element must move the *wire* radix,
+        # not ratchet the compute IL (see module docstring).
+        streams = {"weights": w_stats, "acts": a_stats, "grads": g_stats}
+        if wire_stats is not None:
+            if zero_opt:
+                streams["wire_grads"] = g_wire
+                streams["wire_params"] = p_wire
+            else:
+                streams["wire_grads"] = wire_stats
+        new_dps = update_dps_bundle(qcfg, state.dps, streams, {"loss": loss})
 
-        metrics = {
-            "loss": loss,
-            "il_w": fmts["weights"].il, "fl_w": fmts["weights"].fl,
-            "il_a": fmts["acts"].il, "fl_a": fmts["acts"].fl,
-            "il_g": fmts["grads"].il, "fl_g": fmts["grads"].fl,
-            "E_w": w_stats.quant_error(), "R_w": w_stats.overflow_rate(),
-            "E_a": a_stats.quant_error(), "R_a": a_stats.overflow_rate(),
-            "E_g": g_stats.quant_error(), "R_g": g_stats.overflow_rate(),
-        }
+        # -- telemetry: ⟨IL, FL⟩ + E/R per domain (scalarized for [G]) --
+        short = {"weights": "w", "acts": "a", "grads": "g"}
+        metrics = {"loss": loss}
+        for name, spec in plan.domains:
+            fmt, tag = fmts[name], short.get(name, name)
+            scalar = (lambda x: x) if not spec.groups else jnp.mean
+            metrics[f"il_{tag}"] = scalar(fmt.il)
+            metrics[f"fl_{tag}"] = scalar(fmt.fl)
+            st = streams.get(spec.stream(name))
+            if st is not None:
+                metrics[f"E_{tag}"] = scalar(st.quant_error())
+                metrics[f"R_{tag}"] = scalar(st.overflow_rate())
         if wire_stats is not None:
             metrics["E_wire"] = wire_stats.quant_error()
             metrics["R_wire"] = wire_stats.overflow_rate()

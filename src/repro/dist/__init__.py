@@ -48,14 +48,16 @@ The knob that turns the codec into the gradient hot path::
     state, metrics = jax.jit(step)(state, batch)   # metrics["E_wire"], ...
 
 The forward/backward runs per data shard under ``shard_map`` and the
-parameter-gradient mean is computed by :func:`dps_allreduce_mean` with a
-wire format derived from the grads controller's ⟨IL, FL⟩
-(:func:`wire_format`).  The dispatch-leg :class:`QuantStats` merge into
-the grads stats the DPS controller consumes, so wire quantization error
-and wire clipping steer next step's ⟨IL, FL⟩ exactly like any other
-quantization event.  Single-device meshes degrade to the identity
-all-reduce; the CLI spelling is ``repro.launch.train
---grad-allreduce-bits 8``.
+parameter-gradient mean is computed by :func:`dps_allreduce_mean` with
+the ⟨IL, FL⟩ of the registry's dedicated **wire_grads** precision domain
+(every collective leg picks its own domain's format out of the
+``qtrain.bundle_formats`` mapping — see :func:`resolve_domain_format`).
+The dispatch-leg :class:`QuantStats` feed that wire domain's controller
+(default "flexpoint": max-abs-driven radix placement), so wire clipping
+moves the *wire* radix rather than ratcheting the compute controllers'
+IL — the instability the registry redesign fixed, see dist/README.md.
+Single-device meshes degrade to the identity all-reduce; the CLI
+spelling is ``repro.launch.train --grad-allreduce-bits 8``.
 """
 
 from repro.dist.sharding import (LogicalRules, ZeroPartitioner, axis_rules,
@@ -64,12 +66,13 @@ from repro.dist.sharding import (LogicalRules, ZeroPartitioner, axis_rules,
 from repro.dist.collectives import (dps_allgather_params, dps_allreduce_mean,
                                     dps_allreduce_mean_tree,
                                     dps_reduce_scatter_mean, psum_stats,
-                                    wire_decode, wire_encode, wire_format)
+                                    resolve_domain_format, wire_decode,
+                                    wire_encode, wire_format)
 
 __all__ = [
     "LogicalRules", "ZeroPartitioner", "axis_rules", "current_mesh_rules",
     "logical_constraint", "model_axis_size", "tree_specs",
     "dps_allgather_params", "dps_allreduce_mean", "dps_allreduce_mean_tree",
-    "dps_reduce_scatter_mean", "psum_stats",
+    "dps_reduce_scatter_mean", "psum_stats", "resolve_domain_format",
     "wire_decode", "wire_encode", "wire_format",
 ]

@@ -5,9 +5,13 @@ A fixed-point format ⟨IL, FL⟩ with IL + FL ≤ 8 puts every grid integer in
 instead of fp32 — 4× fewer bytes on the wire for the two collective legs
 of an all-reduce.  Stochastic rounding (Gupta et al., 2015) keeps both
 legs unbiased, and the same :class:`QuantStats` the DPS controllers
-consume fall out of the encode for free, so a training loop can feed its
-wire-quantization error straight into the paper's precision controller
-(see ``QuantConfig.grad_allreduce_bits`` in :mod:`repro.core.qtrain`).
+consume fall out of the encode for free, so a training loop can feed each
+leg's wire-quantization error straight into that leg's dedicated *wire
+precision domain* (``wire_grads`` / ``wire_params`` in the
+:class:`~repro.core.dps.PrecisionPlan` registry; see
+``QuantConfig.grad_allreduce_bits`` in :mod:`repro.core.qtrain`).  Every
+collective below takes the whole registry-format mapping and resolves its
+own leg's ⟨IL, FL⟩ (:func:`resolve_domain_format`).
 
 Codec backends: on TPU the encode runs as the fused Pallas
 ``dps_quant_wire`` kernel (one read-x/write-wire HBM pass, stats ride in
@@ -42,18 +46,50 @@ WIRE_BITS = 8
 
 def wire_format(fmt: FixedPointFormat, wire_bits: int = WIRE_BITS
                 ) -> FixedPointFormat:
-    """Derive the wire ⟨IL, FL⟩ from a (wider) compute format.
+    """Derive a wire ⟨IL, FL⟩ from a (wider) compute format.
 
     Keeps the radix position — IL, the overflow guard — and spends the
     remaining ``wire_bits`` on fraction: ``⟨min(IL, wire_bits - 1),
-    wire_bits - IL⟩``.  A controller that moves IL in response to wire
-    overflow therefore moves the wire radix with it.
+    wire_bits - IL⟩``.
+
+    NOTE: the training loop no longer derives its wire formats this way —
+    each wire leg's ⟨IL, FL⟩ now comes from a dedicated precision domain
+    (``wire_grads`` / ``wire_params``) in the :class:`PrecisionPlan`
+    registry, because a controller that moves IL in response to wire
+    overflow moves the wire radix with it, and under hair-trigger
+    ``r_max`` that ratchet destabilizes training (dist/README.md).  The
+    helper remains for deriving *static* wire formats in tools and tests.
     """
     if not 2 <= wire_bits <= WIRE_BITS:
         raise ValueError(f"wire_bits must be in [2, {WIRE_BITS}] for an int8 "
                          f"payload, got {wire_bits}")
     il = jnp.clip(jnp.asarray(fmt.il, jnp.int32), 1, wire_bits - 1)
     return FixedPointFormat(il, (wire_bits - il).astype(jnp.int32))
+
+
+def resolve_domain_format(formats, domain: str) -> FixedPointFormat:
+    """One collective leg's ⟨IL, FL⟩ from a precision-domain registry.
+
+    ``formats`` is either the ``{domain: FixedPointFormat}`` mapping
+    produced by ``qtrain.bundle_formats`` — the leg picks out its own
+    domain — or a bare :class:`FixedPointFormat`, used as-is (the
+    pre-registry calling convention, kept for benchmarks and direct
+    codec tests).
+    """
+    if isinstance(formats, FixedPointFormat):
+        return formats
+    try:
+        fmt = formats[domain]
+    except (KeyError, IndexError, TypeError):
+        have = sorted(formats) if hasattr(formats, "keys") else type(formats)
+        raise KeyError(
+            f"no {domain!r} format in the registry mapping (have {have}); "
+            "declare the wire domain in the PrecisionPlan or pass a "
+            "FixedPointFormat directly") from None
+    if not isinstance(fmt, FixedPointFormat):
+        raise TypeError(f"registry entry {domain!r} is {type(fmt)}, "
+                        "expected FixedPointFormat")
+    return fmt
 
 
 def _concrete_ilfl(fmt: FixedPointFormat):
@@ -192,9 +228,9 @@ def psum_stats(stats: QuantStats, axis_name) -> QuantStats:
     return QuantStats(*summed, max_abs=jax.lax.pmax(stats.max_abs, axis_name))
 
 
-def dps_allreduce_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
+def dps_allreduce_mean(x: jax.Array, formats, axis_name,
                        key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
-                       backend: str = "auto",
+                       backend: str = "auto", domain: str = "wire_grads",
                        ) -> Tuple[jax.Array, QuantStats]:
     """Mean of per-rank ``x`` over ``axis_name`` with an int8 wire format.
 
@@ -210,14 +246,17 @@ def dps_allreduce_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
     With stochastic rounding each leg's error is < one grid step (2^-FL),
     so the result is within two grid steps of the exact mean and unbiased.
 
-    ``backend`` selects the wire codec (see :func:`wire_encode`).
+    ``backend`` selects the wire codec (see :func:`wire_encode`);
+    ``formats``/``domain`` resolve the leg's ⟨IL, FL⟩ out of a
+    precision-domain registry mapping (:func:`resolve_domain_format`).
 
     Returns ``(mean, stats)``; ``stats`` describe this rank's dispatch-leg
     quantization of the |x| local elements (so ``psum_stats(stats, axis)``
-    counts each global element exactly once).  Must run inside
-    ``shard_map``; ``key`` may be identical across ranks (it is decorrelated
-    with ``axis_index`` here).
+    counts each global element exactly once) and belong to the wire
+    domain's controller.  Must run inside ``shard_map``; ``key`` may be
+    identical across ranks (it is decorrelated with ``axis_index`` here).
     """
+    fmt = resolve_domain_format(formats, domain)
     if fmt.il.ndim != 0:
         # the two legs chunk the flattened tensor per-rank, which does not
         # line up with the [G] contiguous-group layout; group-aligned
@@ -248,9 +287,10 @@ def dps_allreduce_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
     return mean, stats
 
 
-def dps_reduce_scatter_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
+def dps_reduce_scatter_mean(x: jax.Array, formats, axis_name,
                             key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
                             backend: str = "auto",
+                            domain: str = "wire_grads",
                             ) -> Tuple[jax.Array, QuantStats]:
     """Reduce-scatter mean over ``axis_name`` with the int8 wire on the
     scatter leg — the ZeRO half-collective.
@@ -276,7 +316,9 @@ def dps_reduce_scatter_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
     elements (``psum_stats(stats, axis)`` counts each global element exactly
     once).  Must run inside ``shard_map``; ``key`` may be identical across
     ranks (it is decorrelated with ``axis_index`` here).
+    ``formats``/``domain``: see :func:`resolve_domain_format`.
     """
+    fmt = resolve_domain_format(formats, domain)
     if fmt.il.ndim != 0:
         raise ValueError("dps_reduce_scatter_mean takes a global (scalar) "
                          "format; per-group formats are encode/decode-only "
@@ -295,9 +337,9 @@ def dps_reduce_scatter_mean(x: jax.Array, fmt: FixedPointFormat, axis_name,
     return shard, stats
 
 
-def dps_allgather_params(shard: jax.Array, fmt: FixedPointFormat, axis_name,
+def dps_allgather_params(shard: jax.Array, formats, axis_name,
                          key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
-                         backend: str = "auto",
+                         backend: str = "auto", domain: str = "wire_params",
                          ) -> Tuple[jax.Array, QuantStats]:
     """All-gather per-rank parameter shards with an int8 wire — the ZeRO
     return leg.
@@ -307,10 +349,11 @@ def dps_allgather_params(shard: jax.Array, fmt: FixedPointFormat, axis_name,
     int8 grid integers through a tiled ``all_gather``, and every rank
     decodes the concatenation.  Wire bytes ≈ |shard|·1 B per rank vs
     |shard|·4 B fp32.  Note the decode quantizes the *parameters* onto the
-    wire grid — derive ``fmt`` from the weights controller
-    (:func:`wire_format`) so that grid tracks the weight range, and feed the
-    returned stats back into the weights controller so wire clipping and
-    rounding error steer next step's ⟨IL, FL⟩.
+    wire grid — the leg reads the registry's ``wire_params`` domain
+    (:func:`resolve_domain_format`), whose controller tracks the weight
+    range from the stats returned here, so wire clipping and rounding
+    error steer next step's wire ⟨IL, FL⟩ without touching the compute
+    weights controller.
 
     Returns ``(full, stats)``: ``full`` is the flat ``[n · shard.size]``
     gathered vector (identical on every rank), ``stats`` cover this rank's
@@ -318,6 +361,7 @@ def dps_allgather_params(shard: jax.Array, fmt: FixedPointFormat, axis_name,
     counted exactly once).  Must run inside ``shard_map``; ``key`` may be
     identical across ranks.
     """
+    fmt = resolve_domain_format(formats, domain)
     if fmt.il.ndim != 0:
         raise ValueError("dps_allgather_params takes a global (scalar) "
                          "format; per-group formats are encode/decode-only "
@@ -330,9 +374,10 @@ def dps_allgather_params(shard: jax.Array, fmt: FixedPointFormat, axis_name,
     return wire_decode(full, fmt), stats
 
 
-def dps_allreduce_mean_tree(tree, fmt: FixedPointFormat, axis_name,
+def dps_allreduce_mean_tree(tree, formats, axis_name,
                             key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
-                            backend: str = "auto"):
+                            backend: str = "auto",
+                            domain: str = "wire_grads"):
     """:func:`dps_allreduce_mean` over a whole pytree in ONE collective pair.
 
     Leaves are flattened and concatenated into a single fp32 buffer before
@@ -340,7 +385,9 @@ def dps_allreduce_mean_tree(tree, fmt: FixedPointFormat, axis_name,
     one all_gather regardless of how many (possibly tiny) leaves the tree
     has — not 2·L launches each padded to the axis size.  Returns
     ``(mean_tree, stats)`` with every leaf cast back to its own dtype.
+    ``formats``/``domain``: see :func:`resolve_domain_format`.
     """
+    fmt = resolve_domain_format(formats, domain)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     if not leaves:
         return tree, QuantStats.zero(fmt.il.shape)

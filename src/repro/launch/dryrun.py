@@ -57,23 +57,33 @@ def _mesh_and_rules(multi_pod: bool):
     return mesh, LogicalRules()
 
 
-def _qcfg(grad_allreduce_bits=None, zero_opt_shards=None) -> qtrain.QuantConfig:
+def _qcfg(grad_allreduce_bits=None, zero_opt_shards=None,
+          wire_controller="flexpoint") -> qtrain.QuantConfig:
     return qtrain.QuantConfig(enabled=True, controller="paper",
                               grad_allreduce_bits=grad_allreduce_bits,
-                              zero_opt_shards=zero_opt_shards)
+                              zero_opt_shards=zero_opt_shards,
+                              wire_controller=wire_controller)
 
 
 def _optimizer():
     return make_optimizer(SGDConfig())
 
 
-def _compile_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
-                   grad_allreduce_bits=None, zero_opt=False):
+def _train_qcfg(mesh, grad_allreduce_bits=None, zero_opt=False,
+                wire_controller="flexpoint") -> qtrain.QuantConfig:
+    """The QuantConfig a train cell compiles under — single source for the
+    compile itself and the per-cell ``precision_domains`` report."""
     zero_shards = None
     if zero_opt:
         zero_shards = int(dict(zip(mesh.axis_names,
                                    mesh.devices.shape)).get("data", 1))
-    qcfg = _qcfg(grad_allreduce_bits, zero_shards)
+    return _qcfg(grad_allreduce_bits, zero_shards, wire_controller)
+
+
+def _compile_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                   grad_allreduce_bits=None, zero_opt=False,
+                   wire_controller="flexpoint"):
+    qcfg = _train_qcfg(mesh, grad_allreduce_bits, zero_opt, wire_controller)
     opt = _optimizer()
     # On the production meshes (model axis > 1) the compressed all-reduce
     # and ZeRO-1 fall back (with a warning) to the implicit psum /
@@ -182,6 +192,8 @@ def _probe_variants(cfg: ModelConfig):
 
 def _extract(compiled) -> Dict[str, Any]:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jaxlibs: one dict per device
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
@@ -206,7 +218,8 @@ def _extract(compiled) -> Dict[str, Any]:
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              probes: bool = True, overrides: Dict[str, Any] = None,
              grad_allreduce_bits: int = None,
-             zero_opt: bool = False) -> Dict[str, Any]:
+             zero_opt: bool = False,
+             wire_controller: str = "flexpoint") -> Dict[str, Any]:
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
@@ -217,7 +230,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         import functools
         compile_fn = functools.partial(
             _compile_train, grad_allreduce_bits=grad_allreduce_bits,
-            zero_opt=zero_opt)
+            zero_opt=zero_opt, wire_controller=wire_controller)
 
     t0 = time.time()
     lowered, compiled = compile_fn(cfg, shape, mesh, rules)
@@ -226,6 +239,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     stats["mesh"] = "multi" if multi_pod else "single"
     stats["n_devices"] = mesh.devices.size
     stats["arch"], stats["shape"], stats["kind"] = arch, shape_name, shape.kind
+    if shape.kind == "train":
+        # the precision-domain registry this cell trains under (wire
+        # domains appear exactly when the compressed sync would engage);
+        # _train_qcfg is the same derivation _compile_train compiled with
+        plan = _train_qcfg(mesh, grad_allreduce_bits, zero_opt,
+                           wire_controller).plan()
+        stats["precision_domains"] = {
+            n: {"controller": s.controller, "groups": s.groups,
+                "stats": s.stream(n)}
+            for n, s in plan.domains}
 
     if probes:
         variants, rec = _probe_variants(cfg)
@@ -264,6 +287,10 @@ def main():
                     help="compile train cells with ZeRO-1 sharded optimizer "
                          "state requested (same pure-data-parallel "
                          "engagement rule as --grad-allreduce-bits)")
+    ap.add_argument("--wire-controller", default="flexpoint",
+                    help="controller kind for the wire precision domains "
+                         "(wire_grads/wire_params) of compressed train "
+                         "cells")
     ap.add_argument("--out", default=RESULTS_DIR)
     args = ap.parse_args()
 
@@ -295,7 +322,8 @@ def main():
             stats = run_cell(arch, sh, mp,
                              probes=not args.no_probes and not mp,
                              grad_allreduce_bits=args.grad_allreduce_bits,
-                             zero_opt=args.zero_opt)
+                             zero_opt=args.zero_opt,
+                             wire_controller=args.wire_controller)
             with open(out_path, "w") as f:
                 json.dump(stats, f, indent=1)
             print(f"  ok: flops={stats['flops']:.3e} "

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.configs.base import get_config, smoke as smoke_cfg
 from repro.core import fixed_point as fxp
+from repro.core.dps import DomainSpec, DPSHyper, PrecisionPlan
 from repro.launch import specs as specs_lib
 from repro.models import registry
 from repro.models.common import init_params
@@ -36,6 +37,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--quant-kv", action="store_true")
+    ap.add_argument("--kv-format", default="8,8",
+                    help="IL,FL of the kv_cache precision domain used by "
+                         "--quant-kv (static controller; <8,8> halves "
+                         "cache HBM)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -63,7 +68,17 @@ def main(argv=None):
         lambda p, t: mod.prefill(cfg, p, t, max_seq, **extras))(params, prompts)
     t_prefill = time.time() - t0
 
-    qfmt = fxp.FixedPointFormat.create(8, 8)
+    # serving-side precision domain: the KV cache runs its own registry
+    # entry (static by default — serving has no train-step feedback loop to
+    # drive a dynamic controller; swap the kind here if one appears).
+    kv_il, kv_fl = (int(t) for t in args.kv_format.split(","))
+    plan = PrecisionPlan.of(kv_cache=DomainSpec(
+        "static", DPSHyper(il_init=kv_il, fl_init=kv_fl)))
+    kv_bundle = plan.init()
+    qfmt = plan.formats(kv_bundle)["kv_cache"]
+    if args.quant_kv:
+        print(f"kv_cache domain: {plan.spec('kv_cache').controller} "
+              f"<{kv_il},{kv_fl}>")
 
     @jax.jit
     def step(params, tok, cache, pos, key):

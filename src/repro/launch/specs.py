@@ -111,6 +111,8 @@ def train_state_shardings(cfg: ModelConfig, mesh: Mesh, rules: LogicalRules,
             _abstract_opt_state(aparams, optimizer, qcfg, mesh))
     else:
         opt_shards = opt_state_shardings(optimizer, p_shards)
+    # the DPS registry (DpsBundle over the plan's domains, wire domains
+    # included when declared) is replicated scalar state on every device
     dps_template = qtrain.init_dps_bundle(qcfg)
     dps_shards = jax.tree.map(lambda _: repl, dps_template)
     return qtrain.TrainState(

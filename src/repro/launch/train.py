@@ -75,7 +75,16 @@ def main(argv=None):
                     help="compress the gradient all-reduce to an int8 wire "
                          "of this many grid bits (2-8); builds a data-axis "
                          "mesh over all local devices and feeds the wire "
-                         "QuantStats into the grads DPS controller")
+                         "QuantStats into the dedicated wire_grads DPS "
+                         "domain")
+    ap.add_argument("--wire-controller",
+                    default=os.environ.get("REPRO_WIRE_CONTROLLER")
+                    or "flexpoint",
+                    help="DPS controller kind for the wire precision "
+                         "domains (wire_grads/wire_params); 'flexpoint' "
+                         "(default) drives the wire radix from max|x|, "
+                         "immune to the hair-trigger r_max IL ratchet "
+                         "(see dist/README.md)")
     ap.add_argument("--zero-opt", action="store_true",
                     help="ZeRO-1: shard the optimizer state across the "
                          "data axis (flat padded layout, 1/n state bytes "
@@ -101,7 +110,8 @@ def main(argv=None):
                               controller=args.controller
                               if args.controller != "off" else "paper",
                               grad_allreduce_bits=args.grad_allreduce_bits,
-                              zero_opt_shards=zero_shards)
+                              zero_opt_shards=zero_shards,
+                              wire_controller=args.wire_controller)
     opt_cfg = (AdamWConfig(total_steps=args.steps) if args.optimizer == "adamw"
                else SGDConfig())
     mesh = None
@@ -124,7 +134,10 @@ def main(argv=None):
     if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         start = latest_step(args.ckpt_dir)
         template = specs_lib.abstract_train_state(cfg, opt, qcfg, mesh=mesh)
-        state, meta = restore(args.ckpt_dir, start, template)
+        # legacy checkpoints carry only the three-key compute DPS bundle;
+        # domains the plan adds (e.g. wire_grads/wire_params) init fresh.
+        state, meta = restore(args.ckpt_dir, start, template,
+                              defaults=qtrain.dps_restore_defaults(qcfg))
         print(f"resumed from step {start} (data cursor {meta.get('cursor')})")
     else:
         params = init_params(jax.random.key(args.seed), mod.model_defs(cfg))
@@ -157,10 +170,18 @@ def main(argv=None):
                     "(straggler watchdog)")
             history.append(metrics)
             if step % args.log_every == 0 or step == args.steps - 1:
+                # wire precision domains log alongside the compute triple
+                wire = "".join(
+                    f"{tag}<{metrics[f'il_{dom}']:.0f},"
+                    f"{metrics[f'fl_{dom}']:.0f}> "
+                    for tag, dom in (("wg", "wire_grads"),
+                                     ("wp", "wire_params"))
+                    if f"il_{dom}" in metrics)
                 print(f"step {step:5d} loss {metrics['loss']:8.4f} "
                       f"w<{metrics['il_w']:.0f},{metrics['fl_w']:.0f}> "
                       f"a<{metrics['il_a']:.0f},{metrics['fl_a']:.0f}> "
                       f"g<{metrics['il_g']:.0f},{metrics['fl_g']:.0f}> "
+                      f"{wire}"
                       f"E_a {metrics['E_a']:.2e} R_a {metrics['R_a']:.2e}",
                       flush=True)
             if ckpt and (step + 1) % args.ckpt_every == 0:

@@ -129,6 +129,12 @@ class AdamWConfig:
 
 
 class SGD:
+    # precision domain whose ⟨IL, FL⟩ quantizes this optimizer's input
+    # gradients (Alg. 1 line 17); the train step looks the format up in its
+    # PrecisionPlan registry, so an optimizer wanting a dedicated
+    # optimizer-input domain only has to name one here.
+    grad_domain = "grads"
+
     def __init__(self, cfg: SGDConfig):
         self.cfg = cfg
         self.sched = (inv_decay(cfg.lr, cfg.gamma, cfg.power)
@@ -203,6 +209,8 @@ class SGD:
 
 
 class AdamW:
+    grad_domain = "grads"   # see SGD.grad_domain
+
     def __init__(self, cfg: AdamWConfig):
         self.cfg = cfg
         self.sched = cosine_schedule(cfg.lr, cfg.warmup, cfg.total_steps)

@@ -15,6 +15,11 @@ Covers the ISSUE-3 acceptance criteria:
       parsed from compiled HLO via ``hlo_stats.collective_wire_bytes``),
   (d) the ZeroPartitioner's padded flat layout round-trips non-divisible
       leaves through a real scatter/step/gather cycle on an 8-rank mesh.
+
+``REPRO_WIRE_CONTROLLER`` pins the wire domains' controller kind for the
+fused wire tests (CI's dist-wire-ctrl leg sets ``flexpoint``); the wire
+formats they assert on are initial-step formats fixed by ``wire_hyper``'s
+``il_init``, so any kind satisfies them.
 """
 
 import os
@@ -95,6 +100,7 @@ def test_zero_wire8_update_within_two_grid_steps():
     (grads reduce-scatter on the ⟨6,2⟩ grid, params all-gather on the ⟨2,6⟩
     grid) bound the parameter perturbation element-wise."""
     run_with_devices("""
+        import os
         import jax, jax.numpy as jnp
         from repro.core import qtrain
         from repro.core.dps import DPSHyper
@@ -102,12 +108,15 @@ def test_zero_wire8_update_within_two_grid_steps():
         from repro.optim import SGDConfig, make_optimizer
 
         mesh = jax.make_mesh((8,), ("data",))
-        # static formats: grads <6,2> (range +-32 covers init grads),
-        # weights <2,14> -> params wire format <2,6> (range +-2 covers
-        # LeNet init weights, grid 2^-6)
+        # static compute formats: grads <6,2> (range +-32 covers init
+        # grads), weights <2,14>; the wire domains' initial formats are
+        # <6,2> / <2,6> from wire_hyper's il_init regardless of kind
+        # (the subprocess inherits REPRO_WIRE_CONTROLLER from CI)
         base = dict(enabled=False, controller="static",
                     hyper_grads=DPSHyper(il_init=6, fl_init=2),
-                    hyper_weights=DPSHyper(il_init=2, fl_init=14))
+                    hyper_weights=DPSHyper(il_init=2, fl_init=14),
+                    wire_controller=os.environ.get("REPRO_WIRE_CONTROLLER")
+                    or "flexpoint")
         qcfg0 = qtrain.QuantConfig(**base)
         qcfgz = qtrain.QuantConfig(**base, grad_allreduce_bits=8,
                                    zero_opt_shards=8)
@@ -145,6 +154,7 @@ def test_zero_wire8_update_within_two_grid_steps():
 def test_zero_wire_bytes_le_quarter_fp32_reduce_scatter():
     """(c): the acceptance wire-byte criterion, measured HLO vs measured HLO."""
     run_with_devices("""
+        import os
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.core import qtrain
@@ -156,7 +166,10 @@ def test_zero_wire_bytes_le_quarter_fp32_reduce_scatter():
         mesh = jax.make_mesh((8,), ("data",))
         qcfgz = qtrain.QuantConfig(enabled=False, controller="static",
                                    hyper_grads=DPSHyper(il_init=6, fl_init=2),
-                                   grad_allreduce_bits=8, zero_opt_shards=8)
+                                   grad_allreduce_bits=8, zero_opt_shards=8,
+                                   wire_controller=os.environ.get(
+                                       "REPRO_WIRE_CONTROLLER")
+                                   or "flexpoint")
         opt = make_optimizer(SGDConfig())
         params = lenet.init(jax.random.key(0))
         batch = {"images": jnp.zeros((64, 28, 28, 1)),
