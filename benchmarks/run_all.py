@@ -1,0 +1,109 @@
+"""Benchmark driver that persists a repo-root perf artifact per PR.
+
+Runs the benchmark suites (all of them, or ``--collectives-only`` for the
+wire-pipeline subset) and emits ``BENCH_collectives.json`` at the repo
+root with a **stable schema** — a small, flat summary of the collective
+wire pipeline's perf counters, meant to be committed so the trajectory
+(wire ratios, grouped-kernel overhead, fused-receive traffic model, tree
+flat-concat bytes) is diffable across PRs.  The full raw payloads stay in
+``results/bench/*.json`` as before; this file only carries the numbers a
+reviewer should watch, under keys that do not churn.
+
+  PYTHONPATH=src python -m benchmarks.run_all --collectives-only
+  BENCH_QUICK=0 PYTHONPATH=src python -m benchmarks.run_all   # full scale
+"""
+
+from __future__ import annotations
+
+import os
+
+# standalone entry point: force the 8-way host platform before JAX
+# initializes, exactly like benchmarks.bench_collectives standalone.
+if __name__ == "__main__" and "jax" not in __import__("sys").modules:
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+ARTIFACT = os.path.join(REPO_ROOT, "BENCH_collectives.json")
+
+# bump ONLY when a key is renamed/removed; adding keys is schema-compatible
+SCHEMA_VERSION = 1
+
+
+def collectives_summary(res: dict) -> dict:
+    """The stable cross-PR schema, derived from bench_collectives' payload."""
+    per = res.get("per_variant", {})
+    tree = res.get("tree_allreduce", {})
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "quick_mode": os.environ.get("BENCH_QUICK", "1") != "0",
+        "n_devices": res.get("n_devices"),
+        "elements_per_rank": res.get("elements_per_rank"),
+        "wire_groups": res.get("wire_groups"),
+        "group_quantum": res.get("group_quantum"),
+        "wire_ratio_int8_over_fp32": res.get("wire_ratio_int8_over_fp32"),
+        "grouped_wire_ratio_int8_over_fp32":
+            res.get("grouped_wire_ratio_int8_over_fp32"),
+        "grouped_kernel_walltime_over_global_kernel":
+            res.get("grouped_kernel_walltime_over_global_kernel"),
+        "ms_per_step": {k: v.get("ms_per_step") for k, v in per.items()},
+        "hbm_model_bytes_per_rank": {
+            k: v.get("hbm_model_bytes_per_rank") for k, v in per.items()},
+        "tree_f32_concat_bytes": {
+            k: v.get("f32_concat_bytes") for k, v in tree.items()},
+        "codecs_bitexact": res.get("codecs_bitexact"),
+        "grouped_codecs_bitexact": res.get("grouped_codecs_bitexact"),
+        "claims": res.get("claims", {}),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--collectives-only", action="store_true",
+                    help="run only the wire-pipeline benchmark (the one "
+                         "that feeds BENCH_collectives.json)")
+    ap.add_argument("--out", default=ARTIFACT)
+    args = ap.parse_args(argv)
+
+    import jax  # noqa: F401  (device count fixed by the XLA flag above)
+    from benchmarks import bench_collectives
+
+    failures = []
+    res = bench_collectives.run()
+    if res.get("skipped"):
+        print("collectives benchmark skipped:", res.get("note"))
+        return 1
+    claims = res.get("claims", {})
+    if not all(claims.values()):
+        failures.append(("collectives", claims))
+
+    with open(args.out, "w") as f:
+        json.dump(collectives_summary(res), f, indent=1, default=float,
+                  sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+    if not args.collectives_only:
+        # the remaining suites keep their own results/bench artifacts
+        from benchmarks import run as run_mod
+        try:
+            run_mod.main()
+        except SystemExit as e:
+            if e.code:
+                failures.append(("benchmarks.run", e.code))
+
+    if failures:
+        print("\nFAILED CLAIMS/SUITES:")
+        for n, c in failures:
+            print(" -", n, c)
+        return 1
+    print("\nall benchmark claims hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

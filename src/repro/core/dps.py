@@ -338,6 +338,12 @@ def wire_hyper(wire_bits: int, il_init: int, slack: float = 1.0) -> DPSHyper:
     elements under one grid step and destabilizes training) — while
     *parameters* are concentrated near their max and biased by clipping,
     so they want the classic positive headroom.
+
+    Under a per-layer wire domain (``groups = G``) the same hyper governs
+    every row: each layer's controller places its own radix from its own
+    ``max|g|`` stream, so the slack is per-tensor-class while the radix is
+    per-layer — the spread across rows is the measured octave spread of
+    the per-layer gradient ranges.
     """
     il0 = min(max(il_init, 1), wire_bits)
     return DPSHyper(il_min=1, il_max=wire_bits, fl_min=0,
@@ -356,9 +362,13 @@ class DomainSpec:
 
     ``stats`` names the :class:`QuantStats` stream that feeds this domain's
     controller (empty = the domain's own name).  ``groups`` > 0 declares a
-    per-group ``[G]`` controller state — the format feeds the per-group jnp
-    wire codec (:func:`repro.dist.collectives.wire_encode`); 0 is the global
-    scalar case.  Hashable, so a plan can sit in a jit closure.
+    per-group ``[G]`` controller state — one ⟨IL, FL⟩ per group, the
+    ``[G, 2]`` format table the group-aligned collectives and the grouped
+    Pallas wire kernel consume (see :mod:`repro.dist.collectives`); a
+    ``[G]`` stats stream updates each group's row independently (the
+    per-layer wire regime: ``QuantConfig.with_per_layer_wire``), while a
+    scalar stream broadcasts.  0 is the global scalar case.  Hashable, so
+    a plan can sit in a jit closure.
     """
 
     controller: str = "paper"

@@ -83,6 +83,16 @@ class QuantConfig:
     wire_controller: str = "flexpoint"
     hyper_wire_grads: Optional[dps_lib.DPSHyper] = None   # None -> derived
     hyper_wire_params: Optional[dps_lib.DPSHyper] = None  # None -> derived
+    # Per-LAYER wire formats: 0 = one global wire ⟨IL, FL⟩ (scalar state);
+    # G > 0 gives the ``wire_grads`` domain a [G] controller state — one
+    # ⟨IL, FL⟩ per gradient-tree leaf, fed group-wise by the collective's
+    # [G] wire stats and handed to the group-aligned collectives as the
+    # [G, 2] kernel format table.  G must equal the grad tree's leaf count
+    # when the compressed sync engages (``make_train_step`` checks);
+    # ``with_per_layer_wire`` derives it from a params tree.  Per-layer
+    # groups need the tree schedule, so they are mutually exclusive with
+    # ``zero_opt_shards`` (the ZeRO flat layout erases leaf boundaries).
+    wire_grads_groups: int = 0
     # Full custom registry: overrides the standard five-domain plan built
     # from the fields above.
     precision_plan: Optional[PrecisionPlan] = None
@@ -131,16 +141,29 @@ class QuantConfig:
             # (slack -2: clip the rare tail, keep grid resolution);
             # parameters are O(1), concentrated, and bias under clipping,
             # so their radix covers the max with headroom (slack +1).
+            # wire_grads_groups > 0 turns the domain per-layer: a [G]
+            # controller state driving the [G, 2] kernel format table.
             domains.append(("wire_grads", DomainSpec(
                 self.wire_controller,
                 self.hyper_wire_grads
-                or dps_lib.wire_hyper(wb, il_init=6, slack=-2.0))))
+                or dps_lib.wire_hyper(wb, il_init=6, slack=-2.0),
+                groups=self.wire_grads_groups)))
             if self.zero_opt_shards is not None:
                 domains.append(("wire_params", DomainSpec(
                     self.wire_controller,
                     self.hyper_wire_params
                     or dps_lib.wire_hyper(wb, il_init=2, slack=1.0))))
         return PrecisionPlan(tuple(domains))
+
+    def with_per_layer_wire(self, params) -> "QuantConfig":
+        """This config with one ``wire_grads`` format per leaf of
+        ``params`` (a concrete or abstract tree) — the per-layer wire
+        regime the group-aligned collectives run at kernel speed.  A
+        no-op unless ``grad_allreduce_bits`` is set."""
+        if self.grad_allreduce_bits is None or self.precision_plan is not None:
+            return self
+        return dataclasses.replace(
+            self, wire_grads_groups=len(jax.tree_util.tree_leaves(params)))
 
 
 def init_dps_bundle(qcfg: QuantConfig) -> DpsBundle:
@@ -414,6 +437,14 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             "grad_allreduce_bits engages the compressed gradient sync but "
             f"the precision plan ({plan.names}) declares no 'wire_grads' "
             "domain to govern the wire format")
+    wire_groups = plan.spec("wire_grads").groups if "wire_grads" in plan else 0
+    if wire_groups and zero_opt:
+        raise ValueError(
+            f"per-layer wire formats (wire_grads groups={wire_groups}) need "
+            "the tree all-reduce schedule, but zero_opt_shards flattens the "
+            "tree into the ZeroPartitioner layout, which erases leaf "
+            "boundaries — use a global wire format (wire_grads_groups=0) "
+            "under ZeRO-1")
     if wire_sync and zero_opt and "wire_params" not in plan:
         raise ValueError(
             "zero_opt_shards + grad_allreduce_bits put the parameter "
@@ -491,6 +522,14 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             rank = jax.lax.axis_index(data_axis)
             (loss, aux), grads = _accum_grads(
                 qparams, batch, fmts, jax.random.fold_in(k_a, rank))
+            if wire_groups:
+                n_leaves = len(jax.tree_util.tree_leaves(grads))
+                if n_leaves != wire_groups:
+                    raise ValueError(
+                        f"wire_grads_groups={wire_groups} but the gradient "
+                        f"tree has {n_leaves} leaves; per-layer wire formats "
+                        "need one group per leaf (derive the config with "
+                        "QuantConfig.with_per_layer_wire(params))")
             g_raw = _raw_grad_stats(grads, fmts, k_g, rank)
             grads, wstats = collectives.dps_allreduce_mean_tree(
                 grads, fmts, data_axis, k_r, mode=rounding,
@@ -701,7 +740,9 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 streams["wire_grads"] = wire_stats
         new_dps = update_dps_bundle(qcfg, state.dps, streams, {"loss": loss})
 
-        # -- telemetry: ⟨IL, FL⟩ + E/R per domain (scalarized for [G]) --
+        # -- telemetry: ⟨IL, FL⟩ + E/R per domain (scalarized for [G];
+        # grouped domains also report the per-group spread so per-layer
+        # wire formats are visible in the train log) --
         short = {"weights": "w", "acts": "a", "grads": "g"}
         metrics = {"loss": loss}
         for name, spec in plan.domains:
@@ -709,13 +750,25 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             scalar = (lambda x: x) if not spec.groups else jnp.mean
             metrics[f"il_{tag}"] = scalar(fmt.il)
             metrics[f"fl_{tag}"] = scalar(fmt.fl)
+            if spec.groups:
+                metrics[f"il_{tag}_min"] = jnp.min(fmt.il)
+                metrics[f"il_{tag}_max"] = jnp.max(fmt.il)
+                metrics[f"fl_{tag}_min"] = jnp.min(fmt.fl)
+                metrics[f"fl_{tag}_max"] = jnp.max(fmt.fl)
             st = streams.get(spec.stream(name))
             if st is not None:
                 metrics[f"E_{tag}"] = scalar(st.quant_error())
                 metrics[f"R_{tag}"] = scalar(st.overflow_rate())
         if wire_stats is not None:
-            metrics["E_wire"] = wire_stats.quant_error()
-            metrics["R_wire"] = wire_stats.overflow_rate()
+            ws = wire_stats
+            if ws.count.ndim:          # [G] per-layer stats -> global view
+                ws = QuantStats(*(jnp.sum(f) for f in
+                                  (ws.count, ws.nonzero, ws.overflow,
+                                   ws.abs_err_sum, ws.rel_err_sum,
+                                   ws.abs_sum)),
+                                max_abs=jnp.max(ws.max_abs))
+            metrics["E_wire"] = ws.quant_error()
+            metrics["R_wire"] = ws.overflow_rate()
         new_state = TrainState(
             step=state.step + 1, params=new_params, opt_state=opt_state,
             dps=new_dps, rng=state.rng, last_loss=loss.astype(jnp.float32))

@@ -20,9 +20,17 @@ SMEM); elsewhere it runs as plain jnp ops.  ``backend="auto"`` picks per
 ``repro.kernels.ref.dps_quant_wire_ref``.
 
 Formats may be **per-group**: an ⟨IL, FL⟩ of shape ``[G]`` splits the
-flattened tensor into G contiguous chunks (per-layer groups — the grads
-DPS controller state is the natural producer) and returns ``[G]``-shaped
-:class:`QuantStats`.  A scalar format (the default) is the global case.
+flattened tensor into G contiguous chunks — equal ``ceil(size / G)``
+chunks by default, or explicit per-layer ``group_sizes`` (the grads DPS
+controller's per-leaf state is the natural producer) — and returns
+``[G]``-shaped :class:`QuantStats`.  A scalar format (the default) is the
+global case.  The collectives run ``[G]`` formats through BOTH legs at
+kernel speed via the **group-aligned layout** (:class:`GroupLayout`):
+every group zero-padded to a multiple of the kernel's tile ``quantum``,
+the whole buffer padded to rank-divisible tile-aligned chunks, so one
+fused kernel launch encodes all G formats (``[G, 2]`` SMEM table) and
+the receive leg's fused ``dps_wire_reduce`` decodes + means the int8
+payload without an fp32 ``(n, chunk)`` intermediate in HBM.
 
 All collective functions here are written for ``shard_map`` bodies: they
 take an ``axis_name`` and use raw ``lax`` collectives.
@@ -30,6 +38,7 @@ take an ``axis_name`` and use raw ``lax`` collectives.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -42,6 +51,14 @@ from repro.core.fixed_point import (FixedPointFormat, QuantStats,
 
 # int8 wire capacity: IL + FL beyond this saturates grid integers.
 WIRE_BITS = 8
+
+# Elements per grouped-kernel grid tile: the group-aligned layout pads every
+# group to a multiple of this (and rank chunks to tile multiples), so a tile
+# never straddles groups.  Must be a multiple of
+# ``repro.kernels.dps_quant.MIN_GROUP_QUANTUM`` (= 32·128, the minimum int8
+# TPU tile); bigger quanta trade padding overhead for fewer grid steps —
+# benchmarks pass a larger one for multi-MiB tensors.
+WIRE_GROUP_QUANTUM = 4096
 
 
 def wire_format(fmt: FixedPointFormat, wire_bits: int = WIRE_BITS
@@ -124,6 +141,130 @@ def _group_layout(size: int, groups: int) -> Tuple[int, int]:
     return chunk, groups * chunk - size
 
 
+def _equal_group_sizes(size: int, groups: int) -> Tuple[int, ...]:
+    """The default [G] split: equal ``ceil(size / G)`` contiguous chunks
+    (the last possibly short or empty)."""
+    chunk = -(-size // groups)
+    return tuple(max(0, min(chunk, size - g * chunk)) for g in range(groups))
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupLayout:
+    """Static group-aligned flat layout shared by kernels and collectives.
+
+    Group ``g``'s payload occupies ``[offsets[g], offsets[g] +
+    group_sizes[g])`` of the aligned buffer; the slot is padded to a
+    multiple of ``quantum`` (one grouped-kernel grid tile), so a tile
+    never straddles groups.  The buffer is then padded to ``n_chunks``
+    equal, tile-aligned ``chunk``-element rank chunks (``total = n_chunks
+    · chunk``), so an ``all_to_all``/``all_gather`` boundary always falls
+    on a tile boundary and every tile's format is resolvable from the
+    ``[G, 2]`` table through :meth:`tile_groups`.  All fields are Python
+    ints — the layout is part of the jit closure, never traced.
+    """
+
+    group_sizes: Tuple[int, ...]
+    quantum: int
+    n_chunks: int
+    padded: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    chunk: int
+    total: int
+
+    @property
+    def size(self) -> int:
+        return sum(self.group_sizes)
+
+    @property
+    def tiles(self) -> int:
+        return self.total // self.quantum
+
+    @property
+    def is_exact(self) -> bool:
+        """True when every group already sits at its aligned offset and no
+        tail padding exists — align/dealign are then identities (layer
+        sizes that are quantum multiples, the common big-model case)."""
+        return self.total == self.size and all(
+            p == s for p, s in zip(self.padded, self.group_sizes))
+
+    def tile_groups(self) -> np.ndarray:
+        """int32 ``[tiles]`` tile → group row (tail padding reads row 0,
+        which the mask keeps out of wire bytes and statistics)."""
+        out = np.zeros((self.tiles,), np.int32)
+        for g, (off, pad) in enumerate(zip(self.offsets, self.padded)):
+            out[off // self.quantum:(off + pad) // self.quantum] = g
+        return out
+
+    def mask(self) -> np.ndarray:
+        """float32 ``[total]`` validity (1 on payload, 0 on padding)."""
+        out = np.zeros((self.total,), np.float32)
+        for g, (off, size) in enumerate(zip(self.offsets, self.group_sizes)):
+            out[off:off + size] = 1.0
+        return out
+
+    def align(self, flat: jax.Array) -> jax.Array:
+        """Contiguous ``[size]`` payload → aligned ``[total]`` buffer
+        (padding zero-filled; the no-op copy is skipped when the layout
+        is already exact)."""
+        if self.is_exact:
+            return flat
+        out = jnp.zeros((self.total,), flat.dtype)
+        off_in = 0
+        for off, size in zip(self.offsets, self.group_sizes):
+            if size:
+                out = jax.lax.dynamic_update_slice(
+                    out, flat[off_in:off_in + size], (off,))
+            off_in += size
+        return out
+
+    def dealign(self, aligned: jax.Array) -> jax.Array:
+        """Aligned ``[total]`` buffer → contiguous ``[size]`` payload."""
+        if self.is_exact:
+            return aligned
+        parts = [aligned[off:off + size]
+                 for off, size in zip(self.offsets, self.group_sizes) if size]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def group_layout(group_sizes, n_chunks: int = 1,
+                 quantum: int = WIRE_GROUP_QUANTUM) -> GroupLayout:
+    """Build the group-aligned layout for ``group_sizes`` payload groups
+    split across ``n_chunks`` ranks."""
+    sizes = tuple(int(s) for s in group_sizes)
+    if any(s < 0 for s in sizes):
+        raise ValueError(f"negative group size in {sizes}")
+    padded = tuple(-(-s // quantum) * quantum for s in sizes)
+    offsets, off = [], 0
+    for p in padded:
+        offsets.append(off)
+        off += p
+    chunk = quantum * -(-off // (n_chunks * quantum)) if off else quantum
+    return GroupLayout(group_sizes=sizes, quantum=quantum, n_chunks=n_chunks,
+                       padded=padded, offsets=tuple(offsets), chunk=chunk,
+                       total=chunk * n_chunks)
+
+
+def _group_ids(group_sizes) -> np.ndarray:
+    """int32 per-element group id for a contiguous (unaligned) split."""
+    return np.repeat(np.arange(len(group_sizes), dtype=np.int32),
+                     np.asarray(group_sizes, np.int64))
+
+
+def _check_group_sizes(fmt: FixedPointFormat, group_sizes, total: int,
+                       what: str = "x.size"):
+    """``group_sizes`` (when given) must have one entry per format-table
+    row and sum to the payload size — a mismatched table would otherwise
+    be consumed silently with wrong formats (or, on the kernel path, read
+    past the [G, 2] SMEM table)."""
+    if group_sizes is None:
+        return
+    groups = fmt.il.shape[0]
+    if len(group_sizes) != groups or sum(group_sizes) != total:
+        raise ValueError(
+            f"group_sizes {tuple(group_sizes)} must have {groups} entries "
+            f"(one per format-table row) summing to {what} = {total}")
+
+
 def _resolve_backend(backend: str) -> str:
     if backend == "auto":
         return "kernel" if jax.default_backend() == "tpu" else "jnp"
@@ -133,12 +274,121 @@ def _resolve_backend(backend: str) -> str:
     return backend
 
 
+def _segment_stats(s: QuantStats, ids, groups: int) -> QuantStats:
+    """Per-tile/per-element QuantStats → ``[G]`` rows via segment reduce."""
+    seg = lambda v: jax.ops.segment_sum(v, ids, num_segments=groups)
+    return QuantStats(
+        count=seg(s.count), nonzero=seg(s.nonzero), overflow=seg(s.overflow),
+        abs_err_sum=seg(s.abs_err_sum), rel_err_sum=seg(s.rel_err_sum),
+        abs_sum=seg(s.abs_sum),
+        max_abs=jnp.maximum(
+            jax.ops.segment_max(s.max_abs, ids, num_segments=groups), 0.0))
+
+
+def _encode_aligned(x_al: jax.Array, fmt: FixedPointFormat, tile_group,
+                    mask, *, bits=None, key=None, mode: str,
+                    backend: str, quantum: int, compute_stats: bool = True):
+    """Grouped wire encode of a group-aligned ``[total]`` buffer.
+
+    One fused kernel launch on the ``kernel`` backend (``[G, 2]`` SMEM
+    table, ``[G, N_STATS]`` accumulator); per-tile ``wire_quantize`` plus
+    a segment reduction on ``jnp`` — bit-exact wire bytes either way.
+    Returns ``(wire int8 [total], [G]-shaped stats | None)``.
+    """
+    stochastic = mode == ROUND_STOCHASTIC
+    if stochastic and bits is None:
+        if key is None:
+            raise ValueError("stochastic rounding needs `bits` or `key`")
+        bits = jax.random.bits(key, shape=(x_al.size,), dtype=jnp.uint32)
+    if backend == "kernel":
+        from repro.kernels import ops
+        return ops.dps_quantize_wire_grouped(
+            x_al, fmt, tile_group,
+            bits=bits if stochastic else None, mask=mask,
+            stochastic=stochastic, quantum=quantum,
+            compute_stats=compute_stats)
+    tiles = x_al.size // quantum
+    tg = jnp.asarray(tile_group, jnp.int32)
+    fmt_t = FixedPointFormat(fmt.il[tg], fmt.fl[tg])
+    wire, s = wire_quantize(
+        x_al.reshape(tiles, quantum), fmt_t, mode=mode,
+        bits=bits.reshape(tiles, quantum) if bits is not None else None,
+        compute_stats=compute_stats,
+        mask=mask.reshape(tiles, quantum) if mask is not None else None)
+    stats = (_segment_stats(s, tg, fmt.il.shape[0]) if compute_stats
+             else None)
+    return wire.reshape(-1), stats
+
+
+def _wire_reduce(wire: jax.Array, fmt: FixedPointFormat, tile_group,
+                 *, backend: str, quantum: int) -> jax.Array:
+    """Receive leg: ``(n, chunk)`` int8 → fp32 ``[chunk]`` mean.
+
+    The ``kernel`` backend runs the fused ``dps_wire_reduce`` (no fp32
+    ``(n, chunk)`` intermediate in HBM); ``jnp`` decodes per tile and
+    means.  Every decoded value is an exact fp32 multiple of its group's
+    ``2^-FL`` and the sums stay inside the fp32 mantissa, so both
+    backends produce bit-identical means.
+    """
+    n = wire.shape[0]
+    if backend == "kernel":
+        from repro.kernels import ops
+        return ops.dps_wire_reduce(wire, fmt, tile_group, quantum=quantum)
+    if fmt.il.ndim == 0:
+        return wire_decode(wire, fmt).sum(axis=0) / n
+    tiles = wire.shape[1] // quantum
+    inv = exp2_int(-fmt.fl)[jnp.asarray(tile_group, jnp.int32)]
+    dec = wire.reshape(n, tiles, quantum).astype(jnp.float32) * inv[None, :,
+                                                                    None]
+    return (dec.sum(axis=0) / n).reshape(-1)
+
+
+def _decode_aligned(wire_al: jax.Array, fmt: FixedPointFormat, tile_group,
+                    quantum: int, dtype=jnp.float32) -> jax.Array:
+    """Aligned ``[total]`` int8 → values, per-tile FL from the table."""
+    tiles = wire_al.size // quantum
+    inv = exp2_int(-fmt.fl)[jnp.asarray(tile_group, jnp.int32)]
+    dec = wire_al.reshape(tiles, quantum).astype(jnp.float32) * inv[:, None]
+    return dec.reshape(-1).astype(dtype)
+
+
+def _encode_elementwise(x: jax.Array, fmt: FixedPointFormat, elem_group,
+                        *, bits=None, key=None, mode: str,
+                        compute_stats: bool = True):
+    """Grouped encode with per-ELEMENT group ids (no alignment assumed).
+
+    The layout-agnostic jnp path for unequal ``group_sizes`` and for
+    collectives whose chunk layout is owned by the caller (the ZeRO
+    halves): formats are gathered per element, stats segment-reduce into
+    ``[G]`` rows.  Wire bytes are bit-identical to the aligned kernel
+    path (same elementwise math, same rounding bits per element).  The
+    per-element stat terms exist only as fusion inputs to the segment
+    reductions under jit (XLA fuses the elementwise producers into the
+    scatter-adds); this is the correctness-grade grouped path — the hot
+    paths run :func:`_encode_aligned`'s tile-granular reduction instead.
+    """
+    gid = jnp.asarray(elem_group, jnp.int32)
+    fmt_e = FixedPointFormat(fmt.il[gid], fmt.fl[gid])
+    if mode == ROUND_STOCHASTIC and bits is None:
+        if key is None:
+            raise ValueError("stochastic rounding needs `bits` or `key`")
+        bits = jax.random.bits(key, shape=(x.size,), dtype=jnp.uint32)
+    wire, s = wire_quantize(x.reshape(-1), fmt_e, mode=mode,
+                            bits=bits.reshape(-1) if bits is not None
+                            else None,
+                            compute_stats=compute_stats)
+    stats = (_segment_stats(s, gid, fmt.il.shape[0]) if compute_stats
+             else None)
+    return wire, stats
+
+
 def wire_encode(x: jax.Array, fmt: FixedPointFormat, *,
                 key: Optional[jax.Array] = None,
                 bits: Optional[jax.Array] = None,
                 mode: str = ROUND_STOCHASTIC,
                 compute_stats: bool = True,
                 backend: str = "auto",
+                group_sizes: Optional[Tuple[int, ...]] = None,
                 ) -> Tuple[jax.Array, Optional[QuantStats]]:
     """Quantize ``x`` onto the ⟨IL, FL⟩ grid and emit int8 grid integers.
 
@@ -148,12 +398,16 @@ def wire_encode(x: jax.Array, fmt: FixedPointFormat, *,
     rounding noise deterministically; ``key`` draws it.
 
     Per-group formats (``fmt.il.shape == [G]``): the flattened ``x`` is
-    split into G contiguous chunks of ``ceil(x.size / G)`` elements (the
-    last chunk may be short) and chunk g is encoded with ⟨IL[g], FL[g]⟩;
-    stats come back with shape ``[G]``.  The round-trip is element-exact
-    with G independent global-format calls on the chunks (given the same
-    ``bits`` slices).  Grouped encode always uses the jnp codec — the
-    fused kernel takes one SMEM-prefetched format per call.
+    split into G contiguous chunks — equal ``ceil(x.size / G)`` chunks by
+    default (the last possibly short), or explicit per-layer
+    ``group_sizes`` (must sum to ``x.size``) — and chunk g is encoded
+    with ⟨IL[g], FL[g]⟩; stats come back with shape ``[G]``.  The
+    round-trip is element-exact with G independent global-format calls on
+    the chunks (given the same ``bits`` slices).  On the ``kernel``
+    backend the grouped encode is ONE fused launch: the payload is
+    scattered into the group-aligned layout (:class:`GroupLayout`), the
+    kernel resolves each tile's format from the ``[G, 2]`` SMEM table,
+    and the wire comes back in ``x``'s own layout.
 
     ``backend``: "auto" (fused Pallas kernel on TPU, jnp elsewhere),
     "kernel", or "jnp".  Both are bit-exact against
@@ -168,6 +422,8 @@ def wire_encode(x: jax.Array, fmt: FixedPointFormat, *,
         raise ValueError(f"unknown rounding mode {mode!r}")
     _validate_capacity(fmt)
     if fmt.il.ndim == 0:
+        if group_sizes is not None:
+            raise ValueError("group_sizes needs a [G]-shaped format")
         if _resolve_backend(backend) == "kernel":
             from repro.kernels import ops
             stochastic = mode == ROUND_STOCHASTIC
@@ -180,40 +436,73 @@ def wire_encode(x: jax.Array, fmt: FixedPointFormat, *,
         return wire_quantize(x, fmt, mode=mode, key=key, bits=bits,
                              compute_stats=compute_stats)
 
-    # --- per-group path (jnp codec) ---
+    # --- per-group path ---
     if fmt.il.ndim != 1:
         raise ValueError(f"per-group formats must be rank-1 [G], got shape "
                          f"{fmt.il.shape}")
     groups = fmt.il.shape[0]
     n = x.size
-    chunk, pad = _group_layout(n, groups)
+    if group_sizes is not None:
+        group_sizes = tuple(int(s) for s in group_sizes)
+        _check_group_sizes(fmt, group_sizes, n)
     if bits is None and mode == ROUND_STOCHASTIC:
         if key is None:
             raise ValueError("stochastic rounding needs `bits` or `key`")
         bits = jax.random.bits(key, shape=(n,), dtype=jnp.uint32)
-    xg = jnp.pad(x.reshape(-1), (0, pad)).reshape(groups, chunk)
-    bg = (jnp.pad(bits.reshape(-1), (0, pad)).reshape(groups, chunk)
+
+    if _resolve_backend(backend) == "kernel":
+        # one fused launch over the group-aligned layout; bits travel with
+        # their elements, so the wire is bit-identical to the jnp path.
+        layout = group_layout(group_sizes or _equal_group_sizes(n, groups))
+        wire_al, stats = _encode_aligned(
+            layout.align(x.reshape(-1)), fmt, jnp.asarray(layout.tile_groups()),
+            jnp.asarray(layout.mask()),
+            bits=layout.align(bits) if bits is not None else None,
+            mode=mode, backend="kernel", quantum=layout.quantum,
+            compute_stats=compute_stats)
+        return layout.dealign(wire_al).reshape(x.shape), stats
+
+    if group_sizes is not None:
+        wire, stats = _encode_elementwise(x, fmt, _group_ids(group_sizes),
+                                          bits=bits, mode=mode,
+                                          compute_stats=compute_stats)
+        return wire.reshape(x.shape), stats
+
+    chunk, pad = _group_layout(n, groups)
+    xg = _pad_reshape(x.reshape(-1), pad, (groups, chunk))
+    bg = (_pad_reshape(bits.reshape(-1), pad, (groups, chunk))
           if bits is not None else None)
-    mask = jnp.pad(jnp.ones((n,), jnp.float32), (0, pad)).reshape(groups, chunk)
+    mask = (None if not pad else
+            _pad_reshape(jnp.ones((n,), jnp.float32), pad, (groups, chunk)))
     wire, stats = wire_quantize(xg, fmt, mode=mode, bits=bg,
                                 compute_stats=compute_stats, mask=mask)
     return wire.reshape(-1)[:n].reshape(x.shape), stats
 
 
+def _pad_reshape(v: jax.Array, pad: int, shape) -> jax.Array:
+    """Tail-pad + reshape, skipping the no-op pad copy when ``pad == 0``."""
+    return (v if not pad else jnp.pad(v, (0, pad))).reshape(shape)
+
+
 def wire_decode(wire: jax.Array, fmt: FixedPointFormat,
-                dtype=jnp.float32) -> jax.Array:
+                dtype=jnp.float32,
+                group_sizes: Optional[Tuple[int, ...]] = None) -> jax.Array:
     """Grid integers (int8) back to values: ``wire * 2^-FL``.
 
-    Accepts the same scalar or ``[G]``-shaped formats as
-    :func:`wire_encode` (grouped decode uses the matching contiguous-chunk
-    layout over the flattened payload).
+    Accepts the same scalar or ``[G]``-shaped formats (and the same
+    ``group_sizes`` split) as :func:`wire_encode` over the flattened
+    payload.
     """
     if fmt.il.ndim == 0:
         return (wire.astype(jnp.float32) * exp2_int(-fmt.fl)).astype(dtype)
     groups = fmt.il.shape[0]
     n = wire.size
+    if group_sizes is not None:
+        gid = jnp.asarray(_group_ids(group_sizes), jnp.int32)
+        dec = wire.reshape(-1).astype(jnp.float32) * exp2_int(-fmt.fl)[gid]
+        return dec.reshape(wire.shape).astype(dtype)
     chunk, pad = _group_layout(n, groups)
-    wg = jnp.pad(wire.reshape(-1), (0, pad)).reshape(groups, chunk)
+    wg = _pad_reshape(wire.reshape(-1), pad, (groups, chunk))
     dec = wg.astype(jnp.float32) * exp2_int(-fmt.fl)[:, None]
     return dec.reshape(-1)[:n].reshape(wire.shape).astype(dtype)
 
@@ -231,6 +520,8 @@ def psum_stats(stats: QuantStats, axis_name) -> QuantStats:
 def dps_allreduce_mean(x: jax.Array, formats, axis_name,
                        key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
                        backend: str = "auto", domain: str = "wire_grads",
+                       group_sizes: Optional[Tuple[int, ...]] = None,
+                       quantum: int = WIRE_GROUP_QUANTUM,
                        ) -> Tuple[jax.Array, QuantStats]:
     """Mean of per-rank ``x`` over ``axis_name`` with an int8 wire format.
 
@@ -246,6 +537,15 @@ def dps_allreduce_mean(x: jax.Array, formats, axis_name,
     With stochastic rounding each leg's error is < one grid step (2^-FL),
     so the result is within two grid steps of the exact mean and unbiased.
 
+    A ``[G]``-shaped format runs one ⟨IL, FL⟩ per contiguous group
+    (``group_sizes``, default equal chunks) through BOTH legs: the payload
+    travels in the group-aligned layout (:class:`GroupLayout`, tile
+    ``quantum``-aligned groups and rank chunks), so on the ``kernel``
+    backend leg 1 is one grouped-kernel launch, the receive leg is the
+    fused ``dps_wire_reduce`` (the fp32 ``(n, chunk)`` intermediate never
+    touches HBM), and leg 2 re-encodes each owner's chunk with the
+    per-tile formats.  Stats come back ``[G]``-shaped.
+
     ``backend`` selects the wire codec (see :func:`wire_encode`);
     ``formats``/``domain`` resolve the leg's ⟨IL, FL⟩ out of a
     precision-domain registry mapping (:func:`resolve_domain_format`).
@@ -257,40 +557,92 @@ def dps_allreduce_mean(x: jax.Array, formats, axis_name,
     identical across ranks (it is decorrelated with ``axis_index`` here).
     """
     fmt = resolve_domain_format(formats, domain)
-    if fmt.il.ndim != 0:
-        # the two legs chunk the flattened tensor per-rank, which does not
-        # line up with the [G] contiguous-group layout; group-aligned
-        # chunking is a ROADMAP item.
-        raise ValueError("dps_allreduce_mean takes a global (scalar) format;"
-                         " per-group formats are encode/decode-only for now")
+    _validate_capacity(fmt)
     n = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     k1, k2 = jax.random.split(jax.random.fold_in(key, idx))
-
+    be = _resolve_backend(backend)
     shape, size = x.shape, x.size
+
+    if fmt.il.ndim != 0:
+        _check_group_sizes(fmt, group_sizes, size)
+        layout = group_layout(group_sizes
+                              or _equal_group_sizes(size, fmt.il.shape[0]),
+                              n_chunks=n, quantum=quantum)
+        mean_al, stats = _aligned_allreduce_mean(
+            layout.align(x.reshape(-1).astype(jnp.float32)), fmt, layout,
+            axis_name, k1, k2, mode=mode, backend=be)
+        return layout.dealign(mean_al).reshape(shape).astype(x.dtype), stats
+
     chunk, pad = _group_layout(size, n)
 
     # leg 1: quantize the local tensor (stats cover exactly these elements),
     # pad the int8 wire, and scatter chunk j to rank j.
     wire, stats = wire_encode(x.reshape(-1), fmt, key=k1, mode=mode,
-                              backend=backend)
-    wire = jnp.pad(wire, (0, pad)).reshape(n, chunk)
+                              backend=be)
+    wire = _pad_reshape(wire, pad, (n, chunk))
     wire = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0,
                               tiled=True)                       # (n, chunk)
-    part = wire_decode(wire, fmt).sum(axis=0) / n               # (chunk,)
+    # receive: fused int8 decode-reduce on the kernel backend — the
+    # decoded fp32 (n, chunk) intermediate never exists in HBM.
+    part = _wire_reduce(wire, fmt, None, backend=be, quantum=quantum)
 
     # leg 2: re-quantize the owned mean chunk, gather int8 everywhere.
     wire2, _ = wire_encode(part, fmt, key=k2, mode=mode,
-                           compute_stats=False, backend=backend)
+                           compute_stats=False, backend=be)
     full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
     mean = wire_decode(full, fmt, x.dtype)[:size].reshape(shape)
     return mean, stats
+
+
+def _aligned_allreduce_mean(x_al: jax.Array, fmt: FixedPointFormat,
+                            layout: GroupLayout, axis_name, k1, k2,
+                            *, mode: str, backend: str,
+                            encode_leg1=None):
+    """Both compressed legs over a group-aligned ``[total]`` fp32 buffer.
+
+    ``encode_leg1(tile_groups, mask) -> (wire_al, stats)`` overrides the
+    dispatch-leg encode (the tree collective encodes leaf-by-leaf into a
+    preallocated buffer instead of scattering an fp32 copy); the default
+    runs :func:`_encode_aligned` on ``x_al``.  Returns ``(mean_al fp32
+    [total], [G] stats)``.
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    tg_all = jnp.asarray(layout.tile_groups())
+    mask = jnp.asarray(layout.mask())
+    if encode_leg1 is None:
+        wire_al, stats = _encode_aligned(
+            x_al, fmt, tg_all, mask, key=k1, mode=mode, backend=backend,
+            quantum=layout.quantum)
+    else:
+        wire_al, stats = encode_leg1(tg_all, mask)
+
+    wire = jax.lax.all_to_all(wire_al.reshape(n, layout.chunk), axis_name,
+                              split_axis=0, concat_axis=0, tiled=True)
+    # this rank's chunk covers tiles [idx·tpc, (idx+1)·tpc) of the layout
+    tpc = layout.chunk // layout.quantum
+    my_tg = jax.lax.dynamic_slice(tg_all, (idx * tpc,), (tpc,))
+    part = _wire_reduce(wire, fmt, my_tg, backend=backend,
+                        quantum=layout.quantum)           # (chunk,) fp32
+
+    # leg 2: per-tile re-encode of the owned mean chunk (stats not needed;
+    # alignment padding is zero and encodes to zero bytes)
+    bits2 = (jax.random.bits(k2, shape=(layout.chunk,), dtype=jnp.uint32)
+             if mode == ROUND_STOCHASTIC else None)
+    wire2, _ = _encode_aligned(part, fmt, my_tg, None, bits=bits2,
+                               mode=mode, backend=backend,
+                               quantum=layout.quantum, compute_stats=False)
+    full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
+    return _decode_aligned(full, fmt, tg_all, layout.quantum), stats
 
 
 def dps_reduce_scatter_mean(x: jax.Array, formats, axis_name,
                             key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
                             backend: str = "auto",
                             domain: str = "wire_grads",
+                            group_sizes: Optional[Tuple[int, ...]] = None,
+                            quantum: int = WIRE_GROUP_QUANTUM,
                             ) -> Tuple[jax.Array, QuantStats]:
     """Reduce-scatter mean over ``axis_name`` with the int8 wire on the
     scatter leg — the ZeRO half-collective.
@@ -309,6 +661,14 @@ def dps_reduce_scatter_mean(x: jax.Array, formats, axis_name,
     stochastic rounding keeps the leg unbiased with error < one grid step
     (2^-FL) on every element of the mean.
 
+    A ``[G]``-shaped format splits the flattened ``x`` into contiguous
+    groups (``group_sizes``, default equal chunks) and returns ``[G]``
+    stats.  The chunk layout here is the CALLER's contract (the
+    ``ZeroPartitioner`` flat slices), so the grouped codec runs
+    per-element formats on the jnp path — group boundaries need not align
+    with rank chunks — rather than the aligned-layout kernel (use
+    :func:`dps_allreduce_mean` for the kernel-speed grouped schedule).
+
     Returns ``(shard, stats)``: ``shard`` is this rank's chunk of the
     flattened, zero-padded mean — shape ``[ceil(x.size / n)]``, the padded
     1-D layout of :class:`repro.dist.sharding.ZeroPartitioner` — and
@@ -319,27 +679,53 @@ def dps_reduce_scatter_mean(x: jax.Array, formats, axis_name,
     ``formats``/``domain``: see :func:`resolve_domain_format`.
     """
     fmt = resolve_domain_format(formats, domain)
-    if fmt.il.ndim != 0:
-        raise ValueError("dps_reduce_scatter_mean takes a global (scalar) "
-                         "format; per-group formats are encode/decode-only "
-                         "for now")
+    _validate_capacity(fmt)
     n = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
+    be = _resolve_backend(backend)
     chunk, pad = _group_layout(x.size, n)
+
+    if fmt.il.ndim != 0:
+        if backend == "kernel":
+            raise ValueError(
+                "dps_reduce_scatter_mean runs [G]-shaped formats with the "
+                "per-element jnp codec (the shard layout is the caller's "
+                "ZeroPartitioner contract, so group boundaries cannot be "
+                "tile-aligned); an explicit backend='kernel' request cannot "
+                "be honored here — use backend='auto', or "
+                "dps_allreduce_mean for the group-aligned kernel schedule")
+        _check_group_sizes(fmt, group_sizes, x.size)
+        gid = _group_ids(group_sizes
+                         or _equal_group_sizes(x.size, fmt.il.shape[0]))
+        wire, stats = _encode_elementwise(
+            x.reshape(-1), fmt, gid, key=jax.random.fold_in(key, idx),
+            mode=mode)
+        wire = _pad_reshape(wire, pad, (n, chunk))
+        wire = jax.lax.all_to_all(wire, axis_name, split_axis=0,
+                                  concat_axis=0, tiled=True)
+        # decode with the formats of THIS rank's chunk positions
+        gid_pad = np.pad(gid, (0, pad))
+        my_gid = jax.lax.dynamic_slice(jnp.asarray(gid_pad), (idx * chunk,),
+                                       (chunk,))
+        inv = exp2_int(-fmt.fl)[my_gid]
+        shard = (wire.astype(jnp.float32) * inv[None, :]).sum(axis=0) / n
+        return shard, stats
 
     wire, stats = wire_encode(x.reshape(-1), fmt,
                               key=jax.random.fold_in(key, idx), mode=mode,
-                              backend=backend)
-    wire = jnp.pad(wire, (0, pad)).reshape(n, chunk)
+                              backend=be)
+    wire = _pad_reshape(wire, pad, (n, chunk))
     wire = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0,
                               tiled=True)                       # (n, chunk)
-    shard = wire_decode(wire, fmt).sum(axis=0) / n              # (chunk,)
+    # fused decode-reduce on the kernel backend (no fp32 (n, chunk) in HBM)
+    shard = _wire_reduce(wire, fmt, None, backend=be, quantum=quantum)
     return shard, stats
 
 
 def dps_allgather_params(shard: jax.Array, formats, axis_name,
                          key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
                          backend: str = "auto", domain: str = "wire_params",
+                         group_sizes: Optional[Tuple[int, ...]] = None,
                          ) -> Tuple[jax.Array, QuantStats]:
     """All-gather per-rank parameter shards with an int8 wire — the ZeRO
     return leg.
@@ -355,6 +741,13 @@ def dps_allgather_params(shard: jax.Array, formats, axis_name,
     error steer next step's wire ⟨IL, FL⟩ without touching the compute
     weights controller.
 
+    A ``[G]``-shaped format partitions the GATHERED ``[n · shard.size]``
+    vector into contiguous groups (``group_sizes``, default equal
+    chunks): each rank encodes its shard with the formats of its own
+    positions and every rank decodes the concatenation group-wise.  The
+    shard layout is the caller's contract, so the grouped codec runs
+    per-element formats (jnp path) — no alignment assumed.
+
     Returns ``(full, stats)``: ``full`` is the flat ``[n · shard.size]``
     gathered vector (identical on every rank), ``stats`` cover this rank's
     encode of its |shard| elements (``psum_stats`` → every global element
@@ -362,11 +755,30 @@ def dps_allgather_params(shard: jax.Array, formats, axis_name,
     identical across ranks.
     """
     fmt = resolve_domain_format(formats, domain)
-    if fmt.il.ndim != 0:
-        raise ValueError("dps_allgather_params takes a global (scalar) "
-                         "format; per-group formats are encode/decode-only "
-                         "for now")
+    _validate_capacity(fmt)
+    n = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
+    if fmt.il.ndim != 0:
+        if backend == "kernel":
+            raise ValueError(
+                "dps_allgather_params runs [G]-shaped formats with the "
+                "per-element jnp codec (the shard layout is the caller's "
+                "contract, so group boundaries cannot be tile-aligned); an "
+                "explicit backend='kernel' request cannot be honored here — "
+                "use backend='auto'")
+        total = n * shard.size
+        _check_group_sizes(fmt, group_sizes, total,
+                           what="the gathered vector size")
+        gid = _group_ids(group_sizes
+                         or _equal_group_sizes(total, fmt.il.shape[0]))
+        my_gid = jax.lax.dynamic_slice(jnp.asarray(gid),
+                                       (idx * shard.size,), (shard.size,))
+        wire, stats = _encode_elementwise(
+            shard.reshape(-1), fmt, my_gid,
+            key=jax.random.fold_in(key, idx), mode=mode)
+        full = jax.lax.all_gather(wire, axis_name, axis=0, tiled=True)
+        dec = full.astype(jnp.float32) * exp2_int(-fmt.fl)[jnp.asarray(gid)]
+        return dec, stats
     wire, stats = wire_encode(shard.reshape(-1), fmt,
                               key=jax.random.fold_in(key, idx), mode=mode,
                               backend=backend)
@@ -377,27 +789,98 @@ def dps_allgather_params(shard: jax.Array, formats, axis_name,
 def dps_allreduce_mean_tree(tree, formats, axis_name,
                             key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
                             backend: str = "auto",
-                            domain: str = "wire_grads"):
+                            domain: str = "wire_grads",
+                            quantum: int = WIRE_GROUP_QUANTUM):
     """:func:`dps_allreduce_mean` over a whole pytree in ONE collective pair.
 
-    Leaves are flattened and concatenated into a single fp32 buffer before
-    the collective, so the per-step gradient sync costs one all_to_all +
-    one all_gather regardless of how many (possibly tiny) leaves the tree
-    has — not 2·L launches each padded to the axis size.  Returns
-    ``(mean_tree, stats)`` with every leaf cast back to its own dtype.
-    ``formats``/``domain``: see :func:`resolve_domain_format`.
+    Each leaf is encoded straight into its slot of ONE preallocated int8
+    wire buffer (``dynamic_update_slice``; the old fp32
+    flatten-and-concatenate pass over the whole tree is gone — the only
+    tree-sized intermediate is the 4×-smaller int8 buffer), so the
+    per-step gradient sync costs one all_to_all + one all_gather
+    regardless of how many (possibly tiny) leaves the tree has — not 2·L
+    launches each padded to the axis size.  The mean comes back leaf by
+    leaf (int8 slice → decode → leaf dtype): the fp32 mean never exists
+    as a flat tree-sized buffer either.
+
+    A ``[G]``-shaped format (G = leaf count) runs ONE ⟨IL, FL⟩ PER LEAF:
+    leaf g encodes into a :class:`GroupLayout`-aligned slot with
+    ⟨IL[g], FL[g]⟩, both collective legs run group-aligned (fused grouped
+    kernel + ``dps_wire_reduce`` on the ``kernel`` backend), and stats
+    come back ``[G]``-shaped — per-layer wire formats at full kernel
+    speed, one HBM pass per leg.
+
+    Returns ``(mean_tree, stats)`` with every leaf cast back to its own
+    dtype.  ``formats``/``domain``: see :func:`resolve_domain_format`.
     """
     fmt = resolve_domain_format(formats, domain)
+    _validate_capacity(fmt)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     if not leaves:
         return tree, QuantStats.zero(fmt.il.shape)
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
-                            for l in leaves])
-    mean, stats = dps_allreduce_mean(flat, fmt, axis_name, key, mode=mode,
-                                     backend=backend)
-    out, off = [], 0
-    for leaf in leaves:
-        out.append(mean[off:off + leaf.size].reshape(leaf.shape)
-                   .astype(leaf.dtype))
-        off += leaf.size
+    grouped = fmt.il.ndim != 0
+    if grouped and fmt.il.shape[0] != len(leaves):
+        raise ValueError(
+            f"[G]-shaped tree formats are one ⟨IL, FL⟩ per leaf: the table "
+            f"has {fmt.il.shape[0]} rows, the tree {len(leaves)} leaves")
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, idx))
+    be = _resolve_backend(backend)
+    sizes = tuple(l.size for l in leaves)
+
+    if grouped:
+        layout = group_layout(sizes, n_chunks=n, quantum=quantum)
+        offsets, total = layout.offsets, layout.total
+    else:
+        # one format decodes everywhere, so exact packing (tail pad only,
+        # no per-leaf alignment — plain offsets, not a GroupLayout, whose
+        # invariants are tile-aligned) keeps the wire payload minimal.
+        layout = None
+        size = sum(sizes)
+        chunk, _ = _group_layout(size, n)
+        offsets = tuple(int(o) for o in np.cumsum((0,) + sizes[:-1]))
+        total = chunk * n
+
+    def encode_leg1(tg_all, mask):
+        """Leaf-by-leaf encode into the preallocated int8 wire buffer."""
+        buf = jnp.zeros((total,), jnp.int8)
+        per_leaf = []
+        for g, leaf in enumerate(leaves):
+            fmt_g = (FixedPointFormat(fmt.il[g], fmt.fl[g]) if grouped
+                     else fmt)
+            w, s = wire_encode(leaf.reshape(-1), fmt_g,
+                               key=jax.random.fold_in(k1, g), mode=mode,
+                               backend=be)
+            buf = jax.lax.dynamic_update_slice(buf, w, (offsets[g],))
+            per_leaf.append(s)
+        if grouped:
+            stats = jax.tree.map(lambda *xs: jnp.stack(xs), *per_leaf)
+        else:
+            stats = per_leaf[0]
+            for s in per_leaf[1:]:
+                stats = stats.merge(s)
+        return buf, stats
+
+    if grouped:
+        mean_al, stats = _aligned_allreduce_mean(
+            None, fmt, layout, axis_name, k1, k2, mode=mode, backend=be,
+            encode_leg1=encode_leg1)
+        full = mean_al
+        decode = lambda g, flat: flat  # already decoded per tile
+    else:
+        buf, stats = encode_leg1(None, None)
+        wire = jax.lax.all_to_all(buf.reshape(n, chunk), axis_name,
+                                  split_axis=0, concat_axis=0, tiled=True)
+        part = _wire_reduce(wire, fmt, None, backend=be, quantum=quantum)
+        wire2, _ = wire_encode(part, fmt, key=k2, mode=mode,
+                               compute_stats=False, backend=be)
+        full_wire = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
+        full = full_wire
+        decode = lambda g, sl: wire_decode(sl, fmt)
+
+    out = []
+    for g, leaf in enumerate(leaves):
+        sl = jax.lax.dynamic_slice(full, (offsets[g],), (leaf.size,))
+        out.append(decode(g, sl).reshape(leaf.shape).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out), stats

@@ -22,6 +22,33 @@ Two tensor-output flavours share one kernel body:
     input tile, so the wire payload costs one read-x/write-wire pass and
     never exists as an fp32 intermediate in HBM.
 
+Two more kernels give the **per-group** wire pipeline the same one-pass
+traffic profile (see ``repro.dist.collectives`` for the layout contract):
+
+  * ``dps_quant_group_wire_pallas`` — the wire variant with a ``[G, 2]``
+    ⟨IL, FL⟩ **format table** in SMEM plus a tile→group index map: the
+    input is a *group-aligned* flat buffer (every group zero-padded to a
+    multiple of the ``quantum`` = one grid tile, so a tile never straddles
+    groups), each grid tile resolves its own format out of the table, and
+    statistics accumulate into a ``[G, N_STATS]`` VMEM accumulator — G
+    per-layer formats in ONE kernel launch, same HBM traffic as the
+    global-format wire kernel (read x + bits, write int8 wire).
+  * ``dps_wire_reduce_pallas`` — the receive leg: reads the post-all_to_all
+    ``(n_ranks, chunk)`` int8 payload and emits the fp32 **mean** chunk
+    directly (decode → sum over ranks → ÷n on-tile), so the decoded fp32
+    ``(n, chunk)`` intermediate never touches HBM: traffic is n·chunk int8
+    in + chunk fp32 out, vs 4·n·chunk fp32 write + (4·n+4)·chunk read for
+    the naive decode-then-reduce.
+
+HBM traffic accounting per leg (E = elements, n = ranks):
+
+    naive jnp grouped encode   read 4E (fp32 pad/concat) + write 4E + read
+                               4E + write E (int8)     ≈ 13E bytes
+    grouped wire kernel        read 4E (+4E bits, portable path) + write E
+                                                       ≈ 5E (9E) bytes
+    naive decode-reduce        read nE, write 4nE, read 4nE + 4E chunk out
+    fused dps_wire_reduce      read nE + write 4E·(1/n per rank)
+
 Two variants of the stochastic-rounding noise source:
 
   * ``use_onchip_prng=False`` (default; CPU-validatable): uniform bits enter
@@ -63,6 +90,33 @@ DEFAULT_BLOCK = (256, 1024)
 _U_BITS = 24
 _U_SCALE = 1.0 / (1 << _U_BITS)
 
+# Group-aligned layout quantum: elements covered by one grid tile of the
+# grouped kernels.  32×128 is the minimum int8 tile (sublane × lane), so any
+# multiple of 4096 lowers cleanly; larger quanta trade per-group padding for
+# fewer grid steps (repro.dist.collectives picks the layout).
+MIN_GROUP_QUANTUM = 32 * 128
+DEFAULT_GROUP_QUANTUM = MIN_GROUP_QUANTUM
+
+
+def group_block(quantum: int):
+    """(bm, bn) tile shape for a grouped-kernel quantum.
+
+    ``quantum`` must be a multiple of 4096 so the int8 wire tile respects
+    the (32, 128) minimum; quanta ≥ 32768 widen to 1024 lanes."""
+    if quantum % MIN_GROUP_QUANTUM:
+        raise ValueError(f"group quantum must be a multiple of "
+                         f"{MIN_GROUP_QUANTUM} (32x128 int8 tile), "
+                         f"got {quantum}")
+    bn = 1024 if quantum % 1024 == 0 and quantum // 1024 >= 32 else 128
+    return quantum // bn, bn
+
+
+def _exp2i(n):
+    """Bit-exact 2^n inside the kernel (jnp.exp2 is inexact on some
+    backends; matches fixed_point.exp2_int)."""
+    n = jnp.clip(n, -126, 127)
+    return jax.lax.bitcast_convert_type((n + 127) << 23, jnp.float32)
+
 
 def _kernel(fmt_ref,            # SMEM: (3,) int32 [il, fl, seed]
             x_ref,              # VMEM: (bm, bn) input tile
@@ -77,12 +131,6 @@ def _kernel(fmt_ref,            # SMEM: (3,) int32 [il, fl, seed]
 
     il = fmt_ref[0]
     fl = fmt_ref[1]
-    # bit-exact 2^n (jnp.exp2 is inexact on some backends; matches
-    # fixed_point.exp2_int)
-    def _exp2i(n):
-        n = jnp.clip(n, -126, 127)
-        return jax.lax.bitcast_convert_type((n + 127) << 23, jnp.float32)
-
     scale = _exp2i(fl)
     inv_scale = _exp2i(-fl)
     span = _exp2i(il - 1 + fl)
@@ -149,16 +197,25 @@ def _pallas_quant(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
                   *, stochastic: bool, use_onchip_prng: bool,
                   block, interpret: bool, emit_wire: bool):
     M, N = x.shape
-    if mask is None:
-        mask = jnp.ones((M, N), jnp.float32)
     bm = min(block[0], M) if M % block[0] else block[0]
     bn = min(block[1], N) if N % block[1] else block[1]
-    # pad to the tile grid; mask marks the valid region
+    # pad to the tile grid; mask marks the valid region.  When the shape is
+    # already tile-aligned the pads would be no-ops that still cost an HBM
+    # copy each (x, bits, mask) — skip them.
     Mp = pl.cdiv(M, bm) * bm
     Np = pl.cdiv(N, bn) * bn
-    xp = jnp.pad(x, ((0, Mp - M), (0, Np - N)))
-    bp = jnp.pad(bits, ((0, Mp - M), (0, Np - N)))
-    mask = jnp.pad(mask, ((0, Mp - M), (0, Np - N)))
+    if (Mp, Np) == (M, N):
+        xp, bp = x, bits
+        if mask is None:
+            mask = jnp.ones((M, N), jnp.float32)
+    else:
+        xp = jnp.pad(x, ((0, Mp - M), (0, Np - N)))
+        bp = jnp.pad(bits, ((0, Mp - M), (0, Np - N)))
+        if mask is None:
+            mask = jnp.pad(jnp.ones((M, N), jnp.float32),
+                           ((0, Mp - M), (0, Np - N)))
+        else:
+            mask = jnp.pad(mask, ((0, Mp - M), (0, Np - N)))
 
     grid = (Mp // bm, Np // bn)
     out_dtype = jnp.int8 if emit_wire else x.dtype
@@ -231,3 +288,210 @@ def dps_quant_wire_pallas(x: jax.Array, fmt3: jax.Array, bits: jax.Array,
     return _pallas_quant(x, fmt3, bits, mask, stochastic=stochastic,
                          use_onchip_prng=use_onchip_prng, block=block,
                          interpret=interpret, emit_wire=True)
+
+
+# ---------------------------------------------------------------------------
+# Grouped wire kernel: [G, 2] SMEM format table, one format per grid tile.
+# ---------------------------------------------------------------------------
+
+def _group_kernel(fmt_ref,           # SMEM: (G, 2) int32 [[il, fl], ...]
+                  tgrp_ref,          # SMEM: (T,) int32 tile -> group index
+                  seed_ref,          # SMEM: (1,) int32 PRNG seed
+                  x_ref,             # VMEM: (bm, bn) input tile
+                  bits_ref,          # VMEM: (bm, bn) uint32 (portable path)
+                  mask_ref,          # VMEM: (bm, bn) float32 validity
+                  wire_ref,          # VMEM out: (bm, bn) int8 grid integers
+                  stats_ref=None,    # VMEM out: (G, N_STATS); None when the
+                                     # caller asked for wire only
+                  *, stochastic: bool, use_onchip_prng: bool):
+    t = pl.program_id(0)
+    g = tgrp_ref[t]
+    il = fmt_ref[g, 0]
+    fl = fmt_ref[g, 1]
+
+    scale = _exp2i(fl)
+    inv_scale = _exp2i(-fl)
+    span = _exp2i(il - 1 + fl)
+    qmax = span - 1.0
+    qmin = -span
+
+    x = x_ref[...].astype(jnp.float32)
+    m = mask_ref[...]
+
+    y = x * scale
+    yc = jnp.clip(y, qmin, qmax)
+    if stochastic:
+        if use_onchip_prng:
+            pltpu.prng_seed(seed_ref[0] + t)
+            bits = pltpu.prng_random_bits(x.shape).astype(jnp.uint32)
+        else:
+            bits = bits_ref[...]
+        u = (bits >> (32 - _U_BITS)).astype(jnp.float32) * _U_SCALE
+        q_int = jnp.floor(yc + u)
+    else:
+        q_int = jnp.floor(yc + 0.5)
+    q_int = jnp.clip(q_int, qmin, qmax)
+    sat = jnp.clip(q_int, -128.0, 127.0)
+    over = (((y > qmax) | (y < qmin) | (q_int != sat))
+            .astype(jnp.float32) * m)
+    wire_ref[...] = (sat * m).astype(wire_ref.dtype)
+    if stats_ref is None:        # wire-only launch (e.g. the receive-side
+        return                   # re-encode leg, whose stats nobody reads)
+    q = sat * inv_scale
+
+    # --- on-tile stats, accumulated into this tile's group row ---
+    x_ref_val = yc * inv_scale
+    abs_err = jnp.abs(q - x_ref_val) * m
+    abs_ref = jnp.abs(x_ref_val) * m
+    nz = (abs_ref > 0.0).astype(jnp.float32)
+    rel = jnp.where(abs_ref > 0.0,
+                    abs_err / jnp.where(abs_ref > 0.0, abs_ref, 1.0), 0.0)
+
+    @pl.when(t == 0)
+    def _init():
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    zero = jnp.float32(0)
+    row_add = jnp.stack([jnp.sum(m), jnp.sum(nz), jnp.sum(over),
+                         jnp.sum(abs_err), jnp.sum(rel), jnp.sum(abs_ref),
+                         zero])                       # (N_STATS,), max col 0
+    row_max = jnp.stack([zero] * (N_STATS - 1)
+                        + [jnp.max(jnp.abs(x) * m)])  # max col only
+    G = stats_ref.shape[0]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (G, 1), 0) == g
+              ).astype(jnp.float32)
+    cur = stats_ref[...]
+    # every stat is >= 0, so one fused update covers both combine rules:
+    # sums add their (one-hot-masked) row, the max column maxes against it.
+    stats_ref[...] = jnp.maximum(cur + onehot * row_add[None, :],
+                                 onehot * row_max[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("stochastic", "use_onchip_prng",
+                                             "quantum", "interpret",
+                                             "emit_stats"))
+def dps_quant_group_wire_pallas(x: jax.Array, fmt_tab: jax.Array,
+                                tile_group: jax.Array, seed: jax.Array,
+                                bits: jax.Array, mask: jax.Array,
+                                *, stochastic: bool = True,
+                                use_onchip_prng: bool = False,
+                                quantum: int = DEFAULT_GROUP_QUANTUM,
+                                interpret: bool = True,
+                                emit_stats: bool = True):
+    """Per-group ⟨IL, FL⟩ wire encode of a group-aligned flat buffer.
+
+    ``x``: flat fp32/bf16 buffer whose size is ``T · quantum`` — the
+    group-aligned layout (each group padded to a quantum multiple, so a
+    tile never straddles groups; ``mask`` zeroes the padding out of both
+    the wire and the statistics).  ``fmt_tab``: int32 ``[G, 2]`` rows of
+    ``[IL, FL]`` — the SMEM-prefetched format table.  ``tile_group``:
+    int32 ``[T]`` mapping grid tile → table row.  ``bits``/``mask``: same
+    size as ``x`` (bits ignored under ``use_onchip_prng``); ``seed``:
+    int32 ``[1]`` for the on-chip PRNG.
+
+    Returns ``(wire int8 [T·quantum], stats float32 [G, N_STATS])`` —
+    bit-exact against ``ref.dps_quant_group_wire_ref`` on the portable
+    path, and against G independent ``dps_quant_wire_pallas`` calls on the
+    per-group slices.  One read-x/write-wire HBM pass for all G formats.
+    ``emit_stats=False`` drops the accumulator entirely (no per-tile stat
+    reductions, no [G, N_STATS] output; stats come back ``None``) — the
+    receive-side re-encode leg runs wire-only.
+    """
+    n = x.size
+    if n % quantum:
+        raise ValueError(f"group-aligned buffer size {n} is not a multiple "
+                         f"of the quantum {quantum}")
+    bm, bn = group_block(quantum)
+    tiles = n // quantum
+    x2 = x.reshape(tiles * bm, bn)
+    b2 = bits.reshape(tiles * bm, bn)
+    m2 = mask.reshape(tiles * bm, bn)
+    G = fmt_tab.shape[0]
+    kernel = functools.partial(_group_kernel, stochastic=stochastic,
+                               use_onchip_prng=use_onchip_prng)
+    out_specs = [pl.BlockSpec((bm, bn), lambda t, *_: (t, 0))]
+    out_shape = [jax.ShapeDtypeStruct((tiles * bm, bn), jnp.int8)]
+    if emit_stats:
+        # the [G, N_STATS] accumulator revisits one block across the
+        # whole grid ('arbitrary' semantics keep it race-free)
+        out_specs.append(pl.BlockSpec((G, N_STATS), lambda t, *_: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((G, N_STATS), jnp.float32))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(tiles,),
+            in_specs=[
+                pl.BlockSpec((bm, bn), lambda t, *_: (t, 0)),
+                pl.BlockSpec((bm, bn), lambda t, *_: (t, 0)),
+                pl.BlockSpec((bm, bn), lambda t, *_: (t, 0)),
+            ],
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(fmt_tab, tile_group, seed, x2, b2, m2)
+    wire = out[0].reshape(n)
+    return wire, (out[1] if emit_stats else None)
+
+
+# ---------------------------------------------------------------------------
+# Fused int8 decode-reduce: (n_ranks, chunk) wire -> fp32 mean chunk.
+# ---------------------------------------------------------------------------
+
+def _wire_reduce_kernel(fmt_ref,     # SMEM: (G, 2) int32 format table
+                        tgrp_ref,    # SMEM: (T,) int32 tile -> group
+                        w_ref,       # VMEM: (n, bm, bn) int8 wire stack
+                        out_ref):    # VMEM out: (bm, bn) fp32 mean tile
+    t = pl.program_id(0)
+    g = tgrp_ref[t]
+    inv_scale = _exp2i(-fmt_ref[g, 1])
+    n = w_ref.shape[0]
+    dec = w_ref[...].astype(jnp.float32) * inv_scale
+    # every decoded value is a multiple of 2^-FL with |w| <= 127, so the
+    # fp32 sum is exact for any practical rank count (n·127 < 2^24) and the
+    # single ÷n rounds identically to the jnp decode-then-mean path.
+    out_ref[...] = jnp.sum(dec, axis=0) / jnp.float32(n)
+
+
+@functools.partial(jax.jit, static_argnames=("quantum", "interpret"))
+def dps_wire_reduce_pallas(wire: jax.Array, fmt_tab: jax.Array,
+                           tile_group: jax.Array,
+                           *, quantum: int = DEFAULT_GROUP_QUANTUM,
+                           interpret: bool = True):
+    """Fused decode → sum → mean over the rank axis of an int8 payload.
+
+    ``wire``: int8 ``[n_ranks, chunk]`` (chunk a quantum multiple) — the
+    post-``all_to_all`` stack where row i is rank i's contribution to this
+    rank's chunk.  ``fmt_tab``/``tile_group``: as in
+    :func:`dps_quant_group_wire_pallas`, indexed by this chunk's tiles (a
+    global format is the G=1 table).  Returns the fp32 ``[chunk]`` mean —
+    the decoded ``(n, chunk)`` fp32 intermediate never exists in HBM.
+    """
+    n, chunk = wire.shape
+    if chunk % quantum:
+        raise ValueError(f"chunk {chunk} is not a multiple of the "
+                         f"quantum {quantum}")
+    bm, bn = group_block(quantum)
+    tiles = chunk // quantum
+    w3 = wire.reshape(n, tiles * bm, bn)
+    out = pl.pallas_call(
+        _wire_reduce_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(tiles,),
+            in_specs=[
+                pl.BlockSpec((n, bm, bn), lambda t, *_: (0, t, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda t, *_: (t, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((tiles * bm, bn), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(fmt_tab, tile_group, w3)
+    return out.reshape(chunk)

@@ -16,7 +16,10 @@ import jax.numpy as jnp
 
 from repro.core.fixed_point import FixedPointFormat, QuantStats
 from repro.kernels import ref as ref_lib
-from repro.kernels.dps_quant import dps_quant_pallas, dps_quant_wire_pallas
+from repro.kernels.dps_quant import (DEFAULT_GROUP_QUANTUM, dps_quant_pallas,
+                                     dps_quant_group_wire_pallas,
+                                     dps_quant_wire_pallas,
+                                     dps_wire_reduce_pallas)
 
 _ON_TPU = None
 
@@ -40,16 +43,22 @@ def _fold_and_call(pallas_fn, x, fmt, *, key, bits, stochastic, onchip_prng,
     minor = 1024 if n >= 1024 else max(n, 1)
     major = -(-n // minor)
     pad = major * minor - n
-    x2 = jnp.concatenate(
-        [x.reshape(-1), jnp.zeros((pad,), x.dtype)]).reshape(major, minor)
+
+    def _fold(v, dtype):
+        # an already-aligned size needs no tail: skip the no-op concat copy
+        if not pad:
+            return v.reshape(major, minor)
+        return jnp.concatenate(
+            [v.reshape(-1), jnp.zeros((pad,), dtype)]).reshape(major, minor)
+
+    x2 = _fold(x, x.dtype)
 
     if stochastic and not onchip_prng:
         if bits is None:
             if key is None:
                 raise ValueError("stochastic path needs `key` or `bits`")
             bits = jax.random.bits(key, shape=(n,), dtype=jnp.uint32)
-        bits2 = jnp.concatenate(
-            [bits.reshape(-1), jnp.zeros((pad,), jnp.uint32)]).reshape(major, minor)
+        bits2 = _fold(bits, jnp.uint32)
     else:
         bits2 = jnp.zeros((major, minor), jnp.uint32)
 
@@ -58,9 +67,8 @@ def _fold_and_call(pallas_fn, x, fmt, *, key, bits, stochastic, onchip_prng,
         seed = jax.random.randint(key, (), 0, 2**31 - 1, jnp.int32)
     fmt3 = jnp.stack([fmt.il.astype(jnp.int32), fmt.fl.astype(jnp.int32), seed])
 
-    mask2 = jnp.concatenate(
-        [jnp.ones((n,), jnp.float32), jnp.zeros((pad,), jnp.float32)]
-    ).reshape(major, minor)
+    mask2 = (None if not pad else
+             _fold(jnp.ones((n,), jnp.float32), jnp.float32))
 
     kwargs = dict(stochastic=stochastic, use_onchip_prng=onchip_prng,
                   interpret=interpret)
@@ -105,3 +113,88 @@ def dps_quantize_wire(x: jax.Array, fmt: FixedPointFormat, *,
     return _fold_and_call(dps_quant_wire_pallas, x, fmt, key=key, bits=bits,
                           stochastic=stochastic, onchip_prng=onchip_prng,
                           block=block, interpret=interpret)
+
+
+def dps_quantize_wire_grouped(x: jax.Array, fmt: FixedPointFormat,
+                              tile_group: jax.Array, *,
+                              key: jax.Array | None = None,
+                              bits: jax.Array | None = None,
+                              mask: jax.Array | None = None,
+                              stochastic: bool = True,
+                              onchip_prng: bool = False,
+                              quantum: int = DEFAULT_GROUP_QUANTUM,
+                              interpret: bool | None = None,
+                              compute_stats: bool = True):
+    """Fused per-group wire encode of a group-aligned flat buffer.
+
+    ``x`` is the group-aligned layout (size = ``len(tile_group) ·
+    quantum``; see ``repro.dist.collectives.GroupLayout``), ``fmt`` a
+    ``[G]``-shaped format whose rows the tiles index via ``tile_group``.
+    ``mask`` (1/0 float32, same size) excludes alignment padding from the
+    wire and the stats.  Returns ``(wire int8 with x's size,
+    [G]-shaped QuantStats)`` in ONE read-x/write-wire HBM pass;
+    ``compute_stats=False`` skips the stats accumulation in the kernel
+    and returns ``None``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = x.size
+    if stochastic and not onchip_prng:
+        if bits is None:
+            if key is None:
+                raise ValueError("stochastic path needs `key` or `bits`")
+            bits = jax.random.bits(key, shape=(n,), dtype=jnp.uint32)
+        bits = bits.reshape(-1)
+    else:
+        bits = jnp.zeros((n,), jnp.uint32)
+    seed = jnp.zeros((1,), jnp.int32)
+    if key is not None:
+        seed = jax.random.randint(key, (1,), 0, 2**31 - 1, jnp.int32)
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    fmt_tab = jnp.stack([fmt.il.astype(jnp.int32),
+                         fmt.fl.astype(jnp.int32)], axis=1)
+    wire, mat = dps_quant_group_wire_pallas(
+        x.reshape(-1), fmt_tab, jnp.asarray(tile_group, jnp.int32), seed,
+        bits, mask.reshape(-1), stochastic=stochastic,
+        use_onchip_prng=onchip_prng, quantum=quantum, interpret=interpret,
+        emit_stats=compute_stats)
+    return wire, (ref_lib.stats_from_matrix(mat) if compute_stats else None)
+
+
+def dps_wire_reduce(wire: jax.Array, fmt: FixedPointFormat,
+                    tile_group: jax.Array | None = None, *,
+                    quantum: int = DEFAULT_GROUP_QUANTUM,
+                    interpret: bool | None = None) -> jax.Array:
+    """Fused int8 decode → mean over the rank axis (the receive leg).
+
+    ``wire``: ``[n_ranks, chunk]`` int8.  A scalar ``fmt`` decodes every
+    tile with one FL (``tile_group`` ignored); a ``[G]`` format needs
+    ``tile_group`` (``ceil(chunk / quantum)`` entries) mapping this chunk's
+    tiles into the table.  Pads the chunk to a quantum multiple internally
+    (zero int8 bytes decode to zero and are sliced back off).  Returns the
+    fp32 ``[chunk]`` mean without materializing the decoded ``(n, chunk)``
+    fp32 intermediate in HBM.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, chunk = wire.shape
+    tiles = -(-chunk // quantum)
+    pad = tiles * quantum - chunk
+    if pad:
+        wire = jnp.pad(wire, ((0, 0), (0, pad)))
+    if fmt.il.ndim == 0:
+        fmt_tab = jnp.stack([fmt.il, fmt.fl]).astype(jnp.int32)[None, :]
+        tile_group = jnp.zeros((tiles,), jnp.int32)
+    else:
+        if tile_group is None:
+            raise ValueError("[G]-shaped formats need a tile_group map")
+        fmt_tab = jnp.stack([fmt.il.astype(jnp.int32),
+                             fmt.fl.astype(jnp.int32)], axis=1)
+        tile_group = jnp.asarray(tile_group, jnp.int32)
+        if tile_group.shape[0] != tiles:
+            raise ValueError(f"tile_group has {tile_group.shape[0]} entries "
+                             f"for {tiles} chunk tiles")
+    out = dps_wire_reduce_pallas(wire, fmt_tab, tile_group,
+                                 quantum=quantum, interpret=interpret)
+    return out[:chunk]

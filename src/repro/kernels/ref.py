@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.fixed_point import (FixedPointFormat, QuantStats, quantize,
-                                    wire_quantize, ROUND_STOCHASTIC)
+from repro.core.fixed_point import (FixedPointFormat, QuantStats, exp2_int,
+                                    quantize, wire_quantize, ROUND_STOCHASTIC)
 
 
 def dps_quant_ref(x: jax.Array, il: jax.Array, fl: jax.Array,
@@ -44,7 +44,57 @@ def dps_quant_wire_ref(x: jax.Array, il: jax.Array, fl: jax.Array,
     return wire, vec
 
 
+def dps_quant_group_wire_ref(x: jax.Array, il: jax.Array, fl: jax.Array,
+                             tile_group: jax.Array, bits, mask: jax.Array,
+                             quantum: int, mode: str = ROUND_STOCHASTIC):
+    """Oracle for the grouped wire kernel: ``(wire [L], stats [G, 7])``.
+
+    ``x``/``bits``/``mask``: flat group-aligned buffers of ``T · quantum``
+    elements; ``il``/``fl``: int32 ``[G]`` format table; ``tile_group``:
+    int32 ``[T]``.  Per-tile formats come straight from the table rows, so
+    this is ``wire_quantize`` with a ``[T]``-shaped leading format followed
+    by a segment reduction of the per-tile stats into the group rows —
+    exactly what the kernel accumulates on-chip.
+    """
+    tiles = x.size // quantum
+    tg = jnp.asarray(tile_group, jnp.int32)
+    fmt = FixedPointFormat(jnp.asarray(il, jnp.int32)[tg],
+                           jnp.asarray(fl, jnp.int32)[tg])
+    x2 = x.reshape(tiles, quantum)
+    b2 = bits.reshape(tiles, quantum) if bits is not None else None
+    m2 = mask.reshape(tiles, quantum)
+    wire, s = wire_quantize(x2, fmt, mode=mode, bits=b2, compute_stats=True,
+                            mask=m2)
+    groups = jnp.asarray(il).shape[0]
+    seg = lambda v: jax.ops.segment_sum(v, tg, num_segments=groups)
+    mx = jnp.maximum(jax.ops.segment_max(s.max_abs, tg, num_segments=groups),
+                     0.0)
+    stats = jnp.stack([seg(s.count), seg(s.nonzero), seg(s.overflow),
+                       seg(s.abs_err_sum), seg(s.rel_err_sum),
+                       seg(s.abs_sum), mx], axis=1)
+    return wire.reshape(-1), stats
+
+
+def dps_wire_reduce_ref(wire: jax.Array, fl: jax.Array,
+                        tile_group: jax.Array, quantum: int) -> jax.Array:
+    """Oracle for the fused decode-reduce kernel: ``(n, chunk)`` int8 →
+    fp32 ``[chunk]`` mean, with per-tile FL from the ``[G]`` table."""
+    n, chunk = wire.shape
+    tiles = chunk // quantum
+    inv = exp2_int(-jnp.asarray(fl, jnp.int32))[jnp.asarray(tile_group)]
+    dec = wire.reshape(n, tiles, quantum).astype(jnp.float32) * inv[None, :,
+                                                                    None]
+    return (dec.sum(axis=0) / n).reshape(chunk)
+
+
 def stats_from_vector(vec: jax.Array) -> QuantStats:
     return QuantStats(count=vec[0], nonzero=vec[1], overflow=vec[2],
                       abs_err_sum=vec[3], rel_err_sum=vec[4], abs_sum=vec[5],
                       max_abs=vec[6])
+
+
+def stats_from_matrix(mat: jax.Array) -> QuantStats:
+    """``[G, 7]`` grouped-kernel accumulator → ``[G]``-shaped QuantStats."""
+    return QuantStats(count=mat[:, 0], nonzero=mat[:, 1], overflow=mat[:, 2],
+                      abs_err_sum=mat[:, 3], rel_err_sum=mat[:, 4],
+                      abs_sum=mat[:, 5], max_abs=mat[:, 6])

@@ -69,21 +69,26 @@ def _optimizer():
     return make_optimizer(SGDConfig())
 
 
-def _train_qcfg(mesh, grad_allreduce_bits=None, zero_opt=False,
-                wire_controller="flexpoint") -> qtrain.QuantConfig:
+def _train_qcfg(cfg, mesh, grad_allreduce_bits=None, zero_opt=False,
+                wire_controller="flexpoint",
+                wire_groups="global") -> qtrain.QuantConfig:
     """The QuantConfig a train cell compiles under — single source for the
     compile itself and the per-cell ``precision_domains`` report."""
     zero_shards = None
     if zero_opt:
         zero_shards = int(dict(zip(mesh.axis_names,
                                    mesh.devices.shape)).get("data", 1))
-    return _qcfg(grad_allreduce_bits, zero_shards, wire_controller)
+    qcfg = _qcfg(grad_allreduce_bits, zero_shards, wire_controller)
+    if wire_groups == "per-layer" and zero_shards is None:
+        qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
+    return qcfg
 
 
 def _compile_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
                    grad_allreduce_bits=None, zero_opt=False,
-                   wire_controller="flexpoint"):
-    qcfg = _train_qcfg(mesh, grad_allreduce_bits, zero_opt, wire_controller)
+                   wire_controller="flexpoint", wire_groups="global"):
+    qcfg = _train_qcfg(cfg, mesh, grad_allreduce_bits, zero_opt,
+                       wire_controller, wire_groups)
     opt = _optimizer()
     # On the production meshes (model axis > 1) the compressed all-reduce
     # and ZeRO-1 fall back (with a warning) to the implicit psum /
@@ -219,7 +224,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              probes: bool = True, overrides: Dict[str, Any] = None,
              grad_allreduce_bits: int = None,
              zero_opt: bool = False,
-             wire_controller: str = "flexpoint") -> Dict[str, Any]:
+             wire_controller: str = "flexpoint",
+             wire_groups: str = "global") -> Dict[str, Any]:
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
@@ -230,7 +236,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         import functools
         compile_fn = functools.partial(
             _compile_train, grad_allreduce_bits=grad_allreduce_bits,
-            zero_opt=zero_opt, wire_controller=wire_controller)
+            zero_opt=zero_opt, wire_controller=wire_controller,
+            wire_groups=wire_groups)
 
     t0 = time.time()
     lowered, compiled = compile_fn(cfg, shape, mesh, rules)
@@ -241,10 +248,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     stats["arch"], stats["shape"], stats["kind"] = arch, shape_name, shape.kind
     if shape.kind == "train":
         # the precision-domain registry this cell trains under (wire
-        # domains appear exactly when the compressed sync would engage);
+        # domains appear exactly when the compressed sync would engage;
+        # per-layer wire domains report their group count = leaf count);
         # _train_qcfg is the same derivation _compile_train compiled with
-        plan = _train_qcfg(mesh, grad_allreduce_bits, zero_opt,
-                           wire_controller).plan()
+        plan = _train_qcfg(cfg, mesh, grad_allreduce_bits, zero_opt,
+                           wire_controller, wire_groups).plan()
         stats["precision_domains"] = {
             n: {"controller": s.controller, "groups": s.groups,
                 "stats": s.stream(n)}
@@ -291,6 +299,12 @@ def main():
                     help="controller kind for the wire precision domains "
                          "(wire_grads/wire_params) of compressed train "
                          "cells")
+    ap.add_argument("--wire-groups", choices=("per-layer", "global"),
+                    default="global",
+                    help="wire_grads granularity for compressed train "
+                         "cells: 'per-layer' declares one ⟨IL, FL⟩ per "
+                         "param leaf ([G] controller state, reported in "
+                         "precision_domains)")
     ap.add_argument("--out", default=RESULTS_DIR)
     args = ap.parse_args()
 
@@ -323,7 +337,8 @@ def main():
                              probes=not args.no_probes and not mp,
                              grad_allreduce_bits=args.grad_allreduce_bits,
                              zero_opt=args.zero_opt,
-                             wire_controller=args.wire_controller)
+                             wire_controller=args.wire_controller,
+                             wire_groups=args.wire_groups)
             with open(out_path, "w") as f:
                 json.dump(stats, f, indent=1)
             print(f"  ok: flops={stats['flops']:.3e} "

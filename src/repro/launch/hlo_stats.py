@@ -107,6 +107,43 @@ def collective_wire_bytes(hlo_text: str) -> Dict[str, object]:
     return {"by_op_dtype": by_op, "by_dtype": by_dtype, "total": total}
 
 
+_RESULT_RE = re.compile(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+                        r"(?:\(\s*)?([a-z0-9]+)\[([\d,]*)\]")
+
+
+def op_bytes(hlo_text: str, op_name: str) -> Dict[str, object]:
+    """Result bytes of every ``op_name`` instruction, split by dtype.
+
+    Parses optimized HLO (fusion bodies included) for lines of the form
+    ``%x = <dtype>[dims] <op_name>(...)`` and sums the result-shape bytes
+    per dtype.  Returns ``{"by_dtype": {dtype: bytes}, "total": float,
+    "count": int}``.  The headline consumer is the no-fp32-flat-concat
+    guarantee of the rebuilt ``dps_allreduce_mean_tree``: a compiled tree
+    all-reduce must show (near-)zero ``f32`` ``concatenate`` bytes — the
+    leaves are encoded straight into the preallocated int8 wire buffer.
+    """
+    by_dtype: Dict[str, float] = {}
+    count = 0
+    needle = f" {op_name}("
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if needle not in s:
+            continue
+        m = _RESULT_RE.match(s)
+        if not m:
+            continue
+        dtype, dims = m.group(1), m.group(2)
+        by_dtype[dtype] = by_dtype.get(dtype, 0.0) + _shape_bytes(dtype, dims)
+        count += 1
+    return {"by_dtype": by_dtype,
+            "total": float(sum(by_dtype.values())), "count": count}
+
+
+def concat_bytes(hlo_text: str) -> Dict[str, object]:
+    """:func:`op_bytes` for ``concatenate`` — the fp32 flat-concat probe."""
+    return op_bytes(hlo_text, "concatenate")
+
+
 def wire_bytes_summary(hlo_text: str) -> Dict[str, float]:
     """Compact int8-vs-fp32 view of :func:`collective_wire_bytes`.
 

@@ -194,6 +194,16 @@ def prefill_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 # Step builders.
 # ---------------------------------------------------------------------------
 
+def per_layer_wire_qcfg(cfg: ModelConfig,
+                        qcfg: qtrain.QuantConfig) -> qtrain.QuantConfig:
+    """``qcfg`` with one ``wire_grads`` ⟨IL, FL⟩ per parameter leaf of this
+    arch — the group count derives from the abstract param tree, so launch
+    code can finalize the config before any tensor exists.  A no-op unless
+    the compressed gradient sync is configured."""
+    return qcfg.with_per_layer_wire(
+        abstract_params(registry(cfg.family).model_defs(cfg)))
+
+
 def build_train_step(cfg: ModelConfig, qcfg: qtrain.QuantConfig, optimizer,
                      accum_steps: Optional[int] = None, mesh: Optional[Mesh] = None):
     """Train step for one arch.  ``mesh`` is only needed when

@@ -85,6 +85,18 @@ def main(argv=None):
                          "(default) drives the wire radix from max|x|, "
                          "immune to the hair-trigger r_max IL ratchet "
                          "(see dist/README.md)")
+    ap.add_argument("--wire-groups", choices=("per-layer", "global"),
+                    default=os.environ.get("REPRO_WIRE_GROUPS")
+                    or "per-layer",
+                    help="granularity of the wire_grads ⟨IL, FL⟩: "
+                         "'per-layer' (default) runs one format per "
+                         "gradient leaf through the group-aligned "
+                         "collectives ([G, 2] kernel format table); "
+                         "'global' keeps the single shared wire format. "
+                         "ZeRO (--zero-opt) always runs 'global' (the "
+                         "flat layout erases leaf boundaries).  Resume "
+                         "with the same choice — the wire_grads ckpt "
+                         "state is [G]-shaped under per-layer")
     ap.add_argument("--zero-opt", action="store_true",
                     help="ZeRO-1: shard the optimizer state across the "
                          "data axis (flat padded layout, 1/n state bytes "
@@ -112,6 +124,11 @@ def main(argv=None):
                               grad_allreduce_bits=args.grad_allreduce_bits,
                               zero_opt_shards=zero_shards,
                               wire_controller=args.wire_controller)
+    if args.wire_groups == "per-layer" and zero_shards is None:
+        # one wire ⟨IL, FL⟩ per gradient leaf; the group count derives
+        # from the abstract param tree so the plan (and with it the DPS
+        # checkpoint layout) is fixed before any tensor exists.
+        qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
     opt_cfg = (AdamWConfig(total_steps=args.steps) if args.optimizer == "adamw"
                else SGDConfig())
     mesh = None
@@ -170,10 +187,20 @@ def main(argv=None):
                     "(straggler watchdog)")
             history.append(metrics)
             if step % args.log_every == 0 or step == args.steps - 1:
-                # wire precision domains log alongside the compute triple
+                # wire precision domains log alongside the compute triple;
+                # per-layer (grouped) wire domains show mean(min-max) so
+                # the per-group spread is visible in the train log
+                def _wfmt(dom):
+                    il, fl = metrics[f"il_{dom}"], metrics[f"fl_{dom}"]
+                    if f"il_{dom}_min" in metrics:
+                        return (f"<{il:.1f}({metrics[f'il_{dom}_min']:.0f}-"
+                                f"{metrics[f'il_{dom}_max']:.0f}),"
+                                f"{fl:.1f}({metrics[f'fl_{dom}_min']:.0f}-"
+                                f"{metrics[f'fl_{dom}_max']:.0f})> ")
+                    return f"<{il:.0f},{fl:.0f}> "
+
                 wire = "".join(
-                    f"{tag}<{metrics[f'il_{dom}']:.0f},"
-                    f"{metrics[f'fl_{dom}']:.0f}> "
+                    tag + _wfmt(dom)
                     for tag, dom in (("wg", "wire_grads"),
                                      ("wp", "wire_params"))
                     if f"il_{dom}" in metrics)

@@ -316,6 +316,269 @@ def test_wire_codec_roundtrip_property():
                                        float(s_k.abs_err_sum), rtol=1e-6)
 
 
+def test_wire_codec_grouped_property_sweep():
+    """Satellite property sweep: for random ⟨IL, FL⟩ tables, group counts
+    and shapes (equal-chunk and explicit non-divisible group_sizes), the
+    grouped KERNEL codec ≡ the grouped jnp codec ≡ G independent
+    global-format calls on the per-group slices — wire bytes bit-exact,
+    stats allclose, decode round-trips through both backends."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.fixed_point import FixedPointFormat
+    from repro.dist.collectives import wire_decode, wire_encode
+
+    rng = np.random.RandomState(7)
+    for trial in range(12):
+        groups = int(rng.randint(1, 6))
+        il = rng.randint(1, 8, size=groups)
+        fl = np.array([rng.randint(1, 9 - i) for i in il])
+        fmt = FixedPointFormat(jnp.asarray(il, jnp.int32),
+                               jnp.asarray(fl, jnp.int32))
+        if rng.rand() < 0.5:
+            # explicit per-layer group sizes (non-divisible on purpose)
+            sizes = tuple(int(s) for s in rng.randint(1, 5000, size=groups))
+            n = sum(sizes)
+        else:
+            # the equal-chunk default split
+            sizes = None
+            n = int(rng.choice([7, 333, 1000, 4097]))
+        key = jax.random.key(100 + trial)
+        x = (jax.random.normal(key, (n,))
+             * (2.0 ** (il.max() - 1)) * 0.75).astype(jnp.float32)
+        bits = jax.random.bits(jax.random.fold_in(key, 1), shape=(n,),
+                               dtype=jnp.uint32)
+
+        for mode in ("stochastic", "nearest"):
+            b = bits if mode == "stochastic" else None
+            w_j, s_j = wire_encode(x, fmt, bits=b, mode=mode, backend="jnp",
+                                   group_sizes=sizes)
+            w_k, s_k = wire_encode(x, fmt, bits=b, mode=mode,
+                                   backend="kernel", group_sizes=sizes)
+            np.testing.assert_array_equal(np.asarray(w_j), np.asarray(w_k))
+            # independent per-group calls on the slices
+            eff = sizes
+            if eff is None:
+                chunk = -(-n // groups)
+                eff = tuple(max(0, min(chunk, n - g * chunk))
+                            for g in range(groups))
+            off = 0
+            for g, sz in enumerate(eff):
+                if not sz:
+                    continue
+                f_g = FixedPointFormat.create(int(il[g]), int(fl[g]))
+                w_i, s_i = wire_encode(
+                    x[off:off + sz], f_g,
+                    bits=b[off:off + sz] if b is not None else None,
+                    mode=mode)
+                np.testing.assert_array_equal(np.asarray(w_j[off:off + sz]),
+                                              np.asarray(w_i))
+                for stats in (s_j, s_k):
+                    for field in ("count", "nonzero", "overflow",
+                                  "abs_err_sum", "rel_err_sum", "abs_sum",
+                                  "max_abs"):
+                        np.testing.assert_allclose(
+                            float(getattr(stats, field)[g]),
+                            float(getattr(s_i, field)),
+                            rtol=1e-5, atol=1e-4,
+                            err_msg=f"trial {trial} {mode} group {g} {field}")
+                off += sz
+            # grouped decode matches per-group decode
+            dec = np.asarray(wire_decode(w_j, fmt, group_sizes=sizes))
+            off = 0
+            for g, sz in enumerate(eff):
+                ref = np.asarray(w_j[off:off + sz], np.float32
+                                 ) * 2.0 ** -float(fl[g])
+                np.testing.assert_array_equal(dec[off:off + sz], ref)
+                off += sz
+
+
+def test_wire_encode_group_sizes_validation():
+    import jax
+    import jax.numpy as jnp
+    import pytest
+    from repro.core.fixed_point import FixedPointFormat
+    from repro.dist.collectives import wire_encode
+
+    fmt_g = FixedPointFormat(jnp.array([3, 3], jnp.int32),
+                             jnp.array([5, 5], jnp.int32))
+    x = jax.numpy.ones((10,))
+    with pytest.raises(ValueError, match="group_sizes"):
+        wire_encode(x, fmt_g, key=jax.random.key(0), group_sizes=(3, 3))
+    with pytest.raises(ValueError, match="group_sizes"):
+        wire_encode(x, FixedPointFormat.create(3, 5),
+                    key=jax.random.key(0), group_sizes=(5, 5))
+
+
+def test_grouped_allreduce_unequal_groups_matches_oracle_both_backends():
+    """[G] formats with per-layer group_sizes through BOTH collective legs
+    on 8 ranks: per-group error bounds against the numpy mean, [G] stats
+    counting each global element once, and jnp/kernel backends
+    bit-identical (the acceptance-criteria pin)."""
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.fixed_point import FixedPointFormat
+        from repro.dist.collectives import dps_allreduce_mean, psum_stats
+
+        mesh = jax.make_mesh((8,), ("data",))
+        sizes = (5000, 37, 9000, 1)
+        n = sum(sizes)
+        il = [3, 2, 4, 3]; fl = [5, 6, 4, 5]
+        fmt = FixedPointFormat(jnp.array(il, jnp.int32),
+                               jnp.array(fl, jnp.int32))
+        x = jax.random.normal(jax.random.key(0), (8, n)) * 0.5
+
+        def make(backend):
+            def body(xs, k):
+                m, s = dps_allreduce_mean(xs[0], fmt, "data", k,
+                                          backend=backend,
+                                          group_sizes=sizes)
+                st = psum_stats(s, "data")
+                return m, st.count
+            return jax.jit(jax.shard_map(body, mesh=mesh,
+                           in_specs=(P("data", None), P()),
+                           out_specs=(P(), P()), check_vma=False))
+
+        key = jax.random.key(1)
+        m_j, c_j = make("jnp")(x, key)
+        m_k, c_k = make("kernel")(x, key)
+        assert jnp.array_equal(m_j, m_k), "backends must be bit-identical"
+        np.testing.assert_array_equal(np.asarray(c_j), np.asarray(c_k))
+        np.testing.assert_allclose(np.asarray(c_j),
+                                   np.array(sizes, np.float32) * 8)
+        exact = np.asarray(x, np.float64).mean(0)
+        offs = np.cumsum([0] + list(sizes))
+        for g in range(4):
+            lo, hi = offs[g], offs[g + 1]
+            err = np.abs(np.asarray(m_j)[lo:hi] - exact[lo:hi]).max()
+            assert err < 2 * 2.0 ** -float(fl[g]) + 1e-6, (g, err)
+        print("OK")
+    """)
+
+
+def test_grouped_tree_allreduce_per_leaf_formats():
+    """dps_allreduce_mean_tree with a [G] table = one ⟨IL, FL⟩ per leaf:
+    per-leaf error bounds at that leaf's FL, [G] stats in leaf order, and
+    a leaf-count mismatch raises."""
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.fixed_point import FixedPointFormat
+        from repro.dist.collectives import dps_allreduce_mean_tree, psum_stats
+
+        mesh = jax.make_mesh((8,), ("data",))
+        tree = {"a": jax.random.normal(jax.random.key(0), (8, 700)) * 0.5,
+                "b": jax.random.normal(jax.random.key(1), (8, 3000)) * 0.5,
+                "c": jax.random.normal(jax.random.key(2), (8, 5)) * 0.5}
+        fmt = FixedPointFormat(jnp.array([3, 2, 4], jnp.int32),
+                               jnp.array([5, 6, 4], jnp.int32))
+        specs = {k: P("data") for k in tree}
+
+        def body(tr, k):
+            m, s = dps_allreduce_mean_tree(tr, fmt, "data", k)
+            return m, psum_stats(s, "data").count
+        f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(specs, P()),
+                                  out_specs=(P(), P()), check_vma=False))
+        mean, count = f(tree, jax.random.key(3))
+        np.testing.assert_allclose(np.asarray(count),
+                                   np.array([700, 3000, 5]) * 8.0)
+        for leaf, fl in (("a", 5), ("b", 6), ("c", 4)):
+            exact = np.asarray(tree[leaf], np.float64).mean(0)
+            err = np.abs(np.asarray(mean[leaf]) - exact).max()
+            assert err < 2 * 2.0 ** -fl + 1e-6, (leaf, err)
+
+        # wrong table height: informative error, not silent misuse
+        bad = FixedPointFormat(jnp.array([3, 3], jnp.int32),
+                               jnp.array([5, 5], jnp.int32))
+        try:
+            jax.jit(jax.shard_map(
+                lambda tr, k: dps_allreduce_mean_tree(tr, bad, "data", k)[0],
+                mesh=mesh, in_specs=(specs, P()), out_specs=P(),
+                check_vma=False))(tree, jax.random.key(4))
+            raise AssertionError("leaf-count mismatch must raise")
+        except ValueError as e:
+            assert "per leaf" in str(e), e
+        print("OK")
+    """)
+
+
+def test_grouped_zero_half_collectives_match_oracle():
+    """The ZeRO halves accept [G] formats now (the scalar-only ValueErrors
+    are gone): reduce-scatter mean and params all-gather against numpy
+    oracles with per-element group formats."""
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.fixed_point import FixedPointFormat
+        from repro.dist.collectives import (dps_allgather_params,
+                                            dps_reduce_scatter_mean,
+                                            psum_stats)
+
+        mesh = jax.make_mesh((8,), ("data",))
+        n, per = 8, 1001
+        sizes = (700, 301)
+        fmt = FixedPointFormat(jnp.array([3, 2], jnp.int32),
+                               jnp.array([5, 6], jnp.int32))
+        x = jax.random.normal(jax.random.key(0), (n, per)) * 0.4
+
+        def body(xs, key):
+            shard, s1 = dps_reduce_scatter_mean(xs[0], fmt, "data", key,
+                                                group_sizes=sizes)
+            shards = jax.lax.all_gather(shard, "data", axis=0, tiled=True)
+            full, s2 = dps_allgather_params(shard, fmt, "data",
+                                            jax.random.fold_in(key, 1),
+                                            group_sizes=None)
+            return (shards, full, psum_stats(s1, "data").count,
+                    psum_stats(s2, "data").count)
+
+        f = jax.jit(jax.shard_map(body, mesh=mesh,
+                    in_specs=(P("data", None), P()),
+                    out_specs=(P(), P(), P(), P()), check_vma=False))
+        shards, full, c1, c2 = f(x, jax.random.key(42))
+        np.testing.assert_allclose(np.asarray(c1),
+                                   np.array(sizes, np.float32) * 8)
+        chunk = -(-per // n)
+        exact = np.zeros((n * chunk,))
+        exact[:per] = np.asarray(x, np.float64).mean(0)
+        # per-position bound: the format of each element's group
+        offs = np.cumsum([0] + list(sizes))
+        step = np.full((n * chunk,), 2.0 ** -5)
+        step[offs[1]:offs[2]] = 2.0 ** -6
+        err = np.abs(np.asarray(shards) - exact)
+        assert (err < step + 1e-6).all(), err.max()
+        # the gather leg re-quantizes the shard once more (equal-chunk
+        # default groups over the gathered vector)
+        err2 = np.abs(np.asarray(full) - np.asarray(shards))
+        assert (err2 < 2.0 ** -5 + 1e-6).all(), err2.max()
+        print("OK")
+    """)
+
+
+def test_zero_halves_reject_explicit_kernel_backend_for_groups():
+    """An explicit backend='kernel' with a [G] format must raise in the
+    ZeRO halves (their chunk layout can't be tile-aligned), not silently
+    degrade to the jnp codec — the satellite no-silent-degrade rule."""
+    import jax
+    import jax.numpy as jnp
+    import pytest
+    from jax.sharding import PartitionSpec as P
+    from repro.core.fixed_point import FixedPointFormat
+    from repro.dist.collectives import (dps_allgather_params,
+                                        dps_reduce_scatter_mean)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    fmt = FixedPointFormat(jnp.array([3, 3], jnp.int32),
+                           jnp.array([5, 5], jnp.int32))
+    x = jnp.ones((64,))
+    for coll in (dps_reduce_scatter_mean, dps_allgather_params):
+        f = jax.shard_map(
+            lambda xs, k: coll(xs, fmt, "data", k, backend="kernel")[0],
+            mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_vma=False)
+        with pytest.raises(ValueError, match="cannot be honored"):
+            jax.jit(f)(x, jax.random.key(0))
+
+
 def test_reduce_scatter_rejects_overwide_static_format():
     """IL + FL > 8 with concrete widths must fail eagerly through BOTH ZeRO
     half-collectives, exactly like the all-reduce path."""

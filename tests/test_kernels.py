@@ -194,6 +194,147 @@ def test_onchip_prng_wire_variant_traces():
     assert stats.shape == (7,) and stats.dtype == jnp.float32
 
 
+# ---------------------------------------------------------------------------
+# Grouped wire kernel ([G, 2] SMEM format table) + fused decode-reduce.
+# ---------------------------------------------------------------------------
+
+from repro.kernels.dps_quant import (DEFAULT_GROUP_QUANTUM, MIN_GROUP_QUANTUM,
+                                     dps_quant_group_wire_pallas, group_block,
+                                     dps_wire_reduce_pallas)
+from repro.kernels.ref import (dps_quant_group_wire_ref, dps_wire_reduce_ref,
+                               stats_from_matrix)
+
+
+def _grouped_operands(seed, tile_groups, quantum, holes=0):
+    """(x, bits, mask) for a group-aligned buffer of len(tile_groups) tiles;
+    ``holes`` masks that many trailing elements of each group's last tile
+    (the alignment-padding pattern)."""
+    tg = np.asarray(tile_groups, np.int32)
+    L = tg.size * quantum
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (L,)) * 2.0
+    bits = jax.random.bits(jax.random.fold_in(key, 1), shape=(L,),
+                           dtype=jnp.uint32)
+    mask = np.ones((L,), np.float32)
+    if holes:
+        for g in np.unique(tg):
+            last = np.nonzero(tg == g)[0].max()
+            mask[(last + 1) * quantum - holes:(last + 1) * quantum] = 0.0
+    return x, bits, jnp.asarray(mask), jnp.asarray(tg)
+
+
+@pytest.mark.parametrize("tiles_spec, ilfl", [
+    ([0, 0, 1, 2, 2], ([3, 2, 4], [5, 6, 4])),
+    ([0], ([2], [6])),
+    ([1, 0, 1, 0], ([4, 3], [4, 5])),     # interleaved tile->group map
+])
+def test_grouped_wire_kernel_matches_ref(tiles_spec, ilfl):
+    il, fl = ilfl
+    Q = DEFAULT_GROUP_QUANTUM
+    x, bits, mask, tg = _grouped_operands(7, tiles_spec, Q, holes=13)
+    fmt_tab = jnp.stack([jnp.array(il, jnp.int32),
+                         jnp.array(fl, jnp.int32)], axis=1)
+    for stochastic in (True, False):
+        w_k, mat_k = dps_quant_group_wire_pallas(
+            x, fmt_tab, tg, jnp.zeros((1,), jnp.int32), bits, mask,
+            stochastic=stochastic, quantum=Q)
+        w_r, mat_r = dps_quant_group_wire_ref(
+            x, jnp.array(il), jnp.array(fl), tg, bits, mask, Q,
+            mode="stochastic" if stochastic else "nearest")
+        assert w_k.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+        np.testing.assert_allclose(np.asarray(mat_k), np.asarray(mat_r),
+                                   rtol=1e-6, atol=1e-4)
+
+
+def test_grouped_wire_kernel_matches_global_kernel_per_group():
+    """A [G] table must reproduce G independent global-format wire-kernel
+    calls on the per-group slices (same elements, same bits)."""
+    Q = DEFAULT_GROUP_QUANTUM
+    tiles = [0, 0, 1, 2]
+    il, fl = [3, 2, 4], [5, 6, 4]
+    x, bits, mask, tg = _grouped_operands(3, tiles, Q)
+    fmt_tab = jnp.stack([jnp.array(il, jnp.int32),
+                         jnp.array(fl, jnp.int32)], axis=1)
+    w_g, mat_g = dps_quant_group_wire_pallas(
+        x, fmt_tab, tg, jnp.zeros((1,), jnp.int32), bits, mask, quantum=Q)
+    bounds = [(0, 2 * Q), (2 * Q, 3 * Q), (3 * Q, 4 * Q)]
+    for g, (lo, hi) in enumerate(bounds):
+        fmt3 = jnp.array([il[g], fl[g], 0], jnp.int32)
+        w_i, vec_i = dps_quant_wire_pallas(
+            np.asarray(x[lo:hi]).reshape(-1, 128), fmt3,
+            np.asarray(bits[lo:hi]).reshape(-1, 128))
+        np.testing.assert_array_equal(np.asarray(w_g[lo:hi]),
+                                      np.asarray(w_i).reshape(-1))
+        np.testing.assert_allclose(np.asarray(mat_g[g]), np.asarray(vec_i),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_group_block_quantum_validation():
+    assert group_block(4096) == (32, 128)
+    assert group_block(32768) == (32, 1024)
+    assert group_block(262144) == (256, 1024)
+    with pytest.raises(ValueError, match="multiple"):
+        group_block(1024)
+    assert MIN_GROUP_QUANTUM == 4096
+
+
+def test_wire_reduce_kernel_matches_ref_and_jnp_mean():
+    """The fused decode-reduce == per-element decode + mean, bit-exactly
+    (every decoded value is an exact fp32 multiple of its group's 2^-FL)."""
+    Q = DEFAULT_GROUP_QUANTUM
+    n, tiles = 8, 3
+    key = jax.random.key(5)
+    wire = jax.random.randint(key, (n, tiles * Q), -128, 128, jnp.int8)
+    fl = jnp.array([5, 2, 7], jnp.int32)
+    tg = jnp.array([0, 2, 1], jnp.int32)
+    fmt_tab = jnp.stack([jnp.array([3, 6, 1], jnp.int32), fl], axis=1)
+    out = dps_wire_reduce_pallas(wire, fmt_tab, tg, quantum=Q)
+    ref = dps_wire_reduce_ref(wire, fl, tg, Q)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # against the naive jnp decode-then-mean
+    inv = np.asarray([2.0 ** -5, 2.0 ** -7, 2.0 ** -2], np.float32)
+    dec = np.asarray(wire, np.float32).reshape(n, tiles, Q) * inv[None, :,
+                                                                  None]
+    np.testing.assert_array_equal(np.asarray(out),
+                                  (dec.sum(0) / n).reshape(-1))
+
+
+def test_grouped_kernel_onchip_prng_traces():
+    """The TPU PRNG grouped variant must trace with int8 wire + [G, 7]
+    stats (execution needs real TPU; see test_onchip_prng_variant_traces)."""
+    Q = DEFAULT_GROUP_QUANTUM
+    x = jax.ShapeDtypeStruct((4 * Q,), jnp.float32)
+    tab = jax.ShapeDtypeStruct((3, 2), jnp.int32)
+    tg = jax.ShapeDtypeStruct((4,), jnp.int32)
+    seed = jax.ShapeDtypeStruct((1,), jnp.int32)
+    bits = jax.ShapeDtypeStruct((4 * Q,), jnp.uint32)
+    mask = jax.ShapeDtypeStruct((4 * Q,), jnp.float32)
+    w, stats = jax.eval_shape(
+        lambda *a: dps_quant_group_wire_pallas(
+            *a, use_onchip_prng=True, quantum=Q, interpret=False),
+        x, tab, tg, seed, bits, mask)
+    assert w.shape == (4 * Q,) and w.dtype == jnp.int8
+    assert stats.shape == (3, 7) and stats.dtype == jnp.float32
+
+
+def test_pallas_quant_skips_noop_pads():
+    """Tile-aligned shapes must not pay the three pad copies (satellite:
+    _pallas_quant padded x/bits/mask even when already aligned)."""
+    x = jax.ShapeDtypeStruct((256, 1024), jnp.float32)
+    fmt3 = jax.ShapeDtypeStruct((3,), jnp.int32)
+    bits = jax.ShapeDtypeStruct((256, 1024), jnp.uint32)
+    jaxpr = jax.make_jaxpr(
+        lambda x, fmt3, bits: dps_quant_pallas(x, fmt3, bits))(x, fmt3, bits)
+    assert "pad[" not in str(jaxpr)
+    # and a genuinely ragged shape still pads (the mask keeps stats clean)
+    xr = jax.ShapeDtypeStruct((300, 1100), jnp.float32)
+    br = jax.ShapeDtypeStruct((300, 1100), jnp.uint32)
+    jaxpr_r = jax.make_jaxpr(
+        lambda x, fmt3, bits: dps_quant_pallas(x, fmt3, bits))(xr, fmt3, br)
+    assert "pad[" in str(jaxpr_r)
+
+
 def test_onchip_prng_variant_traces():
     """The TPU PRNG path must trace (kernel jaxpr builds; execution needs TPU).
 

@@ -152,6 +152,72 @@ def test_stats_routing_and_scalar_broadcast_to_groups():
                                   np.full((3,), int(out["grads"].il)))
 
 
+def test_group_stream_routes_group_wise_into_grouped_domain():
+    """A [G] stats stream drives each group's controller row independently
+    (the per-layer wire regime: group g's wire stats move only group g's
+    ⟨IL, FL⟩), and a shape-mismatched stream still raises."""
+    plan = PrecisionPlan((
+        ("wire_grads", DomainSpec("flexpoint",
+                                  DPSHyper(total_bits=8, il_min=1,
+                                           il_init=4), groups=3)),
+    ))
+    bundle = plan.init()
+    zero = jnp.zeros((3,), jnp.float32)
+    # only group 1 observes a large max |g|
+    st = QuantStats(count=jnp.full((3,), 100.0), nonzero=jnp.full((3,), 90.0),
+                    overflow=zero, abs_err_sum=zero, rel_err_sum=zero,
+                    abs_sum=zero,
+                    max_abs=jnp.asarray([0.01, 40.0, 0.01], jnp.float32))
+    out = plan.update(bundle, {"wire_grads": st}, None)
+    il = np.asarray(out["wire_grads"].il)
+    assert il[1] > il[0] and il[1] > il[2], il  # radix follows ITS group
+    assert il[0] == il[2], il
+    with pytest.raises(ValueError, match="scalar or match"):
+        bad = jax.tree.map(lambda x: jnp.broadcast_to(x[:2], (2,)), st)
+        plan.update(bundle, {"wire_grads": bad}, None)
+
+
+def test_with_per_layer_wire_sets_groups_from_leaf_count():
+    params = {"a": jnp.zeros((3, 4)), "b": {"w": jnp.zeros((5,)),
+                                            "s": jnp.zeros(())}}
+    base = qtrain.QuantConfig(enabled=True)
+    assert base.with_per_layer_wire(params) is base    # no wire -> no-op
+    qcfg = qtrain.QuantConfig(enabled=True, grad_allreduce_bits=8
+                              ).with_per_layer_wire(params)
+    assert qcfg.wire_grads_groups == 3
+    assert qcfg.plan().spec("wire_grads").groups == 3
+    bundle = qtrain.init_dps_bundle(qcfg)
+    assert bundle["wire_grads"].il.shape == (3,)
+    # the [G] formats surface in bundle_formats for the collectives' table
+    fmts = qtrain.bundle_formats(qcfg, bundle)
+    assert fmts["wire_grads"].il.shape == (3,)
+
+
+def test_per_layer_wire_with_zero_opt_raises():
+    from repro.models import lenet
+    from repro.optim import SGDConfig, make_optimizer
+    params = lenet.init(jax.random.key(0))
+    qcfg = qtrain.QuantConfig(enabled=True, grad_allreduce_bits=8,
+                              zero_opt_shards=1
+                              ).with_per_layer_wire(params)
+    mesh = jax.make_mesh((1,), ("data",))
+    opt = make_optimizer(SGDConfig())
+    # single-device mesh: neither path engages, so the build succeeds ...
+    qtrain.make_train_step(lenet.loss_fn, opt, qcfg, mesh=mesh)
+    # ... but an engaging ZeRO mesh must reject per-layer wire groups
+    # (the flat partitioner layout erases leaf boundaries).  Exercised
+    # through the validation directly: fake an engaged config check via
+    # a 1-axis mesh of the real device count when >1 devices exist.
+    if jax.device_count() > 1:
+        n = jax.device_count()
+        mesh_n = jax.make_mesh((n,), ("data",))
+        qcfg_n = qtrain.QuantConfig(enabled=True, grad_allreduce_bits=8,
+                                    zero_opt_shards=n
+                                    ).with_per_layer_wire(params)
+        with pytest.raises(ValueError, match="per-layer wire"):
+            qtrain.make_train_step(lenet.loss_fn, opt, qcfg_n, mesh=mesh_n)
+
+
 def test_bits_none_step_bitexact_under_extra_domains():
     """Domains nobody feeds or reads cannot perturb training: a plan with
     wire + custom domains produces the identical parameter trajectory to
