@@ -1,0 +1,21 @@
+"""Static precision-flow verifier for the DPS wire pipeline.
+
+Three passes prove — without running a training step — that a compiled
+configuration honors the numerical contract the runtime tests sample:
+
+* :mod:`repro.analysis.flow` — jaxpr dataflow: taint-propagates quantized
+  values from their declared encode sites (``repro.core.tagging``) and
+  flags fp32 on the wire, dequant→requant round-trips, wire stats routed
+  to non-wire controllers, and seedless stochastic-rounding paths.
+* :mod:`repro.analysis.hlo_audit` — compiled-HLO rule engine: collective
+  payload dtype budgets per domain, zero-f32-concatenate in grouped/tree
+  steps, two-leg wire-byte ratios, declared-domain coverage.
+* :mod:`repro.analysis.kernel_checks` — Pallas call-site geometry:
+  SMEM format-table bounds, tile/group alignment, int8 tile minimums,
+  scalar-prefetch arity.
+
+``python -m repro.analysis.lint`` runs all three over the launchable
+config grid; see ``src/repro/analysis/README.md`` for the rule catalogue.
+"""
+
+from repro.analysis.report import Report, Violation  # noqa: F401

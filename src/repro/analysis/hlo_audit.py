@@ -1,0 +1,168 @@
+"""Compiled-HLO rule engine: machine-checkable wire claims per config.
+
+Where :mod:`repro.analysis.flow` proves invariants on the traced jaxpr,
+this pass proves them on what XLA actually compiled — the two can drift
+(fusion, constant folding, collective rewriting), and the wire-byte
+contract only exists post-compilation.  It generalizes the one-off
+assertions of ``tests/test_train_allreduce.py`` / ``tests/test_zero.py``
+into a reusable engine over :class:`AuditClaims`:
+
+``HA-PAYLOAD-DTYPE``
+    Wire legs carry s8, never f32: in a step with any engaged wire
+    domain, every ``all-to-all`` payload byte must be int8 (the
+    all-to-all exists only as the compressed dispatch leg), and an
+    engaged ``wire_params`` / two-leg ``wire_grads`` schedule must show
+    nonzero s8 ``all-gather`` bytes.
+
+``HA-F32-RESIDUAL``
+    With the gradient wire engaged, residual fp32 collective traffic
+    (loss/stats syncs) must stay under ``f32_residual_frac`` of the
+    ring-model fp32 all-reduce a wire-less step would pay
+    (``2 × 4 × n_wire_elems`` bytes) — the compiled-HLO form of the
+    ``f32_ar8 < 0.01 · f32_ar`` regression pin.
+
+``HA-F32-CONCAT``
+    Grouped/tree schedules encode leaves straight into the int8 buffer:
+    fp32 ``concatenate`` bytes must stay under ``f32_concat_budget``.
+
+``HA-WIRE-RATIO``
+    Total int8 wire bytes must sit inside declared bounds around the
+    ideal two-leg cost (≈ ``2 × n_wire_elems`` bytes for an all-reduce:
+    one byte per element per leg) — catches both a missing leg and
+    padding blow-ups from a mis-sized quantum.
+
+``HA-DOMAIN-COVERAGE``
+    Every *engaged* wire domain must have a matching s8 payload in the
+    compiled HLO (``wire_grads`` → all-to-all, ``wire_params`` →
+    all-gather).  A domain the config declares and the runtime engages
+    but the HLO never serves is exactly the dryrun drift this PR closes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.analysis.report import Report
+from repro.launch.hlo_stats import collective_wire_bytes, concat_bytes
+
+# which collective op serves each wire domain's payload
+DOMAIN_PAYLOAD_OPS: Dict[str, Tuple[str, ...]] = {
+    "wire_grads": ("all-to-all",),
+    "wire_params": ("all-gather",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditClaims:
+    """What a given config promises its compiled HLO looks like.
+
+    ``engaged`` lists the wire domains the runtime will actually drive on
+    this mesh (declaration alone is not a claim: a config can declare
+    ``wire_grads`` and compile on a mesh where the sync is skipped —
+    see ``repro.core.qtrain.wire_sync_engaged``).  ``two_leg`` marks the
+    all-reduce schedule (dispatch + gather) as opposed to the ZeRO
+    half-collectives.  ``n_wire_elems`` sizes the ratio/residual bounds;
+    ``None`` skips them.
+    """
+
+    engaged: Tuple[str, ...] = ()
+    two_leg: bool = True
+    grouped: bool = False
+    n_wire_elems: Optional[int] = None
+    wire_ratio_bounds: Tuple[float, float] = (0.5, 3.0)
+    f32_residual_frac: float = 0.02
+    # fp32 collective bytes the config DECLARES (e.g. the ZeRO param
+    # all-gather falls back to fp32 when the policy excludes leaves — see
+    # qtrain.wire_params_engaged); added on top of the residual budget.
+    f32_declared_bytes: float = 0.0
+    f32_concat_budget: float = 0.0
+
+
+def audit_hlo(hlo_text: str, claims: AuditClaims,
+              name: str = "hlo") -> Report:
+    """Evaluate every HA rule the claims make checkable; returns a Report."""
+    report = Report(name=name)
+    wire = collective_wire_bytes(hlo_text)
+    by_op = wire["by_op_dtype"]
+    by_dtype = wire["by_dtype"]
+
+    def op_dtype(op: str, dtype: str) -> float:
+        return by_op.get(op, {}).get(dtype, 0.0)
+
+    def op_total(op: str, *dtypes: str) -> float:
+        d = by_op.get(op, {})
+        return sum(v for k, v in d.items() if not dtypes or k in dtypes)
+
+    int8_total = by_dtype.get("s8", 0.0) + by_dtype.get("u8", 0.0)
+
+    if claims.engaged:
+        report.mark_checked("HA-PAYLOAD-DTYPE", "HA-DOMAIN-COVERAGE")
+        bad_a2a = op_total("all-to-all") - op_total("all-to-all", "s8", "u8")
+        if bad_a2a > 0:
+            report.add(
+                "HA-PAYLOAD-DTYPE",
+                f"{bad_a2a:.0f} non-int8 all-to-all bytes "
+                f"({by_op.get('all-to-all')}) — the dispatch leg must ship "
+                f"s8 grid integers only", name)
+        if claims.two_leg and "wire_grads" in claims.engaged \
+                and op_dtype("all-gather", "s8") == 0.0:
+            report.add(
+                "HA-PAYLOAD-DTYPE",
+                "two-leg gradient wire engaged but no s8 all-gather bytes "
+                "in the compiled HLO — the gather leg is missing or fp32",
+                name)
+        for dom in claims.engaged:
+            ops = DOMAIN_PAYLOAD_OPS.get(dom)
+            if ops is None:
+                report.add("HA-DOMAIN-COVERAGE",
+                           f"unknown wire domain {dom!r} has no payload-op "
+                           f"mapping", name)
+                continue
+            served = sum(op_dtype(op, "s8") + op_dtype(op, "u8")
+                         for op in ops)
+            if served == 0.0:
+                report.add(
+                    "HA-DOMAIN-COVERAGE",
+                    f"domain {dom!r} is engaged but the compiled HLO has "
+                    f"no int8 {'/'.join(ops)} payload — the declared wire "
+                    f"never materialized", name)
+
+    if claims.engaged and claims.n_wire_elems:
+        report.mark_checked("HA-F32-RESIDUAL", "HA-WIRE-RATIO")
+        f32_ref = 2.0 * 4.0 * claims.n_wire_elems
+        f32 = by_dtype.get("f32", 0.0)
+        budget = claims.f32_declared_bytes \
+            + claims.f32_residual_frac * f32_ref
+        if f32 > budget:
+            report.add(
+                "HA-F32-RESIDUAL",
+                f"{f32:.0f} fp32 collective bytes vs a "
+                f"{claims.f32_residual_frac:.0%}-of-{f32_ref:.0f}-B "
+                f"residual budget (+ {claims.f32_declared_bytes:.0f} B "
+                f"declared) — an uncompressed tensor is riding the "
+                f"interconnect", name)
+        legs = 2.0 if claims.two_leg else 1.0
+        ideal = legs * claims.n_wire_elems
+        lo, hi = claims.wire_ratio_bounds
+        if not (lo * ideal <= int8_total <= hi * ideal):
+            report.add(
+                "HA-WIRE-RATIO",
+                f"{int8_total:.0f} int8 wire bytes outside "
+                f"[{lo:.2g}, {hi:.2g}] × ideal {ideal:.0f} B "
+                f"({legs:.0f} leg(s) × {claims.n_wire_elems} elems) — a "
+                f"missing leg or a padding blow-up", name)
+
+    if claims.grouped:
+        report.mark_checked("HA-F32-CONCAT")
+        cat = concat_bytes(hlo_text)
+        f32_cat = cat["by_dtype"].get("f32", 0.0)
+        if f32_cat > claims.f32_concat_budget:
+            report.add(
+                "HA-F32-CONCAT",
+                f"{f32_cat:.0f} fp32 concatenate bytes (budget "
+                f"{claims.f32_concat_budget:.0f}) — leaves are being "
+                f"flattened through an fp32 intermediate instead of "
+                f"encoding straight into the int8 buffer", name)
+
+    return report

@@ -1,0 +1,168 @@
+"""Kernel geometry pass: validate Pallas call sites without executing.
+
+Every grouped-wire Pallas launch is fully determined by static Python
+ints — the :class:`~repro.dist.collectives.GroupLayout` and the
+:class:`~repro.kernels.ops.KernelCallGeometry` the wrappers would build.
+This pass re-derives those for a config and proves the tiling contract
+instead of waiting for a Mosaic lowering error (or worse, silent wrong
+formats) at runtime:
+
+``KG-SMEM-TABLE``
+    The SMEM ⟨IL, FL⟩ format table must have exactly G rows for a
+    G-group domain, the tile→group map exactly one entry per grid tile,
+    and all scalar-prefetch operands together must fit the declared SMEM
+    budget (``dps_quant.SMEM_TABLE_BUDGET_BYTES``).
+
+``KG-TILE-STRADDLE``
+    The group-aligned layout must keep every grid tile inside one group:
+    offsets are the cumulative padded sizes, each padded slot is a
+    quantum multiple covering its payload, rank chunks are tile-aligned,
+    and the tile→group map is constant within each tile.
+
+``KG-TILE-MIN``
+    int8 wire tiles must meet the (32, 128) TPU minimum
+    (``dps_quant.INT8_MIN_TILE``) and grouped quanta must be multiples
+    of ``MIN_GROUP_QUANTUM`` (= 32·128).
+
+``KG-PREFETCH-ARITY``
+    The call site's scalar-prefetch operand count must match the kernel
+    body's signature (``dps_quant.KERNEL_SIGNATURES``) — a drifted
+    signature shows up here as a named rule, not as an opaque Mosaic
+    arity error three layers down.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.analysis.report import Report
+from repro.kernels.dps_quant import (INT8_MIN_TILE, KERNEL_SIGNATURES,
+                                     MIN_GROUP_QUANTUM,
+                                     SMEM_TABLE_BUDGET_BYTES)
+from repro.kernels.ops import KernelCallGeometry
+
+
+def check_call(geom: KernelCallGeometry,
+               expected_groups: Optional[int] = None,
+               name: str = "kernel-call") -> Report:
+    """Validate one prospective launch against the signature registry."""
+    report = Report(name=name)
+    where = f"{geom.kernel} grid={geom.grid} block={geom.block}"
+
+    report.mark_checked("KG-PREFETCH-ARITY")
+    sig = KERNEL_SIGNATURES.get(geom.kernel)
+    if sig is None:
+        report.add("KG-PREFETCH-ARITY",
+                   f"unknown kernel body {geom.kernel!r} — not in "
+                   f"dps_quant.KERNEL_SIGNATURES", where)
+        return report
+    if geom.num_scalar_prefetch != sig.num_scalar_prefetch:
+        report.add(
+            "KG-PREFETCH-ARITY",
+            f"call site prefetches {geom.num_scalar_prefetch} scalar "
+            f"operand(s), kernel signature takes {sig.num_scalar_prefetch} "
+            f"({', '.join(sig.scalar_operands)})", where)
+    if len(geom.scalar_shapes) != sig.num_scalar_prefetch:
+        report.add(
+            "KG-PREFETCH-ARITY",
+            f"{len(geom.scalar_shapes)} scalar operand shape(s) declared "
+            f"for a {sig.num_scalar_prefetch}-operand signature", where)
+
+    report.mark_checked("KG-SMEM-TABLE")
+    if sig.grouped and geom.table_rows is not None:
+        if expected_groups is not None and geom.table_rows != expected_groups:
+            report.add(
+                "KG-SMEM-TABLE",
+                f"format table has {geom.table_rows} rows for "
+                f"{expected_groups} group(s) — tiles would resolve formats "
+                f"out of the wrong row (or read past the table)", where)
+        tiles = 1
+        for g in geom.grid:
+            tiles *= g
+        if geom.tile_group_len is not None and geom.tile_group_len != tiles:
+            report.add(
+                "KG-SMEM-TABLE",
+                f"tile→group map has {geom.tile_group_len} entries for "
+                f"{tiles} grid tile(s)", where)
+    if geom.smem_table_bytes > SMEM_TABLE_BUDGET_BYTES:
+        report.add(
+            "KG-SMEM-TABLE",
+            f"scalar-prefetch operands take {geom.smem_table_bytes} B of "
+            f"SMEM (budget {SMEM_TABLE_BUDGET_BYTES} B) — an over-tall "
+            f"format table signals a mis-built layout", where)
+
+    report.mark_checked("KG-TILE-MIN")
+    if sig.grouped and geom.quantum is not None \
+            and geom.quantum % MIN_GROUP_QUANTUM:
+        report.add(
+            "KG-TILE-MIN",
+            f"grouped quantum {geom.quantum} is not a multiple of "
+            f"{MIN_GROUP_QUANTUM} (the 32×128 int8 tile)", where)
+    if geom.out_dtype in ("int8", "uint8") or sig.grouped:
+        bm, bn = geom.block
+        min_m, min_n = INT8_MIN_TILE
+        if bm < min_m or bn < min_n or bm % min_m or bn % min_n:
+            report.add(
+                "KG-TILE-MIN",
+                f"block {geom.block} violates the int8 minimum tile "
+                f"{INT8_MIN_TILE} (must be a componentwise multiple)",
+                where)
+    return report
+
+
+def check_layout(layout, name: str = "group-layout") -> Report:
+    """Prove the :class:`GroupLayout` tiling contract on a built layout.
+
+    Accepts anything with the GroupLayout fields (``group_sizes``,
+    ``quantum``, ``n_chunks``, ``padded``, ``offsets``, ``chunk``,
+    ``total``) so the oracle tests can hand-break individual invariants.
+    """
+    report = Report(name=name)
+    report.mark_checked("KG-TILE-STRADDLE")
+    q = layout.quantum
+    where = (f"groups={len(layout.group_sizes)} quantum={q} "
+             f"chunks={layout.n_chunks}")
+
+    off = 0
+    for g, (size, padded, offset) in enumerate(
+            zip(layout.group_sizes, layout.padded, layout.offsets)):
+        if offset != off:
+            report.add(
+                "KG-TILE-STRADDLE",
+                f"group {g} starts at offset {offset}, expected the "
+                f"cumulative padded offset {off} — its first tile would "
+                f"straddle the previous group", where)
+        if offset % q:
+            report.add(
+                "KG-TILE-STRADDLE",
+                f"group {g} offset {offset} is not tile-aligned "
+                f"(quantum {q})", where)
+        if padded < size:
+            report.add(
+                "KG-TILE-STRADDLE",
+                f"group {g} padded slot {padded} is smaller than its "
+                f"{size}-element payload", where)
+        if padded % q:
+            report.add(
+                "KG-TILE-STRADDLE",
+                f"group {g} padded slot {padded} is not a quantum "
+                f"multiple — the group's last tile would straddle into "
+                f"group {g + 1}", where)
+        off = offset + padded
+
+    if layout.chunk % q:
+        report.add(
+            "KG-TILE-STRADDLE",
+            f"rank chunk {layout.chunk} is not a quantum multiple — an "
+            f"all_to_all boundary would split a tile across ranks", where)
+    if layout.total != layout.n_chunks * layout.chunk:
+        report.add(
+            "KG-TILE-STRADDLE",
+            f"total {layout.total} ≠ n_chunks {layout.n_chunks} × chunk "
+            f"{layout.chunk}", where)
+    if layout.total < off:
+        report.add(
+            "KG-TILE-STRADDLE",
+            f"total {layout.total} cannot hold the {off} aligned payload "
+            f"elements", where)
+    return report

@@ -1,0 +1,285 @@
+"""Precision-flow lint: run all three analysis passes over a config grid.
+
+    PYTHONPATH=src python -m repro.analysis.lint                  # full grid
+    PYTHONPATH=src python -m repro.analysis.lint --config lenet --zero-opt
+    PYTHONPATH=src python -m repro.analysis.lint --config llama3_2_3b \
+        --wire-groups per-layer
+
+Each cell builds a REAL train step (the same constructors the launch and
+test code use), traces it, compiles it, and proves the wire invariants
+three ways: jaxpr dataflow (:mod:`repro.analysis.flow`), compiled-HLO
+byte audit (:mod:`repro.analysis.hlo_audit`), and static Pallas call-site
+geometry (:mod:`repro.analysis.kernel_checks`).  Exits nonzero on any
+violation.
+
+The mesh is one pure data-parallel axis over every visible device
+(``xla_force_host_platform_device_count=8`` in CI) — the topology where
+the compressed wire paths actually engage, mirroring the dist test legs.
+Arch configs (``--config llama3_2_3b``) compile with two probe-sized
+layers and a short sequence: the wire schedule per step is
+depth-independent (one collective pair regardless of leaf count), so the
+shrunk cell proves the same invariants at a fraction of the compile cost.
+
+The mode grid:
+
+* ``baseline``  — no wire: flow rules must pass vacuously-clean.
+* ``tree``      — global-format compressed gradient all-reduce
+                  (``grad_allreduce_bits=8``, one tree collective pair).
+* ``per-layer`` — one wire ⟨IL, FL⟩ per param leaf (grouped tree +
+                  group-aligned kernel schedule).
+* ``zero``      — ZeRO-1: int8 reduce-scatter + parameter all-gather.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.compat  # noqa: F401  (installs the jax.shard_map shim)
+from repro.analysis import flow, hlo_audit, kernel_checks
+from repro.analysis.report import Report
+from repro.core import qtrain
+from repro.dist import collectives
+
+MODES = ("baseline", "tree", "per-layer", "zero")
+
+
+def _data_mesh():
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def _mode_qcfg(mode: str, n_ranks: int,
+               wire_controller: str) -> qtrain.QuantConfig:
+    kw = dict(enabled=True, controller="paper",
+              wire_controller=wire_controller)
+    if mode in ("tree", "per-layer"):
+        kw["grad_allreduce_bits"] = 8
+    elif mode == "zero":
+        kw["grad_allreduce_bits"] = 8
+        kw["zero_opt_shards"] = n_ranks
+    return qtrain.QuantConfig(**kw)
+
+
+def _claims(qcfg: qtrain.QuantConfig, mesh, params,
+            n_params: int) -> hlo_audit.AuditClaims:
+    engaged: List[str] = []
+    two_leg = True
+    declared_f32 = 0.0
+    if qtrain.wire_sync_engaged(qcfg, mesh):
+        engaged.append("wire_grads")
+    if qtrain.zero_opt_engaged(qcfg, mesh):
+        engaged.append("wire_grads")
+        if qtrain.wire_params_engaged(qcfg, params, mesh):
+            engaged.append("wire_params")
+        else:
+            # the policy excludes leaves: the param all-gather falls back
+            # to fp32 BY DESIGN — one declared fp32 gather, one s8 leg
+            two_leg = False
+            declared_f32 = 4.0 * n_params * 1.25
+    # grouped (zero-f32-concat) is NOT claimed on the full step: model
+    # activations legitimately concatenate in fp32.  The strict concat
+    # claim runs on the isolated wire pipeline (_wire_pipeline_report).
+    return hlo_audit.AuditClaims(
+        engaged=tuple(dict.fromkeys(engaged)),
+        two_leg=two_leg,
+        grouped=False,
+        f32_declared_bytes=declared_f32,
+        n_wire_elems=n_params if engaged else None)
+
+
+def _kernel_reports(mode: str, leaf_sizes, n_ranks: int,
+                    name: str) -> List[Report]:
+    """Static geometry of the Pallas launches this cell WOULD run on the
+    kernel backend (the TPU tiling is checkable anywhere)."""
+    from repro.kernels import ops
+    total = sum(leaf_sizes)
+    if mode == "per-layer":
+        sizes, groups = tuple(leaf_sizes), len(leaf_sizes)
+    else:
+        sizes, groups = (total,), 1
+    q = collectives.default_wire_quantum(total, groups, "kernel")
+    layout = collectives.group_layout(sizes, n_chunks=n_ranks, quantum=q)
+    return [
+        kernel_checks.check_layout(layout, name=f"{name}/layout"),
+        kernel_checks.check_call(
+            ops.group_wire_call_geometry(layout.total, groups, q),
+            expected_groups=groups, name=f"{name}/encode"),
+        kernel_checks.check_call(
+            ops.wire_reduce_call_geometry(n_ranks, layout.chunk, groups, q),
+            expected_groups=groups, name=f"{name}/reduce"),
+    ]
+
+
+def _wire_pipeline_report(mode: str, leaf_sizes, mesh, name: str) -> Report:
+    """Audit the wire pipeline compiled in ISOLATION (the
+    ``bench_collectives`` idiom): a shard_map'ed tree all-reduce over
+    grad-shaped leaves.  Only here is the zero-f32-concatenate claim
+    checkable — a full model step concatenates fp32 activations freely."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.fixed_point import FixedPointFormat
+
+    per_layer = mode == "per-layer"
+    groups = len(leaf_sizes) if per_layer else 1
+    if per_layer:
+        fmt = FixedPointFormat(jnp.full((groups,), 3, jnp.int32),
+                               jnp.full((groups,), 5, jnp.int32))
+    else:
+        fmt = FixedPointFormat.create(3, 5)
+    tree = {f"leaf{i}": jax.ShapeDtypeStruct((s,), jnp.float32)
+            for i, s in enumerate(leaf_sizes)}
+    key = jax.eval_shape(lambda: jax.random.key(1))
+
+    def body(tr, k):
+        mean, _ = collectives.dps_allreduce_mean_tree(tr, fmt, "data", k)
+        return mean
+
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=({k: P() for k in tree}, P()), out_specs=P(),
+        check_vma=False))
+    hlo = fn.lower(tree, key).compile().as_text()
+    claims = hlo_audit.AuditClaims(
+        engaged=("wire_grads",), two_leg=True, grouped=True,
+        f32_concat_budget=64.0 * groups,
+        n_wire_elems=sum(leaf_sizes))
+    return hlo_audit.audit_hlo(hlo, claims, name=name)
+
+
+def _lenet_cell(mode: str, mesh, wire_controller: str) -> List[Report]:
+    from repro.models import lenet
+    from repro.optim import SGDConfig, make_optimizer
+
+    n = mesh.devices.size
+    qcfg = _mode_qcfg(mode, n, wire_controller)
+    params = lenet.init(jax.random.key(0))
+    if mode == "per-layer":
+        qcfg = qcfg.with_per_layer_wire(params)
+    opt = make_optimizer(SGDConfig())
+    opt_state = (qtrain.zero_opt_state(opt, params, n) if mode == "zero"
+                 else opt.init(params))
+    state = qtrain.TrainState.create(params, opt_state, qcfg,
+                                     jax.random.key(1))
+    batch = {"images": jnp.zeros((2 * n, 28, 28, 1), jnp.float32),
+             "labels": jnp.zeros((2 * n,), jnp.int32)}
+    step = qtrain.make_train_step(lenet.loss_fn, opt, qcfg, mesh=mesh)
+    name = f"lenet/{mode}"
+    leaf_sizes = [l.size for l in jax.tree.leaves(params)]
+    return _step_reports(step, (state, batch), qcfg, mesh, mode,
+                         params, leaf_sizes, name)
+
+
+def _arch_cell(arch: str, mode: str, mesh, wire_controller: str,
+               seq: int) -> List[Report]:
+    from repro.configs.base import ShapeConfig, get_config, smoke
+    from repro.launch import specs as specs_lib
+    from repro.optim import SGDConfig, make_optimizer
+
+    # the wire schedule is depth/width-independent (one collective pair,
+    # G = leaf count), so the smoke-sized config proves the same invariants
+    cfg = dataclasses.replace(smoke(get_config(arch)), probe_unroll=True)
+
+    n = mesh.devices.size
+    shape = ShapeConfig("lint_train", "train", seq=seq, batch=n)
+    qcfg = _mode_qcfg(mode, n, wire_controller)
+    if mode == "per-layer":
+        qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
+    opt = make_optimizer(SGDConfig())
+    step = specs_lib.build_train_step(cfg, qcfg, opt, mesh=mesh)
+    astate = specs_lib.abstract_train_state(cfg, opt, qcfg, mesh=mesh)
+    abatch = specs_lib.train_batch_specs(cfg, shape)
+    name = f"{arch}/{mode}"
+    leaf_sizes = [l.size for l in jax.tree.leaves(astate.params)]
+    return _step_reports(step, (astate, abatch), qcfg, mesh, mode,
+                         astate.params, leaf_sizes, name)
+
+
+def _step_reports(step, abstract_args, qcfg, mesh, mode: str, params,
+                  leaf_sizes, name: str) -> List[Report]:
+    n_params = sum(leaf_sizes)
+    reports = [flow.analyze_jaxpr(jax.make_jaxpr(step)(*abstract_args),
+                                  name=f"{name}/flow")]
+    claims = _claims(qcfg, mesh, params, n_params)
+    hlo = jax.jit(step).lower(*abstract_args).compile().as_text()
+    reports.append(hlo_audit.audit_hlo(hlo, claims, name=f"{name}/hlo"))
+    if claims.engaged:
+        if mode in ("tree", "per-layer"):
+            reports.append(_wire_pipeline_report(mode, leaf_sizes, mesh,
+                                                 f"{name}/pipeline"))
+        reports.extend(_kernel_reports(mode, leaf_sizes, mesh.devices.size,
+                                       f"{name}/kernel"))
+    return reports
+
+
+def lint_cell(config: str, mode: str, mesh=None,
+              wire_controller: str = "flexpoint",
+              seq: int = 128) -> List[Report]:
+    """All three passes over one (config, mode) cell; returns Reports."""
+    mesh = mesh or _data_mesh()
+    if config == "lenet":
+        return _lenet_cell(mode, mesh, wire_controller)
+    return _arch_cell(config, mode, mesh, wire_controller, seq)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Statically verify the wire invariants of compiled "
+                    "steps (see src/repro/analysis/README.md).")
+    ap.add_argument("--config", action="append", default=None,
+                    help="config to lint: 'lenet' (default) or an arch "
+                         "name from repro.configs.base (repeatable)")
+    ap.add_argument("--zero-opt", action="store_true",
+                    help="lint only the ZeRO-1 cell")
+    ap.add_argument("--wire-groups", choices=("global", "per-layer"),
+                    default=None,
+                    help="lint only the tree (global) or per-layer cell")
+    ap.add_argument("--modes", default=None,
+                    help=f"comma-separated subset of {MODES}")
+    ap.add_argument("--wire-controller", default="flexpoint")
+    ap.add_argument("--seq", type=int, default=128,
+                    help="sequence length for arch train cells")
+    args = ap.parse_args(argv)
+
+    if args.zero_opt:
+        modes = ["zero"]
+    elif args.wire_groups is not None:
+        modes = ["per-layer" if args.wire_groups == "per-layer" else "tree"]
+    elif args.modes:
+        modes = [m.strip() for m in args.modes.split(",")]
+    else:
+        modes = list(MODES)
+    for m in modes:
+        if m not in MODES:
+            ap.error(f"unknown mode {m!r} (choose from {MODES})")
+    configs = args.config or ["lenet"]
+
+    mesh = _data_mesh()
+    print(f"precision-flow lint: {len(jax.devices())} device(s), "
+          f"configs={configs}, modes={modes}", flush=True)
+    n_viol = 0
+    for config in configs:
+        for mode in modes:
+            try:
+                reports = lint_cell(config, mode, mesh,
+                                    args.wire_controller, args.seq)
+            except Exception as e:          # a cell that cannot build IS a
+                n_viol += 1                 # lint failure, not a skip
+                print(f"ERROR {config}/{mode}: {e!r}", flush=True)
+                continue
+            for r in reports:
+                print(f"  {r.summary()}", flush=True)
+                n_viol += len(r.violations)
+    print(f"precision-flow lint: "
+          f"{'CLEAN' if not n_viol else f'{n_viol} violation(s)'}",
+          flush=True)
+    return 1 if n_viol else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import tagging
 from repro.core.fixed_point import FixedPointFormat, QuantStats
 
 # fp32-mantissa exactness bound for the emulation grid: IL - 1 + FL <= 24.
@@ -369,12 +370,19 @@ class DomainSpec:
     per-layer wire regime: ``QuantConfig.with_per_layer_wire``), while a
     scalar stream broadcasts.  0 is the global scalar case.  Hashable, so
     a plan can sit in a jit closure.
+
+    ``wire`` declares this domain as a *wire* domain: its controller is
+    allowed (expected) to consume wire-leg ``QuantStats``.  The
+    precision-flow verifier (``repro.analysis.flow``) flags wire stats
+    reaching a ``wire=False`` controller — the stats-starvation bug class
+    ``qtrain._raw_grad_stats`` exists to prevent.
     """
 
     controller: str = "paper"
     hyper: DPSHyper = DPSHyper()
     stats: str = ""
     groups: int = 0
+    wire: bool = False
 
     def make(self):
         return make_controller(self.controller, self.hyper)
@@ -520,5 +528,9 @@ class PrecisionPlan:
                         f"{s.stream(n)!r} whose stats have shape "
                         f"{tuple(st.count.shape)}; a routed stream must be "
                         "scalar or match the domain's group count")
+            # declare the consumption site for the precision-flow verifier:
+            # this stream is about to drive domain ``n``'s controller
+            st = tagging.tag_tree(st, "stats_sink", domain=n, wire=s.wire,
+                                  stream=s.stream(n))
             out[n] = s.make().update(bundle[n], st, aux)
         return DpsBundle(out)

@@ -147,12 +147,13 @@ class QuantConfig:
                 self.wire_controller,
                 self.hyper_wire_grads
                 or dps_lib.wire_hyper(wb, il_init=6, slack=-2.0),
-                groups=self.wire_grads_groups)))
+                groups=self.wire_grads_groups, wire=True)))
             if self.zero_opt_shards is not None:
                 domains.append(("wire_params", DomainSpec(
                     self.wire_controller,
                     self.hyper_wire_params
-                    or dps_lib.wire_hyper(wb, il_init=2, slack=1.0))))
+                    or dps_lib.wire_hyper(wb, il_init=2, slack=1.0),
+                    wire=True)))
         return PrecisionPlan(tuple(domains))
 
     def with_per_layer_wire(self, params) -> "QuantConfig":
@@ -330,6 +331,45 @@ def zero_opt_engaged(qcfg: QuantConfig, mesh, data_axis: str = "data") -> bool:
     if int(sizes.get(data_axis, 1)) <= 1:
         return False
     return not any(s > 1 for a, s in sizes.items() if a != data_axis)
+
+
+def wire_sync_engaged(qcfg: QuantConfig, mesh,
+                      data_axis: str = "data") -> bool:
+    """Does the compressed gradient all-reduce engage for (qcfg, mesh)?
+
+    Mirrors :func:`make_train_step`'s own checks (the same pure
+    data-parallel constraint as :func:`zero_opt_engaged`) so launch and
+    analysis code can predict — without building the step — whether the
+    ``wire_grads`` domain will actually put payload on the wire.
+    """
+    if qcfg.grad_allreduce_bits is None:
+        return False
+    sizes = _mesh_axis_sizes(mesh)
+    if int(sizes.get(data_axis, 1)) <= 1:
+        return False
+    return not any(s > 1 for a, s in sizes.items() if a != data_axis)
+
+
+def wire_params_engaged(qcfg: QuantConfig, params, mesh,
+                        data_axis: str = "data") -> bool:
+    """Does the ZeRO-1 parameter all-gather ride the int8 wire?
+
+    The flat wire legs can't honor per-leaf carve-outs, so the params-side
+    wire only engages when the quantization policy covers EVERY param leaf
+    and no fp master copy is promised (the same static decision
+    :func:`make_train_step` makes — see its ``full_quant``).  ``params``
+    may be a concrete or abstract (ShapeDtypeStruct) tree.  When this is
+    False under an engaged ZeRO + compressed-sync config, the updated
+    params are gathered in fp32 by design.
+    """
+    if not (zero_opt_engaged(qcfg, mesh, data_axis)
+            and wire_sync_engaged(qcfg, mesh, data_axis)):
+        return False
+    if qcfg.master_weights:
+        return False
+    pred = qcfg.policy.param_predicate()
+    return all(pred(path, leaf) for path, leaf in
+               jax.tree_util.tree_flatten_with_path(params)[0])
 
 
 def zero_opt_state(optimizer, params, n_shards: int):
@@ -656,10 +696,8 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 # engage them on the params/optimizer side when the policy
                 # would quantize every leaf anyway and no fp master copy
                 # is promised (static decision, uniform across steps).
-                pred = qcfg.policy.param_predicate()
-                full_quant = (not qcfg.master_weights and all(
-                    pred(path, leaf) for path, leaf in
-                    jax.tree_util.tree_flatten_with_path(state.params)[0]))
+                full_quant = wire_params_engaged(qcfg, state.params, mesh,
+                                                 data_axis)
                 if not full_quant:
                     warnings.warn(
                         "zero_opt_shards + grad_allreduce_bits: the policy "

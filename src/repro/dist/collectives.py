@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import tagging
 from repro.core.fixed_point import (FixedPointFormat, QuantStats,
                                     ROUND_NEAREST, ROUND_STOCHASTIC, exp2_int,
                                     wire_quantize)
@@ -59,6 +60,39 @@ WIRE_BITS = 8
 # TPU tile); bigger quanta trade padding overhead for fewer grid steps —
 # benchmarks pass a larger one for multi-MiB tensors.
 WIRE_GROUP_QUANTUM = 4096
+
+# The jnp codec has no (32, 128) tile constraint — its layout granularity
+# only needs the int8 lane width, so tiny models can run much finer grouped
+# layouts without the kernel backend's per-group padding floor.
+WIRE_JNP_TILE = 128
+
+
+def default_wire_quantum(size: int, groups: int, backend: str) -> int:
+    """Size-aware grouped-wire quantum: ``ceil(size / G)`` rounded up to
+    the backend's int8 tile, capped at :data:`WIRE_GROUP_QUANTUM`.
+
+    The ``kernel`` backend's grid tile must stay a multiple of the
+    (32, 128) minimum int8 TPU tile (= ``WIRE_GROUP_QUANTUM``), so it
+    always resolves the classic 4096.  The ``jnp`` backend only needs
+    lane-width (:data:`WIRE_JNP_TILE`) alignment, so a tiny model's
+    per-group padding shrinks from 4096·G to ~``size`` elements.  The
+    per-element collective results are layout-invariant (rounding bits are
+    drawn per *element*, receive-leg sums are exact in the fp32 mantissa),
+    so the two backends stay bit-identical even when they resolve
+    different quanta.
+    """
+    tile = WIRE_GROUP_QUANTUM if backend == "kernel" else WIRE_JNP_TILE
+    target = -(-max(size, 1) // max(groups, 1))
+    return min(WIRE_GROUP_QUANTUM, max(tile, -(-target // tile) * tile))
+
+
+def _resolve_quantum(quantum: Optional[int], size: int, groups: int,
+                     backend: str) -> int:
+    """An explicit ``quantum=`` wins; ``None`` derives the size-aware
+    default for the resolved backend."""
+    if quantum is not None:
+        return int(quantum)
+    return default_wire_quantum(size, groups, backend)
 
 
 def wire_format(fmt: FixedPointFormat, wire_bits: int = WIRE_BITS
@@ -300,6 +334,9 @@ def _encode_aligned(x_al: jax.Array, fmt: FixedPointFormat, tile_group,
         if key is None:
             raise ValueError("stochastic rounding needs `bits` or `key`")
         bits = jax.random.bits(key, shape=(x_al.size,), dtype=jnp.uint32)
+    x_al = tagging.tag(x_al, "encode_in", stochastic=stochastic)
+    if stochastic:
+        bits = tagging.tag(bits, "sr_bits")
     if backend == "kernel":
         from repro.kernels import ops
         return ops.dps_quantize_wire_grouped(
@@ -349,7 +386,7 @@ def _decode_aligned(wire_al: jax.Array, fmt: FixedPointFormat, tile_group,
     tiles = wire_al.size // quantum
     inv = exp2_int(-fmt.fl)[jnp.asarray(tile_group, jnp.int32)]
     dec = wire_al.reshape(tiles, quantum).astype(jnp.float32) * inv[:, None]
-    return dec.reshape(-1).astype(dtype)
+    return tagging.tag(dec.reshape(-1).astype(dtype), "decode_out")
 
 
 def _encode_elementwise(x: jax.Array, fmt: FixedPointFormat, elem_group,
@@ -373,6 +410,9 @@ def _encode_elementwise(x: jax.Array, fmt: FixedPointFormat, elem_group,
         if key is None:
             raise ValueError("stochastic rounding needs `bits` or `key`")
         bits = jax.random.bits(key, shape=(x.size,), dtype=jnp.uint32)
+    x = tagging.tag(x, "encode_in", stochastic=mode == ROUND_STOCHASTIC)
+    if bits is not None:
+        bits = tagging.tag(bits, "sr_bits")
     wire, s = wire_quantize(x.reshape(-1), fmt_e, mode=mode,
                             bits=bits.reshape(-1) if bits is not None
                             else None,
@@ -421,6 +461,9 @@ def wire_encode(x: jax.Array, fmt: FixedPointFormat, *,
         # to nearest)
         raise ValueError(f"unknown rounding mode {mode!r}")
     _validate_capacity(fmt)
+    x = tagging.tag(x, "encode_in", stochastic=mode == ROUND_STOCHASTIC)
+    if bits is not None:
+        bits = tagging.tag(bits, "sr_bits")
     if fmt.il.ndim == 0:
         if group_sizes is not None:
             raise ValueError("group_sizes needs a [G]-shaped format")
@@ -448,7 +491,8 @@ def wire_encode(x: jax.Array, fmt: FixedPointFormat, *,
     if bits is None and mode == ROUND_STOCHASTIC:
         if key is None:
             raise ValueError("stochastic rounding needs `bits` or `key`")
-        bits = jax.random.bits(key, shape=(n,), dtype=jnp.uint32)
+        bits = tagging.tag(
+            jax.random.bits(key, shape=(n,), dtype=jnp.uint32), "sr_bits")
 
     if _resolve_backend(backend) == "kernel":
         # one fused launch over the group-aligned layout; bits travel with
@@ -494,17 +538,19 @@ def wire_decode(wire: jax.Array, fmt: FixedPointFormat,
     payload.
     """
     if fmt.il.ndim == 0:
-        return (wire.astype(jnp.float32) * exp2_int(-fmt.fl)).astype(dtype)
+        dec = (wire.astype(jnp.float32) * exp2_int(-fmt.fl)).astype(dtype)
+        return tagging.tag(dec, "decode_out")
     groups = fmt.il.shape[0]
     n = wire.size
     if group_sizes is not None:
         gid = jnp.asarray(_group_ids(group_sizes), jnp.int32)
         dec = wire.reshape(-1).astype(jnp.float32) * exp2_int(-fmt.fl)[gid]
-        return dec.reshape(wire.shape).astype(dtype)
+        return tagging.tag(dec.reshape(wire.shape).astype(dtype), "decode_out")
     chunk, pad = _group_layout(n, groups)
     wg = _pad_reshape(wire.reshape(-1), pad, (groups, chunk))
     dec = wg.astype(jnp.float32) * exp2_int(-fmt.fl)[:, None]
-    return dec.reshape(-1)[:n].reshape(wire.shape).astype(dtype)
+    return tagging.tag(dec.reshape(-1)[:n].reshape(wire.shape).astype(dtype),
+                       "decode_out")
 
 
 def psum_stats(stats: QuantStats, axis_name) -> QuantStats:
@@ -521,7 +567,7 @@ def dps_allreduce_mean(x: jax.Array, formats, axis_name,
                        key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
                        backend: str = "auto", domain: str = "wire_grads",
                        group_sizes: Optional[Tuple[int, ...]] = None,
-                       quantum: int = WIRE_GROUP_QUANTUM,
+                       quantum: Optional[int] = None,
                        ) -> Tuple[jax.Array, QuantStats]:
     """Mean of per-rank ``x`` over ``axis_name`` with an int8 wire format.
 
@@ -555,6 +601,10 @@ def dps_allreduce_mean(x: jax.Array, formats, axis_name,
     counts each global element exactly once) and belong to the wire
     domain's controller.  Must run inside ``shard_map``; ``key`` may be
     identical across ranks (it is decorrelated with ``axis_index`` here).
+
+    ``quantum=None`` (the default) derives the grouped layout's tile size
+    per :func:`default_wire_quantum` — size-aware on the jnp backend, the
+    kernel tile minimum on TPU; the result is layout-invariant either way.
     """
     fmt = resolve_domain_format(formats, domain)
     _validate_capacity(fmt)
@@ -563,36 +613,48 @@ def dps_allreduce_mean(x: jax.Array, formats, axis_name,
     k1, k2 = jax.random.split(jax.random.fold_in(key, idx))
     be = _resolve_backend(backend)
     shape, size = x.shape, x.size
+    groups = fmt.il.shape[0] if fmt.il.ndim else 1
+    q = _resolve_quantum(quantum, size, groups, be)
 
-    if fmt.il.ndim != 0:
-        _check_group_sizes(fmt, group_sizes, size)
-        layout = group_layout(group_sizes
-                              or _equal_group_sizes(size, fmt.il.shape[0]),
-                              n_chunks=n, quantum=quantum)
-        mean_al, stats = _aligned_allreduce_mean(
-            layout.align(x.reshape(-1).astype(jnp.float32)), fmt, layout,
-            axis_name, k1, k2, mode=mode, backend=be)
-        return layout.dealign(mean_al).reshape(shape).astype(x.dtype), stats
+    with tagging.domain(domain):
+        if fmt.il.ndim != 0:
+            _check_group_sizes(fmt, group_sizes, size)
+            layout = group_layout(group_sizes
+                                  or _equal_group_sizes(size, groups),
+                                  n_chunks=n, quantum=q)
+            # leg-2 bits are element-indexed, so every rank must derive
+            # the same stream (see _aligned_allreduce_mean): a rank-
+            # invariant fold distinct from every leg-1 fold_in(key, idx)
+            k2s = jax.random.fold_in(key, 0x4C454732)        # "LEG2"
+            mean_al, stats = _aligned_allreduce_mean(
+                layout.align(x.reshape(-1).astype(jnp.float32)), fmt, layout,
+                axis_name, jax.random.fold_in(key, idx), k2s,
+                mode=mode, backend=be)
+            stats = tagging.tag_tree(stats, "wire_stats")
+            return (layout.dealign(mean_al).reshape(shape).astype(x.dtype),
+                    stats)
 
-    chunk, pad = _group_layout(size, n)
+        chunk, pad = _group_layout(size, n)
 
-    # leg 1: quantize the local tensor (stats cover exactly these elements),
-    # pad the int8 wire, and scatter chunk j to rank j.
-    wire, stats = wire_encode(x.reshape(-1), fmt, key=k1, mode=mode,
-                              backend=be)
-    wire = _pad_reshape(wire, pad, (n, chunk))
-    wire = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0,
-                              tiled=True)                       # (n, chunk)
-    # receive: fused int8 decode-reduce on the kernel backend — the
-    # decoded fp32 (n, chunk) intermediate never exists in HBM.
-    part = _wire_reduce(wire, fmt, None, backend=be, quantum=quantum)
+        # leg 1: quantize the local tensor (stats cover exactly these
+        # elements), pad the int8 wire, and scatter chunk j to rank j.
+        wire, stats = wire_encode(x.reshape(-1), fmt, key=k1, mode=mode,
+                                  backend=be)
+        wire = _pad_reshape(wire, pad, (n, chunk))
+        wire = tagging.tag(wire, "wire_payload", leg="dispatch")
+        wire = jax.lax.all_to_all(wire, axis_name, split_axis=0,
+                                  concat_axis=0, tiled=True)    # (n, chunk)
+        # receive: fused int8 decode-reduce on the kernel backend — the
+        # decoded fp32 (n, chunk) intermediate never exists in HBM.
+        part = _wire_reduce(wire, fmt, None, backend=be, quantum=q)
 
-    # leg 2: re-quantize the owned mean chunk, gather int8 everywhere.
-    wire2, _ = wire_encode(part, fmt, key=k2, mode=mode,
-                           compute_stats=False, backend=be)
-    full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
-    mean = wire_decode(full, fmt, x.dtype)[:size].reshape(shape)
-    return mean, stats
+        # leg 2: re-quantize the owned mean chunk, gather int8 everywhere.
+        wire2, _ = wire_encode(part, fmt, key=k2, mode=mode,
+                               compute_stats=False, backend=be)
+        wire2 = tagging.tag(wire2, "wire_payload", leg="gather")
+        full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
+        mean = wire_decode(full, fmt, x.dtype)[:size].reshape(shape)
+        return mean, tagging.tag_tree(stats, "wire_stats")
 
 
 def _aligned_allreduce_mean(x_al: jax.Array, fmt: FixedPointFormat,
@@ -606,19 +668,35 @@ def _aligned_allreduce_mean(x_al: jax.Array, fmt: FixedPointFormat,
     preallocated buffer instead of scattering an fp32 copy); the default
     runs :func:`_encode_aligned` on ``x_al``.  Returns ``(mean_al fp32
     [total], [G] stats)``.
+
+    Rounding bits on both legs are drawn per **element** — leg 1 aligns a
+    ``[layout.size]`` stream into the buffer, leg 2 slices a shared
+    ``[layout.size]`` aligned stream at the owned chunk — so the
+    per-element result is invariant to the layout's quantum and rank-chunk
+    geometry (the receive-leg sums are exact in the fp32 mantissa), and
+    the two backends stay bit-identical even when they resolve different
+    default quanta.  ``k2`` must therefore be identical on every rank
+    (element → bits, not rank → bits); ``k1`` may be per-rank (leg 1
+    encodes rank-local data).
     """
     n = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     tg_all = jnp.asarray(layout.tile_groups())
     mask = jnp.asarray(layout.mask())
+    stochastic = mode == ROUND_STOCHASTIC
     if encode_leg1 is None:
+        bits1 = (layout.align(jax.random.bits(k1, shape=(layout.size,),
+                                              dtype=jnp.uint32))
+                 if stochastic else None)
         wire_al, stats = _encode_aligned(
-            x_al, fmt, tg_all, mask, key=k1, mode=mode, backend=backend,
+            x_al, fmt, tg_all, mask, bits=bits1, mode=mode, backend=backend,
             quantum=layout.quantum)
     else:
         wire_al, stats = encode_leg1(tg_all, mask)
 
-    wire = jax.lax.all_to_all(wire_al.reshape(n, layout.chunk), axis_name,
+    payload = tagging.tag(wire_al.reshape(n, layout.chunk), "wire_payload",
+                          leg="dispatch")
+    wire = jax.lax.all_to_all(payload, axis_name,
                               split_axis=0, concat_axis=0, tiled=True)
     # this rank's chunk covers tiles [idx·tpc, (idx+1)·tpc) of the layout
     tpc = layout.chunk // layout.quantum
@@ -628,11 +706,17 @@ def _aligned_allreduce_mean(x_al: jax.Array, fmt: FixedPointFormat,
 
     # leg 2: per-tile re-encode of the owned mean chunk (stats not needed;
     # alignment padding is zero and encodes to zero bytes)
-    bits2 = (jax.random.bits(k2, shape=(layout.chunk,), dtype=jnp.uint32)
-             if mode == ROUND_STOCHASTIC else None)
+    if stochastic:
+        bits2 = jax.lax.dynamic_slice(
+            layout.align(jax.random.bits(k2, shape=(layout.size,),
+                                         dtype=jnp.uint32)),
+            (idx * layout.chunk,), (layout.chunk,))
+    else:
+        bits2 = None
     wire2, _ = _encode_aligned(part, fmt, my_tg, None, bits=bits2,
                                mode=mode, backend=backend,
                                quantum=layout.quantum, compute_stats=False)
+    wire2 = tagging.tag(wire2, "wire_payload", leg="gather")
     full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
     return _decode_aligned(full, fmt, tg_all, layout.quantum), stats
 
@@ -642,7 +726,7 @@ def dps_reduce_scatter_mean(x: jax.Array, formats, axis_name,
                             backend: str = "auto",
                             domain: str = "wire_grads",
                             group_sizes: Optional[Tuple[int, ...]] = None,
-                            quantum: int = WIRE_GROUP_QUANTUM,
+                            quantum: Optional[int] = None,
                             ) -> Tuple[jax.Array, QuantStats]:
     """Reduce-scatter mean over ``axis_name`` with the int8 wire on the
     scatter leg — the ZeRO half-collective.
@@ -677,6 +761,8 @@ def dps_reduce_scatter_mean(x: jax.Array, formats, axis_name,
     once).  Must run inside ``shard_map``; ``key`` may be identical across
     ranks (it is decorrelated with ``axis_index`` here).
     ``formats``/``domain``: see :func:`resolve_domain_format`.
+    ``quantum=None`` derives the receive-leg tile per
+    :func:`default_wire_quantum`.
     """
     fmt = resolve_domain_format(formats, domain)
     _validate_capacity(fmt)
@@ -684,42 +770,49 @@ def dps_reduce_scatter_mean(x: jax.Array, formats, axis_name,
     idx = jax.lax.axis_index(axis_name)
     be = _resolve_backend(backend)
     chunk, pad = _group_layout(x.size, n)
+    groups = fmt.il.shape[0] if fmt.il.ndim else 1
+    q = _resolve_quantum(quantum, x.size, groups, be)
 
-    if fmt.il.ndim != 0:
-        if backend == "kernel":
-            raise ValueError(
-                "dps_reduce_scatter_mean runs [G]-shaped formats with the "
-                "per-element jnp codec (the shard layout is the caller's "
-                "ZeroPartitioner contract, so group boundaries cannot be "
-                "tile-aligned); an explicit backend='kernel' request cannot "
-                "be honored here — use backend='auto', or "
-                "dps_allreduce_mean for the group-aligned kernel schedule")
-        _check_group_sizes(fmt, group_sizes, x.size)
-        gid = _group_ids(group_sizes
-                         or _equal_group_sizes(x.size, fmt.il.shape[0]))
-        wire, stats = _encode_elementwise(
-            x.reshape(-1), fmt, gid, key=jax.random.fold_in(key, idx),
-            mode=mode)
+    with tagging.domain(domain):
+        if fmt.il.ndim != 0:
+            if backend == "kernel":
+                raise ValueError(
+                    "dps_reduce_scatter_mean runs [G]-shaped formats with "
+                    "the per-element jnp codec (the shard layout is the "
+                    "caller's ZeroPartitioner contract, so group boundaries "
+                    "cannot be tile-aligned); an explicit backend='kernel' "
+                    "request cannot be honored here — use backend='auto', "
+                    "or dps_allreduce_mean for the group-aligned kernel "
+                    "schedule")
+            _check_group_sizes(fmt, group_sizes, x.size)
+            gid = _group_ids(group_sizes
+                             or _equal_group_sizes(x.size, fmt.il.shape[0]))
+            wire, stats = _encode_elementwise(
+                x.reshape(-1), fmt, gid, key=jax.random.fold_in(key, idx),
+                mode=mode)
+            wire = _pad_reshape(wire, pad, (n, chunk))
+            wire = tagging.tag(wire, "wire_payload", leg="dispatch")
+            wire = jax.lax.all_to_all(wire, axis_name, split_axis=0,
+                                      concat_axis=0, tiled=True)
+            # decode with the formats of THIS rank's chunk positions
+            gid_pad = np.pad(gid, (0, pad))
+            my_gid = jax.lax.dynamic_slice(jnp.asarray(gid_pad),
+                                           (idx * chunk,), (chunk,))
+            inv = exp2_int(-fmt.fl)[my_gid]
+            shard = (wire.astype(jnp.float32) * inv[None, :]).sum(axis=0) / n
+            return shard, tagging.tag_tree(stats, "wire_stats")
+
+        wire, stats = wire_encode(x.reshape(-1), fmt,
+                                  key=jax.random.fold_in(key, idx),
+                                  mode=mode, backend=be)
         wire = _pad_reshape(wire, pad, (n, chunk))
+        wire = tagging.tag(wire, "wire_payload", leg="dispatch")
         wire = jax.lax.all_to_all(wire, axis_name, split_axis=0,
-                                  concat_axis=0, tiled=True)
-        # decode with the formats of THIS rank's chunk positions
-        gid_pad = np.pad(gid, (0, pad))
-        my_gid = jax.lax.dynamic_slice(jnp.asarray(gid_pad), (idx * chunk,),
-                                       (chunk,))
-        inv = exp2_int(-fmt.fl)[my_gid]
-        shard = (wire.astype(jnp.float32) * inv[None, :]).sum(axis=0) / n
-        return shard, stats
-
-    wire, stats = wire_encode(x.reshape(-1), fmt,
-                              key=jax.random.fold_in(key, idx), mode=mode,
-                              backend=be)
-    wire = _pad_reshape(wire, pad, (n, chunk))
-    wire = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0,
-                              tiled=True)                       # (n, chunk)
-    # fused decode-reduce on the kernel backend (no fp32 (n, chunk) in HBM)
-    shard = _wire_reduce(wire, fmt, None, backend=be, quantum=quantum)
-    return shard, stats
+                                  concat_axis=0, tiled=True)     # (n, chunk)
+        # fused decode-reduce on the kernel backend (no fp32 (n, chunk)
+        # in HBM)
+        shard = _wire_reduce(wire, fmt, None, backend=be, quantum=q)
+        return shard, tagging.tag_tree(stats, "wire_stats")
 
 
 def dps_allgather_params(shard: jax.Array, formats, axis_name,
@@ -758,39 +851,45 @@ def dps_allgather_params(shard: jax.Array, formats, axis_name,
     _validate_capacity(fmt)
     n = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
-    if fmt.il.ndim != 0:
-        if backend == "kernel":
-            raise ValueError(
-                "dps_allgather_params runs [G]-shaped formats with the "
-                "per-element jnp codec (the shard layout is the caller's "
-                "contract, so group boundaries cannot be tile-aligned); an "
-                "explicit backend='kernel' request cannot be honored here — "
-                "use backend='auto'")
-        total = n * shard.size
-        _check_group_sizes(fmt, group_sizes, total,
-                           what="the gathered vector size")
-        gid = _group_ids(group_sizes
-                         or _equal_group_sizes(total, fmt.il.shape[0]))
-        my_gid = jax.lax.dynamic_slice(jnp.asarray(gid),
-                                       (idx * shard.size,), (shard.size,))
-        wire, stats = _encode_elementwise(
-            shard.reshape(-1), fmt, my_gid,
-            key=jax.random.fold_in(key, idx), mode=mode)
+    with tagging.domain(domain):
+        if fmt.il.ndim != 0:
+            if backend == "kernel":
+                raise ValueError(
+                    "dps_allgather_params runs [G]-shaped formats with the "
+                    "per-element jnp codec (the shard layout is the "
+                    "caller's contract, so group boundaries cannot be "
+                    "tile-aligned); an explicit backend='kernel' request "
+                    "cannot be honored here — use backend='auto'")
+            total = n * shard.size
+            _check_group_sizes(fmt, group_sizes, total,
+                               what="the gathered vector size")
+            gid = _group_ids(group_sizes
+                             or _equal_group_sizes(total, fmt.il.shape[0]))
+            my_gid = jax.lax.dynamic_slice(jnp.asarray(gid),
+                                           (idx * shard.size,),
+                                           (shard.size,))
+            wire, stats = _encode_elementwise(
+                shard.reshape(-1), fmt, my_gid,
+                key=jax.random.fold_in(key, idx), mode=mode)
+            wire = tagging.tag(wire, "wire_payload", leg="gather")
+            full = jax.lax.all_gather(wire, axis_name, axis=0, tiled=True)
+            dec = tagging.tag(
+                full.astype(jnp.float32)
+                * exp2_int(-fmt.fl)[jnp.asarray(gid)], "decode_out")
+            return dec, tagging.tag_tree(stats, "wire_stats")
+        wire, stats = wire_encode(shard.reshape(-1), fmt,
+                                  key=jax.random.fold_in(key, idx),
+                                  mode=mode, backend=backend)
+        wire = tagging.tag(wire, "wire_payload", leg="gather")
         full = jax.lax.all_gather(wire, axis_name, axis=0, tiled=True)
-        dec = full.astype(jnp.float32) * exp2_int(-fmt.fl)[jnp.asarray(gid)]
-        return dec, stats
-    wire, stats = wire_encode(shard.reshape(-1), fmt,
-                              key=jax.random.fold_in(key, idx), mode=mode,
-                              backend=backend)
-    full = jax.lax.all_gather(wire, axis_name, axis=0, tiled=True)
-    return wire_decode(full, fmt), stats
+        return wire_decode(full, fmt), tagging.tag_tree(stats, "wire_stats")
 
 
 def dps_allreduce_mean_tree(tree, formats, axis_name,
                             key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
                             backend: str = "auto",
                             domain: str = "wire_grads",
-                            quantum: int = WIRE_GROUP_QUANTUM):
+                            quantum: Optional[int] = None):
     """:func:`dps_allreduce_mean` over a whole pytree in ONE collective pair.
 
     Each leaf is encoded straight into its slot of ONE preallocated int8
@@ -812,6 +911,8 @@ def dps_allreduce_mean_tree(tree, formats, axis_name,
 
     Returns ``(mean_tree, stats)`` with every leaf cast back to its own
     dtype.  ``formats``/``domain``: see :func:`resolve_domain_format`.
+    ``quantum=None`` derives the per-leaf slot alignment per
+    :func:`default_wire_quantum` (size-aware on jnp, kernel tile on TPU).
     """
     fmt = resolve_domain_format(formats, domain)
     _validate_capacity(fmt)
@@ -828,9 +929,11 @@ def dps_allreduce_mean_tree(tree, formats, axis_name,
     k1, k2 = jax.random.split(jax.random.fold_in(key, idx))
     be = _resolve_backend(backend)
     sizes = tuple(l.size for l in leaves)
+    q = _resolve_quantum(quantum, sum(sizes),
+                         len(leaves) if grouped else 1, be)
 
     if grouped:
-        layout = group_layout(sizes, n_chunks=n, quantum=quantum)
+        layout = group_layout(sizes, n_chunks=n, quantum=q)
         offsets, total = layout.offsets, layout.total
     else:
         # one format decodes everywhere, so exact packing (tail pad only,
@@ -862,22 +965,30 @@ def dps_allreduce_mean_tree(tree, formats, axis_name,
                 stats = stats.merge(s)
         return buf, stats
 
-    if grouped:
-        mean_al, stats = _aligned_allreduce_mean(
-            None, fmt, layout, axis_name, k1, k2, mode=mode, backend=be,
-            encode_leg1=encode_leg1)
-        full = mean_al
-        decode = lambda g, flat: flat  # already decoded per tile
-    else:
-        buf, stats = encode_leg1(None, None)
-        wire = jax.lax.all_to_all(buf.reshape(n, chunk), axis_name,
-                                  split_axis=0, concat_axis=0, tiled=True)
-        part = _wire_reduce(wire, fmt, None, backend=be, quantum=quantum)
-        wire2, _ = wire_encode(part, fmt, key=k2, mode=mode,
-                               compute_stats=False, backend=be)
-        full_wire = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
-        full = full_wire
-        decode = lambda g, sl: wire_decode(sl, fmt)
+    with tagging.domain(domain):
+        if grouped:
+            # leg-2 bits are element-indexed (see _aligned_allreduce_mean):
+            # every rank must derive the same stream
+            k2s = jax.random.fold_in(key, 0x4C454732)        # "LEG2"
+            mean_al, stats = _aligned_allreduce_mean(
+                None, fmt, layout, axis_name, k1, k2s, mode=mode,
+                backend=be, encode_leg1=encode_leg1)
+            full = mean_al
+            decode = lambda g, flat: flat  # already decoded per tile
+        else:
+            buf, stats = encode_leg1(None, None)
+            payload = tagging.tag(buf.reshape(n, chunk), "wire_payload",
+                                  leg="dispatch")
+            wire = jax.lax.all_to_all(payload, axis_name,
+                                      split_axis=0, concat_axis=0,
+                                      tiled=True)
+            part = _wire_reduce(wire, fmt, None, backend=be, quantum=q)
+            wire2, _ = wire_encode(part, fmt, key=k2, mode=mode,
+                                   compute_stats=False, backend=be)
+            wire2 = tagging.tag(wire2, "wire_payload", leg="gather")
+            full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
+            decode = lambda g, sl: wire_decode(sl, fmt)
+        stats = tagging.tag_tree(stats, "wire_stats")
 
     out = []
     for g, leaf in enumerate(leaves):

@@ -111,6 +111,51 @@ def group_block(quantum: int):
     return quantum // bn, bn
 
 
+# minimum int8 tile (sublane, lane) — every grouped wire tile must be a
+# multiple of this shape (see the TPU tiling rules for 1-byte elements)
+INT8_MIN_TILE = (32, 128)
+
+# Per-core SMEM budget the scalar-prefetch operands (format table +
+# tile→group map + seed) must fit into.  Real v5e SMEM is far larger, but
+# the tables are meant to stay tiny — a [G, 2] int32 table with thousands
+# of rows signals a mis-built layout, which is exactly what the analyzer
+# flags (rule KG-SMEM-TABLE in repro.analysis.kernel_checks).
+SMEM_TABLE_BUDGET_BYTES = 64 * 1024
+
+
+class KernelSignature:
+    """Static facts about one Pallas kernel body, declared beside it.
+
+    ``repro.analysis.kernel_checks`` validates call-site geometry against
+    these without executing anything — a signature drift (say a new
+    scalar-prefetch operand added to the kernel but not its call sites)
+    becomes rule KG-PREFETCH-ARITY instead of a Mosaic lowering error
+    three layers deep.
+    """
+
+    def __init__(self, num_scalar_prefetch: int, scalar_operands: tuple,
+                 grouped: bool):
+        self.num_scalar_prefetch = num_scalar_prefetch
+        self.scalar_operands = scalar_operands
+        self.grouped = grouped
+
+
+# keyed by kernel-body name; scalar_operands lists the SMEM prefetch refs
+# in kernel-signature order
+KERNEL_SIGNATURES = {
+    "_kernel": KernelSignature(
+        num_scalar_prefetch=1, scalar_operands=("fmt3[3]",), grouped=False),
+    "_group_kernel": KernelSignature(
+        num_scalar_prefetch=3,
+        scalar_operands=("fmt_tab[G,2]", "tile_group[T]", "seed[1]"),
+        grouped=True),
+    "_wire_reduce_kernel": KernelSignature(
+        num_scalar_prefetch=2,
+        scalar_operands=("fmt_tab[G,2]", "tile_group[T]"),
+        grouped=True),
+}
+
+
 def _exp2i(n):
     """Bit-exact 2^n inside the kernel (jnp.exp2 is inexact on some
     backends; matches fixed_point.exp2_int)."""

@@ -11,15 +11,19 @@ variant (TPU only — see kernel docstring).
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional, Tuple
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.fixed_point import FixedPointFormat, QuantStats
 from repro.kernels import ref as ref_lib
-from repro.kernels.dps_quant import (DEFAULT_GROUP_QUANTUM, dps_quant_pallas,
+from repro.kernels.dps_quant import (DEFAULT_BLOCK, DEFAULT_GROUP_QUANTUM,
+                                     dps_quant_pallas,
                                      dps_quant_group_wire_pallas,
                                      dps_quant_wire_pallas,
-                                     dps_wire_reduce_pallas)
+                                     dps_wire_reduce_pallas, group_block)
 
 _ON_TPU = None
 
@@ -29,6 +33,88 @@ def _on_tpu() -> bool:
     if _ON_TPU is None:
         _ON_TPU = jax.default_backend() == "tpu"
     return _ON_TPU
+
+
+# ---------------------------------------------------------------------------
+# Static call-site geometry — what each wrapper WOULD launch, computed
+# without tracing or executing anything.  ``repro.analysis.kernel_checks``
+# builds one of these per Pallas call site reachable from a config and
+# validates the tiling/SMEM invariants against
+# ``dps_quant.KERNEL_SIGNATURES``.  The builders replicate the exact shape
+# arithmetic of the wrappers below; keeping them in this module means a
+# wrapper tiling change and its declared geometry are one diff.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCallGeometry:
+    """One prospective Pallas launch, statically described."""
+
+    kernel: str                       # KERNEL_SIGNATURES key
+    grid: Tuple[int, ...]
+    block: Tuple[int, int]            # (bm, bn) VMEM tile
+    out_dtype: str
+    num_scalar_prefetch: int          # arity at THIS call site
+    scalar_shapes: Tuple[Tuple[int, ...], ...]   # prefetch operand shapes
+    table_rows: Optional[int] = None  # G of the [G, 2] SMEM format table
+    tile_group_len: Optional[int] = None         # T entries passed
+    quantum: Optional[int] = None
+
+    @property
+    def smem_table_bytes(self) -> int:
+        """int32 bytes of all scalar-prefetch operands at this site."""
+        n = 0
+        for shp in self.scalar_shapes:
+            k = 1
+            for d in shp:
+                k *= d
+            n += 4 * k
+        return n
+
+
+def quantize_call_geometry(size: int, *, block=None,
+                           wire: bool = False) -> KernelCallGeometry:
+    """Geometry of a :func:`dps_quantize` / :func:`dps_quantize_wire` call
+    on a ``size``-element tensor (mirrors ``_fold_and_call`` +
+    ``_pallas_quant``)."""
+    block = block or DEFAULT_BLOCK
+    minor = 1024 if size >= 1024 else max(size, 1)
+    major = -(-size // minor)
+    bm = min(block[0], major) if major % block[0] else block[0]
+    bn = min(block[1], minor) if minor % block[1] else block[1]
+    grid = (-(-major // bm), -(-minor // bn))
+    return KernelCallGeometry(
+        kernel="_kernel", grid=grid, block=(bm, bn),
+        out_dtype="int8" if wire else "float32",
+        num_scalar_prefetch=1, scalar_shapes=((3,),))
+
+
+def group_wire_call_geometry(total: int, n_groups: int,
+                             quantum: int = DEFAULT_GROUP_QUANTUM
+                             ) -> KernelCallGeometry:
+    """Geometry of a :func:`dps_quantize_wire_grouped` call on a
+    group-aligned ``total``-element buffer with a ``[G, 2]`` table."""
+    bm, bn = group_block(quantum)
+    tiles = total // quantum
+    return KernelCallGeometry(
+        kernel="_group_kernel", grid=(tiles,), block=(bm, bn),
+        out_dtype="int8", num_scalar_prefetch=3,
+        scalar_shapes=((n_groups, 2), (tiles,), (1,)),
+        table_rows=n_groups, tile_group_len=tiles, quantum=quantum)
+
+
+def wire_reduce_call_geometry(n_ranks: int, chunk: int, n_groups: int,
+                              quantum: int = DEFAULT_GROUP_QUANTUM
+                              ) -> KernelCallGeometry:
+    """Geometry of a :func:`dps_wire_reduce` call on an
+    ``[n_ranks, chunk]`` payload (includes the internal tail pad)."""
+    bm, bn = group_block(quantum)
+    tiles = -(-chunk // quantum)
+    return KernelCallGeometry(
+        kernel="_wire_reduce_kernel", grid=(tiles,), block=(bm, bn),
+        out_dtype="float32", num_scalar_prefetch=2,
+        scalar_shapes=((n_groups, 2), (tiles,)),
+        table_rows=n_groups, tile_group_len=tiles, quantum=quantum)
 
 
 def _fold_and_call(pallas_fn, x, fmt, *, key, bits, stochastic, onchip_prng,

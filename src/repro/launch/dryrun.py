@@ -29,7 +29,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +82,59 @@ def _train_qcfg(cfg, mesh, grad_allreduce_bits=None, zero_opt=False,
     if wire_groups == "per-layer" and zero_shards is None:
         qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
     return qcfg
+
+
+def _abstract_params(cfg: ModelConfig):
+    from repro.models import registry
+    from repro.models.common import abstract_params
+    return abstract_params(registry(cfg.family).model_defs(cfg))
+
+
+def _engaged_domains(cfg: ModelConfig, qcfg: qtrain.QuantConfig,
+                     mesh) -> Tuple[str, ...]:
+    """The wire domains the compiled step will actually serve on this
+    mesh (a declared domain can compile on a mesh where the sync is
+    skipped — production meshes have a model axis > 1)."""
+    engaged = []
+    if qtrain.wire_sync_engaged(qcfg, mesh):
+        engaged.append("wire_grads")
+    if qtrain.zero_opt_engaged(qcfg, mesh):
+        engaged.append("wire_grads")
+        if qtrain.wire_params_engaged(qcfg, _abstract_params(cfg), mesh):
+            engaged.append("wire_params")
+    return tuple(dict.fromkeys(engaged))
+
+
+def _audit_wire(cfg: ModelConfig, qcfg: qtrain.QuantConfig, mesh,
+                hlo: str, engaged: Tuple[str, ...]) -> Dict[str, Any]:
+    """Prove the declared wire domains against the compiled HLO
+    (``repro.analysis.hlo_audit``) and FAIL the dry run on drift — a
+    domain the config declares, the mesh engages, but the HLO never
+    serves used to slip through as a silently-fp32 cell."""
+    from repro.analysis import hlo_audit
+
+    n_params = sum(l.size for l in jax.tree_util.tree_leaves(
+        _abstract_params(cfg)))
+    two_leg = True
+    declared_f32 = 0.0
+    if qtrain.zero_opt_engaged(qcfg, mesh) and "wire_params" not in engaged:
+        # the policy excludes leaves: fp32 param gather is the declared
+        # behavior (see qtrain.wire_params_engaged) — one s8 leg remains
+        two_leg = False
+        declared_f32 = 4.0 * n_params * 1.25
+    claims = hlo_audit.AuditClaims(
+        engaged=engaged, two_leg=two_leg, grouped=False,
+        f32_declared_bytes=declared_f32,
+        n_wire_elems=n_params if engaged else None)
+    report = hlo_audit.audit_hlo(hlo, claims, name=f"{cfg.name}/wire")
+    if not report.ok:
+        raise RuntimeError(
+            "wire audit failed — declared precision domains drifted from "
+            "the compiled HLO:\n" + "\n".join(
+                str(v) for v in report.violations))
+    return {"engaged": list(engaged),
+            "rules_checked": sorted(report.checked),
+            "violations": []}
 
 
 def _compile_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
@@ -251,12 +304,17 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         # domains appear exactly when the compressed sync would engage;
         # per-layer wire domains report their group count = leaf count);
         # _train_qcfg is the same derivation _compile_train compiled with
-        plan = _train_qcfg(cfg, mesh, grad_allreduce_bits, zero_opt,
-                           wire_controller, wire_groups).plan()
+        qcfg = _train_qcfg(cfg, mesh, grad_allreduce_bits, zero_opt,
+                           wire_controller, wire_groups)
+        plan = qcfg.plan()
+        engaged = _engaged_domains(cfg, qcfg, mesh)
         stats["precision_domains"] = {
             n: {"controller": s.controller, "groups": s.groups,
-                "stats": s.stream(n)}
+                "stats": s.stream(n), "wire": s.wire,
+                "engaged": not s.wire or n in engaged}
             for n, s in plan.domains}
+        stats["wire_audit"] = _audit_wire(cfg, qcfg, mesh,
+                                          compiled.as_text(), engaged)
 
     if probes:
         variants, rec = _probe_variants(cfg)

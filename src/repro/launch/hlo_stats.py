@@ -10,19 +10,28 @@ Two views of the same parse:
   ~1×.  This is the honest way to compare an fp32 gradient all-reduce
   against the compressed int8 two-leg path (all-to-all + all-gather), and
   what the ``grad_allreduce_bits`` regression test asserts on.
+
+Every byte count here flows through ONE instruction-walker
+(:func:`_instructions`): each consumer names the opcodes it cares about
+and interprets the parsed shapes; there is a single place that decides
+what an "instruction line" is.  ``repro.analysis.hlo_audit`` builds its
+rule engine on the same walker.
 """
 
 from __future__ import annotations
 
 import re
-from typing import Dict
+from typing import Dict, Iterable, Iterator, List, NamedTuple, Tuple
 
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)")
 _DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
                 "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
-                "u16": 2}
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+                "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+                "c64": 8, "c128": 16}
 
 # interconnect traversals per payload byte under the ring model
 _RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
@@ -34,7 +43,61 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     for d in dims.split(","):
         if d:
             n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+    try:
+        return n * _DTYPE_BYTES[dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown HLO dtype {dtype!r} in shape {dtype}[{dims}] — add "
+            f"it to repro.launch.hlo_stats._DTYPE_BYTES (guessing a byte "
+            f"width would silently corrupt the wire accounting)") from None
+
+
+class Instruction(NamedTuple):
+    """One parsed assignment line whose opcode matched the walker filter.
+
+    ``shapes`` holds every ``(dtype, bytes)`` on the line (result AND any
+    spelled-out operand shapes); ``result_shapes`` only those left of the
+    opcode token (the result side — a tuple result contributes one entry
+    per element).
+    """
+
+    op: str
+    shapes: Tuple[Tuple[str, int], ...]
+    result_shapes: Tuple[Tuple[str, int], ...]
+    line: str
+
+
+def _instructions(hlo_text: str, op_names: Iterable[str]
+                  ) -> Iterator[Instruction]:
+    """The ONE instruction-walker: yield every assignment whose opcode is
+    in ``op_names``.
+
+    Matches ``name = ... <op>(...)`` (``ROOT``-prefixed too) including
+    inside fusion/while/branch computation bodies; ``<op>-start`` variants
+    count, ``<op>-done`` completions are skipped (their payload was
+    already counted at the ``-start``).
+    """
+    pats = [(op, re.compile(rf"\b{re.escape(op)}(-start|-done)?\("))
+            for op in op_names]
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _ASSIGN_RE.match(s)
+        if not m:
+            continue
+        rest = m.group(1)
+        for op, pat in pats:
+            tok = pat.search(rest)
+            if tok is None:
+                continue
+            if f"{op}-done" in rest:
+                break
+            shapes = tuple((d, _shape_bytes(d, dims))
+                           for d, dims in _SHAPE_RE.findall(rest))
+            result = tuple(
+                (d, _shape_bytes(d, dims))
+                for d, dims in _SHAPE_RE.findall(rest[:tok.start()]))
+            yield Instruction(op, shapes, result, s)
+            break
 
 
 def _collective_instructions(hlo_text: str):
@@ -45,34 +108,17 @@ def _collective_instructions(hlo_text: str):
     whose CPU lowering decomposes into a tuple of per-rank chunks
     ``(s8[1,c], ...×n) all-to-all(...)``; there the payload is the *sum*
     of the result-tuple shapes (equal to the single-array form's full
-    shape), not one chunk.  ``ROOT``-prefixed instructions parse too.
+    shape), not one chunk.
     """
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", s)
-        if not m:
+    for ins in _instructions(hlo_text, COLLECTIVE_OPS):
+        if not ins.shapes:
             continue
-        rest = m.group(1)
-        op = tok = None
-        for cand in COLLECTIVE_OPS:
-            tok = re.search(rf"\b{cand}(-start|-done)?\(", rest)
-            if tok:
-                op = cand
-                break
-        if op is None or f"{op}-done" in rest:
-            continue
-        sizes = [(d, _shape_bytes(d, dims))
-                 for d, dims in _SHAPE_RE.findall(rest)]
-        if not sizes:
-            continue
-        if op == "all-to-all":
-            result = [(d, _shape_bytes(d, dims))
-                      for d, dims in _SHAPE_RE.findall(rest[:tok.start()])]
-            use = result or sizes
-            yield op, use[0][0], float(sum(b for _, b in use))
+        if ins.op == "all-to-all":
+            use = ins.result_shapes or ins.shapes
+            yield ins.op, use[0][0], float(sum(b for _, b in use))
         else:
-            dtype, nbytes = max(sizes, key=lambda t: t[1])
-            yield op, dtype, float(nbytes)
+            dtype, nbytes = max(ins.shapes, key=lambda t: t[1])
+            yield ins.op, dtype, float(nbytes)
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
@@ -107,10 +153,6 @@ def collective_wire_bytes(hlo_text: str) -> Dict[str, object]:
     return {"by_op_dtype": by_op, "by_dtype": by_dtype, "total": total}
 
 
-_RESULT_RE = re.compile(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
-                        r"(?:\(\s*)?([a-z0-9]+)\[([\d,]*)\]")
-
-
 def op_bytes(hlo_text: str, op_name: str) -> Dict[str, object]:
     """Result bytes of every ``op_name`` instruction, split by dtype.
 
@@ -124,16 +166,11 @@ def op_bytes(hlo_text: str, op_name: str) -> Dict[str, object]:
     """
     by_dtype: Dict[str, float] = {}
     count = 0
-    needle = f" {op_name}("
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        if needle not in s:
+    for ins in _instructions(hlo_text, (op_name,)):
+        if not ins.result_shapes:
             continue
-        m = _RESULT_RE.match(s)
-        if not m:
-            continue
-        dtype, dims = m.group(1), m.group(2)
-        by_dtype[dtype] = by_dtype.get(dtype, 0.0) + _shape_bytes(dtype, dims)
+        dtype, nbytes = ins.result_shapes[0]
+        by_dtype[dtype] = by_dtype.get(dtype, 0.0) + nbytes
         count += 1
     return {"by_dtype": by_dtype,
             "total": float(sum(by_dtype.values())), "count": count}

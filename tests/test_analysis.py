@@ -1,0 +1,331 @@
+"""Oracle suite for the precision-flow verifier (``repro.analysis``).
+
+Every rule in the catalogue (src/repro/analysis/README.md) is demonstrated
+to FIRE on a deliberately broken input — a construct with the bug class
+the rule exists for — and to stay quiet on the closest correct variant.
+The clean-pass sweep then runs the real lint CLI over the lenet mode grid
+under 8 devices, pinning that every shipped step verifies clean.
+
+Flow oracles trace in-process with an ``axis_env`` (collectives outside
+shard_map); HLO oracles feed handwritten HLO text to the rule engine (it
+is a text engine — synthetic modules make the firing conditions exact);
+kernel oracles break real geometries/layouts field-by-field with
+``dataclasses.replace``.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import flow, hlo_audit, kernel_checks
+from repro.core import tagging
+from repro.dist import collectives
+from repro.kernels import ops
+from repro.launch import hlo_stats
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+AXIS = [("data", 8)]
+
+
+def run_with_devices(code: str, n: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+# ---------------------------------------------------------------- flow pass
+
+def test_pf_wire_f32_fires_on_f32_payload():
+    def bad(x):
+        p = tagging.tag(x, "wire_payload", leg="dispatch")   # still f32!
+        return jax.lax.all_to_all(p, "data", split_axis=0, concat_axis=0,
+                                  tiled=True)
+    r = flow.analyze_fn(bad, jnp.zeros((8, 32)), axis_env=AXIS)
+    assert "PF-WIRE-F32" in r.rules_fired()
+
+
+def test_pf_wire_f32_fires_on_untagged_a2a_in_wire_step():
+    # an all-to-all that never went through an encode, in a step that
+    # uses the wire machinery elsewhere: the purity clause must catch it
+    def bad(x, y):
+        p = tagging.tag(x.astype(jnp.int8), "wire_payload", leg="dispatch")
+        w = jax.lax.all_to_all(p, "data", split_axis=0, concat_axis=0,
+                               tiled=True)
+        forgot = jax.lax.all_to_all(y, "data", split_axis=0, concat_axis=0,
+                                    tiled=True)
+        return w, forgot
+    r = flow.analyze_fn(bad, jnp.zeros((8, 32)), jnp.zeros((8, 32)),
+                        axis_env=AXIS)
+    assert "PF-WIRE-F32" in r.rules_fired()
+
+
+def test_pf_wire_f32_clean_on_int8_payload_and_f32_stats_psum():
+    def good(x, s):
+        p = tagging.tag(x.astype(jnp.int8), "wire_payload", leg="dispatch")
+        w = jax.lax.all_to_all(p, "data", split_axis=0, concat_axis=0,
+                               tiled=True)
+        return w, jax.lax.psum(s, "data")    # untainted f32 psum is fine
+    r = flow.analyze_fn(good, jnp.zeros((8, 32)), jnp.zeros(()),
+                        axis_env=AXIS)
+    assert r.ok and "PF-WIRE-F32" in r.checked
+
+
+def test_pf_requant_fires_through_structural_ops_only():
+    def bad(x):
+        d = tagging.tag(x, "decode_out")
+        d = d.reshape(-1)[:16]               # structural: taint survives
+        return tagging.tag(d, "encode_in", domain="wire_grads")
+    r = flow.analyze_fn(bad, jnp.zeros((4, 8)))
+    assert "PF-REQUANT" in r.rules_fired()
+
+    def good(x):
+        d = tagging.tag(x, "decode_out")
+        d = d * 0.5                          # genuine compute kills taint
+        return tagging.tag(d, "encode_in", domain="wire_grads")
+    r = flow.analyze_fn(good, jnp.zeros((4, 8)))
+    assert r.ok and "PF-REQUANT" in r.checked
+
+
+def test_pf_stats_route_fires_on_wire_stats_into_compute_sink():
+    def bad(x):
+        s = tagging.tag(x, "wire_stats")
+        return tagging.tag(s + 1.0, "stats_sink", domain="grads",
+                           wire=False, stream="E")
+    r = flow.analyze_fn(bad, jnp.zeros(()))
+    assert "PF-STATS-ROUTE" in r.rules_fired()
+
+    def good(x):
+        s = tagging.tag(x, "wire_stats")
+        return tagging.tag(s + 1.0, "stats_sink", domain="wire_grads",
+                           wire=True, stream="E")
+    r = flow.analyze_fn(good, jnp.zeros(()))
+    assert r.ok and "PF-STATS-ROUTE" in r.checked
+
+
+def test_pf_sr_seed_fires_on_prng_free_bits():
+    def bad(x):
+        bits = tagging.tag(jnp.zeros(x.shape, jnp.uint32), "sr_bits",
+                           domain="wire_grads")
+        return x + bits.astype(jnp.float32)
+    r = flow.analyze_fn(bad, jnp.zeros((16,)))
+    assert "PF-SR-SEED" in r.rules_fired()
+
+    def good(x, key):
+        raw = jax.random.bits(key, (16,), jnp.uint32)
+        bits = tagging.tag(raw, "sr_bits", domain="wire_grads")
+        return x + bits.astype(jnp.float32)
+    r = flow.analyze_fn(good, jnp.zeros((16,)), jax.random.key(0))
+    assert r.ok and "PF-SR-SEED" in r.checked
+
+
+def test_flow_descends_into_jit_subjaxprs():
+    @jax.jit
+    def inner(d):
+        return tagging.tag(d.reshape(-1), "encode_in", domain="wire_grads")
+
+    def bad(x):
+        return inner(tagging.tag(x, "decode_out"))
+    r = flow.analyze_fn(bad, jnp.zeros((4, 8)))
+    assert "PF-REQUANT" in r.rules_fired()
+
+
+# ----------------------------------------------------------- HLO audit pass
+
+def _hlo(*body: str) -> str:
+    return "ENTRY main {\n" + "\n".join(f"  {b}" for b in body) + "\n}\n"
+
+
+_CLAIMS_2LEG = hlo_audit.AuditClaims(engaged=("wire_grads",), two_leg=True,
+                                     n_wire_elems=4096)
+
+
+def test_ha_payload_dtype_fires_on_f32_all_to_all():
+    hlo = _hlo("%p = f32[4096]{0} parameter(0)",
+               "%a = f32[4096]{0} all-to-all(f32[4096]{0} %p)",
+               "%g = s8[4096]{0} all-gather(s8[512]{0} %q)")
+    r = hlo_audit.audit_hlo(hlo, _CLAIMS_2LEG)
+    assert "HA-PAYLOAD-DTYPE" in r.rules_fired()
+
+
+def test_ha_payload_dtype_fires_on_missing_gather_leg():
+    hlo = _hlo("%a = s8[4096]{0} all-to-all(s8[4096]{0} %p)")
+    r = hlo_audit.audit_hlo(hlo, _CLAIMS_2LEG)
+    assert "HA-PAYLOAD-DTYPE" in r.rules_fired()
+
+
+def test_ha_domain_coverage_fires_on_unserved_domain():
+    hlo = _hlo("%a = s8[4096]{0} all-to-all(s8[4096]{0} %p)",
+               "%g = s8[4096]{0} all-gather(s8[512]{0} %q)")
+    claims = dataclasses.replace(_CLAIMS_2LEG,
+                                 engaged=("wire_grads", "wire_params"))
+    # wire_params maps to all-gather and one exists -> covered; drop it:
+    hlo2 = _hlo("%a = s8[4096]{0} all-to-all(s8[4096]{0} %p)")
+    r = hlo_audit.audit_hlo(hlo2, dataclasses.replace(claims, two_leg=False))
+    assert "HA-DOMAIN-COVERAGE" in r.rules_fired()
+    assert hlo_audit.audit_hlo(hlo, claims).ok
+
+
+def test_ha_wire_ratio_fires_on_padding_blowup_and_missing_leg():
+    fat = _hlo("%a = s8[65536]{0} all-to-all(s8[65536]{0} %p)",
+               "%g = s8[65536]{0} all-gather(s8[8192]{0} %q)")
+    r = hlo_audit.audit_hlo(fat, _CLAIMS_2LEG)
+    assert "HA-WIRE-RATIO" in r.rules_fired()
+    thin = _hlo("%a = s8[512]{0} all-to-all(s8[512]{0} %p)",
+                "%g = s8[512]{0} all-gather(s8[64]{0} %q)")
+    r = hlo_audit.audit_hlo(thin, _CLAIMS_2LEG)
+    assert "HA-WIRE-RATIO" in r.rules_fired()
+
+
+def test_ha_f32_residual_fires_on_uncompressed_allreduce():
+    hlo = _hlo("%a = s8[4096]{0} all-to-all(s8[4096]{0} %p)",
+               "%g = s8[4096]{0} all-gather(s8[512]{0} %q)",
+               "%r = f32[4096]{0} all-reduce(f32[4096]{0} %x)")
+    r = hlo_audit.audit_hlo(hlo, _CLAIMS_2LEG)
+    assert "HA-F32-RESIDUAL" in r.rules_fired()
+
+
+def test_ha_f32_concat_fires_on_grouped_flatten():
+    hlo = _hlo("%c = f32[4096]{0} concatenate(f32[2048]{0} %a, "
+               "f32[2048]{0} %b)",
+               "%a2 = s8[4096]{0} all-to-all(s8[4096]{0} %p)",
+               "%g = s8[4096]{0} all-gather(s8[512]{0} %q)")
+    claims = dataclasses.replace(_CLAIMS_2LEG, grouped=True)
+    r = hlo_audit.audit_hlo(hlo, claims)
+    assert "HA-F32-CONCAT" in r.rules_fired()
+
+
+def test_ha_clean_on_two_leg_int8_schedule():
+    hlo = _hlo("%a = s8[4096]{0} all-to-all(s8[4096]{0} %p)",
+               "%g = s8[4096]{0} all-gather(s8[512]{0} %q)")
+    r = hlo_audit.audit_hlo(hlo, dataclasses.replace(_CLAIMS_2LEG,
+                                                     grouped=True))
+    assert r.ok, r.summary()
+    assert set(r.checked) >= {"HA-PAYLOAD-DTYPE", "HA-DOMAIN-COVERAGE",
+                              "HA-WIRE-RATIO", "HA-F32-RESIDUAL",
+                              "HA-F32-CONCAT"}
+
+
+# ------------------------------------------------------- kernel geometry
+
+def _geom():
+    return ops.group_wire_call_geometry(8 * 4096, 4, 4096)
+
+
+def test_kg_clean_on_real_builders():
+    assert kernel_checks.check_call(_geom(), expected_groups=4).ok
+    assert kernel_checks.check_call(
+        ops.wire_reduce_call_geometry(8, 4096, 4, 4096),
+        expected_groups=4).ok
+    assert kernel_checks.check_call(
+        ops.quantize_call_geometry(1 << 16)).ok
+
+
+def test_kg_smem_table_fires_on_wrong_height():
+    bad = dataclasses.replace(_geom(), table_rows=5)
+    r = kernel_checks.check_call(bad, expected_groups=4)
+    assert "KG-SMEM-TABLE" in r.rules_fired()
+
+
+def test_kg_smem_table_fires_on_overbudget_table():
+    g = _geom()
+    bad = dataclasses.replace(
+        g, table_rows=20000,
+        scalar_shapes=((20000, 2),) + g.scalar_shapes[1:])
+    r = kernel_checks.check_call(bad, expected_groups=20000)
+    assert "KG-SMEM-TABLE" in r.rules_fired()
+
+
+def test_kg_prefetch_arity_fires_on_signature_drift():
+    bad = dataclasses.replace(_geom(), num_scalar_prefetch=1)
+    r = kernel_checks.check_call(bad, expected_groups=4)
+    assert "KG-PREFETCH-ARITY" in r.rules_fired()
+
+
+def test_kg_tile_min_fires_on_subminimal_block_and_quantum():
+    r = kernel_checks.check_call(
+        dataclasses.replace(_geom(), block=(8, 128)), expected_groups=4)
+    assert "KG-TILE-MIN" in r.rules_fired()
+    r = kernel_checks.check_call(
+        dataclasses.replace(_geom(), quantum=4096 + 128), expected_groups=4)
+    assert "KG-TILE-MIN" in r.rules_fired()
+
+
+def test_kg_tile_straddle_fires_on_broken_layout():
+    lay = collectives.group_layout((5000, 3000), n_chunks=8, quantum=4096)
+    assert kernel_checks.check_layout(lay).ok
+
+    r = kernel_checks.check_layout(
+        dataclasses.replace(lay, offsets=(0, 5000)))
+    assert "KG-TILE-STRADDLE" in r.rules_fired()
+
+    r = kernel_checks.check_layout(
+        dataclasses.replace(lay, padded=(4096, 4096)))
+    assert "KG-TILE-STRADDLE" in r.rules_fired()
+
+    r = kernel_checks.check_layout(
+        dataclasses.replace(lay, chunk=lay.chunk + 1))
+    assert "KG-TILE-STRADDLE" in r.rules_fired()
+
+
+# --------------------------------------------- satellites: quantum + stats
+
+def test_default_wire_quantum_size_aware():
+    q = collectives.default_wire_quantum
+    # jnp backend: ~size/G rounded up to the 128-lane tile, 4096 cap
+    assert q(1000, 4, "jnp") == 256
+    assert q(100, 1, "jnp") == 128
+    assert q(100000, 4, "jnp") == 4096
+    # kernel backend: the 32x128 grouped tile is the floor
+    assert q(1000, 4, "kernel") == 4096
+    assert q(10 ** 7, 1, "kernel") == 4096
+
+
+def test_shape_bytes_raises_on_unknown_dtype():
+    with pytest.raises(ValueError, match="unknown HLO dtype"):
+        hlo_stats.collective_bytes("%a = q3[64]{0} all-reduce(q3[64] %p)")
+
+
+def test_hlo_walker_shared_by_all_consumers():
+    hlo = _hlo("%c = f32[256]{0} concatenate(f32[128]{0} %a, "
+               "f32[128]{0} %b)",
+               "%r = f32[64]{0} all-reduce(f32[64]{0} %p)",
+               "%d = f32[32]{0} dot(f32[32]{0} %x, f32[32]{0} %y)")
+    assert hlo_stats.concat_bytes(hlo)["by_dtype"]["f32"] == 1024.0
+    assert hlo_stats.collective_bytes(hlo)["all-reduce"] == 256
+    assert hlo_stats.op_bytes(hlo, "dot")["total"] == 128
+    # ring model: an all-reduce traverses ~2x its payload
+    assert hlo_stats.collective_wire_bytes(hlo)["by_dtype"]["f32"] == 512.0
+
+
+# ------------------------------------------------------- clean-pass sweep
+
+def test_lint_clean_sweep_lenet_grid():
+    """The shipped steps verify clean: the real CLI over the full lenet
+    mode grid (baseline / tree / per-layer / zero) must exit 0."""
+    out = run_with_devices("""
+        import sys
+        from repro.analysis import lint
+        rc = lint.main(["--config", "lenet"])
+        assert rc == 0, "lint reported violations on shipped configs"
+        print("SWEEP-OK")
+    """)
+    assert "SWEEP-OK" in out
+
+
+def test_lint_cli_mode_selection():
+    out = run_with_devices("""
+        from repro.analysis import lint
+        assert lint.main(["--zero-opt"]) == 0
+        print("ZERO-OK")
+    """)
+    assert "ZERO-OK" in out
