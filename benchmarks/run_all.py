@@ -31,7 +31,9 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 ARTIFACT = os.path.join(REPO_ROOT, "BENCH_collectives.json")
 
 # bump ONLY when a key is renamed/removed; adding keys is schema-compatible
-SCHEMA_VERSION = 1
+# v2: adds the overlap walltime block (overlap_ms_per_step,
+# overlap_improvement_over_serial, metrics_fetch) — all v1 keys kept
+SCHEMA_VERSION = 2
 
 
 def collectives_summary(res: dict) -> dict:
@@ -57,6 +59,16 @@ def collectives_summary(res: dict) -> dict:
             k: v.get("f32_concat_bytes") for k, v in tree.items()},
         "codecs_bitexact": res.get("codecs_bitexact"),
         "grouped_codecs_bitexact": res.get("grouped_codecs_bitexact"),
+        "overlap_ms_per_step": {
+            k: v.get("ms_per_step")
+            for k, v in res.get("overlap", {}).get("per_variant", {}).items()},
+        "overlap_improvement_over_serial":
+            res.get("overlap", {}).get("overlap_improvement_over_serial"),
+        "overlap_n_buckets": res.get("overlap", {}).get("n_buckets"),
+        "metrics_fetch": {
+            k: res.get("metrics_fetch", {}).get(k)
+            for k in ("synced_ms_per_step", "deferred_ms_per_step",
+                      "deferred_improvement")},
         "claims": res.get("claims", {}),
     }
 

@@ -32,10 +32,25 @@ propagates taint labels from those landmarks to prove four invariants:
     (threefry/random primitives).  Fires when the bits are constants or
     otherwise PRNG-free — silently deterministic "stochastic" rounding.
 
+``PF-BUCKET-ENCODE`` / ``PF-BUCKET-DECODE``
+    The bucketed-wire invariants (:mod:`repro.dist.overlap`).  Every
+    leaf the scheduler tags ``wire_bucket stage="ready"`` must reach a
+    wire encode at **exactly one** site — zero sites is a dropped leaf
+    (its gradient never syncs), two is a double-encoded payload (wire
+    bytes and rounding noise spent twice, and under stochastic rounding
+    the copies disagree) — and the declared bucket count ``n`` must be
+    fully covered by ready tags.  Every ``stage="mean"`` tag must carry
+    ``decode_out`` taint (the optimizer consumes a *decoded* bucket, not
+    raw wire bytes) and every ready bucket must have one.  Encode sites
+    are identified by jaxpr path, so fixpoint re-walks of ``while``
+    bodies do not double-count.  Both rules are vacuous (still marked
+    checked only when bucket tags exist) on un-bucketed steps.
+
 Taint crosses ``pjit`` / ``shard_map`` / ``scan`` / ``while`` / ``cond``
 / custom-derivative sub-jaxprs.  ``wire_stats`` and ``prng`` survive all
-ops (stats get stacked and reduced; keys get folded); ``wire_payload``
-and ``decode_out`` survive only structural ops.
+ops (stats get stacked and reduced; keys get folded); ``wire_payload``,
+``decode_out`` and the per-leaf ``bucket_ready:<b>:<g>`` labels survive
+only structural ops.
 """
 
 from __future__ import annotations
@@ -65,6 +80,10 @@ STRUCTURAL_PRIMS = frozenset({
 # taints that die at the first non-structural op
 _STRUCTURAL_ONLY = frozenset({"wire_payload", "decode_out"})
 
+# structural-only taint family for bucketed-wire readiness: one label per
+# (bucket, leaf), "bucket_ready:<b>:<g>"
+_BUCKET_READY = "bucket_ready:"
+
 _INT8 = ("int8", "uint8")
 
 
@@ -86,6 +105,14 @@ class _Walker:
         self.report = report
         self.taints: Dict[jax_core.Var, Set[str]] = {}
         self.uses_wire = False          # any wire_payload tag seen anywhere
+        # bucketed-wire bookkeeping (repro.dist.overlap): ready-tagged
+        # (bucket, leaf) -> set of encode-site jaxpr paths; bucket ->
+        # list of (where, descends-from-decode) mean tags; declared
+        # bucket count; stage="grad" readiness-tap bucket ids.
+        self.bucket_sites: Dict[Tuple[int, int], Set[str]] = {}
+        self.bucket_means: Dict[int, list] = {}
+        self.bucket_n: int = 0
+        self.grad_buckets: Set[int] = set()
 
     # -- taint bookkeeping -------------------------------------------------
 
@@ -128,7 +155,9 @@ class _Walker:
         if _is_prng_prim(name):
             in_taints = in_taints | {"prng"}
         if name not in STRUCTURAL_PRIMS:
-            in_taints = in_taints - _STRUCTURAL_ONLY
+            in_taints = {t for t in in_taints
+                         if t not in _STRUCTURAL_ONLY
+                         and not t.startswith(_BUCKET_READY)}
         for o in eqn.outvars:
             self.set_t(o, in_taints)
 
@@ -140,6 +169,10 @@ class _Walker:
 
         if kind == "encode_in":
             self.report.mark_checked("PF-REQUANT")
+            for t in in_taints:
+                if t.startswith(_BUCKET_READY):
+                    b, g = (int(p) for p in t[len(_BUCKET_READY):].split(":"))
+                    self.bucket_sites.setdefault((b, g), set()).add(where)
             if "decode_out" in in_taints:
                 self.report.add(
                     "PF-REQUANT",
@@ -163,6 +196,19 @@ class _Walker:
                     f"descend from any PRNG primitive — the 'stochastic' "
                     f"path is silently deterministic",
                     where)
+        elif kind == "wire_bucket":
+            stage = params.get("stage")
+            b = int(params.get("bucket", -1))
+            self.bucket_n = max(self.bucket_n, int(params.get("n", 0)))
+            if stage == "ready":
+                g = int(params.get("leaf", -1))
+                self.bucket_sites.setdefault((b, g), set())
+                out_taints.add(f"{_BUCKET_READY}{b}:{g}")
+            elif stage == "mean":
+                self.bucket_means.setdefault(b, []).append(
+                    (where, "decode_out" in in_taints))
+            elif stage == "grad":
+                self.grad_buckets.add(b)
         elif kind == "stats_sink":
             self.report.mark_checked("PF-STATS-ROUTE")
             if not params.get("wire", False) and "wire_stats" in in_taints:
@@ -192,6 +238,62 @@ class _Walker:
                     f"{why} reaches collective {name!r} as {dtype} — the "
                     f"wire contract is int8 grid integers only",
                     where)
+
+    def finalize_buckets(self) -> None:
+        """Post-walk bucket accounting: PF-BUCKET-ENCODE (every ready
+        leaf encoded at exactly one site, declared bucket count covered)
+        and PF-BUCKET-DECODE (every ready bucket has a mean tag that
+        descends from a wire decode).  Vacuous when the step carries no
+        ``wire_bucket`` tags."""
+        if not (self.bucket_sites or self.bucket_means or self.grad_buckets):
+            return
+        self.report.mark_checked("PF-BUCKET-ENCODE", "PF-BUCKET-DECODE")
+        ready = {b for b, _ in self.bucket_sites}
+        for (b, g), sites in sorted(self.bucket_sites.items()):
+            if not sites:
+                self.report.add(
+                    "PF-BUCKET-ENCODE",
+                    f"bucket {b} leaf {g} is tagged ready but never "
+                    f"reaches a wire encode — the leaf's gradient would "
+                    f"be dropped from the synced mean",
+                    "<bucket-finalize>")
+            elif len(sites) > 1:
+                self.report.add(
+                    "PF-BUCKET-ENCODE",
+                    f"bucket {b} leaf {g} reaches {len(sites)} distinct "
+                    f"wire encodes — a double-encoded payload (wire bytes "
+                    f"spent twice; stochastic copies disagree)",
+                    sorted(sites)[0])
+        if self.bucket_n and ready and ready != set(range(self.bucket_n)):
+            missing = sorted(set(range(self.bucket_n)) - ready)
+            self.report.add(
+                "PF-BUCKET-ENCODE",
+                f"the schedule declares {self.bucket_n} buckets but ready "
+                f"tags cover only {sorted(ready)} (missing {missing})",
+                "<bucket-finalize>")
+        if self.grad_buckets and ready and self.grad_buckets != ready:
+            self.report.add(
+                "PF-BUCKET-ENCODE",
+                f"gradient-readiness taps mark buckets "
+                f"{sorted(self.grad_buckets)} but the wire consumes "
+                f"{sorted(ready)} — scheduler and collective disagree on "
+                f"the plan",
+                "<bucket-finalize>")
+        for b in sorted(ready):
+            if b not in self.bucket_means:
+                self.report.add(
+                    "PF-BUCKET-DECODE",
+                    f"bucket {b} has no decoded-mean tag — the optimizer "
+                    f"would consume an unsynced (or undecoded) bucket",
+                    "<bucket-finalize>")
+        for b, entries in sorted(self.bucket_means.items()):
+            if not any(ok for _, ok in entries):
+                self.report.add(
+                    "PF-BUCKET-DECODE",
+                    f"bucket {b}'s mean tag does not descend from a wire "
+                    f"decode — raw or re-encoded wire bytes would reach "
+                    f"the optimizer",
+                    entries[0][0])
 
     # -- sub-jaxpr descent -------------------------------------------------
 
@@ -284,8 +386,11 @@ def analyze_jaxpr(jaxpr, name: str = "step") -> Report:
         second = _Walker(Report(name=name))
         second.uses_wire = True
         second.walk(_as_jaxpr(jaxpr))
+        second.finalize_buckets()
         report.violations = second.report.violations
         report.mark_checked(*second.report.checked)
+    else:
+        walker.finalize_buckets()
     return report
 
 

@@ -28,6 +28,14 @@ The mode grid:
 * ``per-layer`` — one wire ⟨IL, FL⟩ per param leaf (grouped tree +
                   group-aligned kernel schedule).
 * ``zero``      — ZeRO-1: int8 reduce-scatter + parameter all-gather.
+
+``--wire-overlap on`` rebuilds the ``tree`` and ``per-layer`` cells with
+the backward-overlapped bucketed wire (:mod:`repro.dist.overlap`) — the
+flow pass then additionally proves PF-BUCKET-ENCODE / PF-BUCKET-DECODE
+(every bucket encoded exactly once and decoded before the optimizer
+consumes it).  ``baseline`` is unaffected and ``zero`` is skipped under
+overlap (the flat ZeRO layout erases the leaf boundaries buckets need —
+the combination is rejected by ``qtrain.make_train_step``).
 """
 
 from __future__ import annotations
@@ -54,12 +62,13 @@ def _data_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
-def _mode_qcfg(mode: str, n_ranks: int,
-               wire_controller: str) -> qtrain.QuantConfig:
+def _mode_qcfg(mode: str, n_ranks: int, wire_controller: str,
+               wire_overlap: bool = False) -> qtrain.QuantConfig:
     kw = dict(enabled=True, controller="paper",
               wire_controller=wire_controller)
     if mode in ("tree", "per-layer"):
         kw["grad_allreduce_bits"] = 8
+        kw["wire_overlap"] = wire_overlap
     elif mode == "zero":
         kw["grad_allreduce_bits"] = 8
         kw["zero_opt_shards"] = n_ranks
@@ -116,7 +125,8 @@ def _kernel_reports(mode: str, leaf_sizes, n_ranks: int,
     ]
 
 
-def _wire_pipeline_report(mode: str, leaf_sizes, mesh, name: str) -> Report:
+def _wire_pipeline_report(mode: str, leaf_sizes, mesh, name: str,
+                          wire_overlap: bool = False) -> Report:
     """Audit the wire pipeline compiled in ISOLATION (the
     ``bench_collectives`` idiom): a shard_map'ed tree all-reduce over
     grad-shaped leaves.  Only here is the zero-f32-concatenate claim
@@ -136,7 +146,12 @@ def _wire_pipeline_report(mode: str, leaf_sizes, mesh, name: str) -> Report:
     key = jax.eval_shape(lambda: jax.random.key(1))
 
     def body(tr, k):
-        mean, _ = collectives.dps_allreduce_mean_tree(tr, fmt, "data", k)
+        if wire_overlap:
+            from repro.dist import overlap as overlap_lib
+            mean, _ = overlap_lib.bucketed_allreduce_mean_tree(
+                tr, fmt, "data", k)
+        else:
+            mean, _ = collectives.dps_allreduce_mean_tree(tr, fmt, "data", k)
         return mean
 
     fn = jax.jit(jax.shard_map(
@@ -151,12 +166,13 @@ def _wire_pipeline_report(mode: str, leaf_sizes, mesh, name: str) -> Report:
     return hlo_audit.audit_hlo(hlo, claims, name=name)
 
 
-def _lenet_cell(mode: str, mesh, wire_controller: str) -> List[Report]:
+def _lenet_cell(mode: str, mesh, wire_controller: str,
+                wire_overlap: bool = False) -> List[Report]:
     from repro.models import lenet
     from repro.optim import SGDConfig, make_optimizer
 
     n = mesh.devices.size
-    qcfg = _mode_qcfg(mode, n, wire_controller)
+    qcfg = _mode_qcfg(mode, n, wire_controller, wire_overlap)
     params = lenet.init(jax.random.key(0))
     if mode == "per-layer":
         qcfg = qcfg.with_per_layer_wire(params)
@@ -171,11 +187,11 @@ def _lenet_cell(mode: str, mesh, wire_controller: str) -> List[Report]:
     name = f"lenet/{mode}"
     leaf_sizes = [l.size for l in jax.tree.leaves(params)]
     return _step_reports(step, (state, batch), qcfg, mesh, mode,
-                         params, leaf_sizes, name)
+                         params, leaf_sizes, name, wire_overlap)
 
 
 def _arch_cell(arch: str, mode: str, mesh, wire_controller: str,
-               seq: int) -> List[Report]:
+               seq: int, wire_overlap: bool = False) -> List[Report]:
     from repro.configs.base import ShapeConfig, get_config, smoke
     from repro.launch import specs as specs_lib
     from repro.optim import SGDConfig, make_optimizer
@@ -186,7 +202,7 @@ def _arch_cell(arch: str, mode: str, mesh, wire_controller: str,
 
     n = mesh.devices.size
     shape = ShapeConfig("lint_train", "train", seq=seq, batch=n)
-    qcfg = _mode_qcfg(mode, n, wire_controller)
+    qcfg = _mode_qcfg(mode, n, wire_controller, wire_overlap)
     if mode == "per-layer":
         qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
     opt = make_optimizer(SGDConfig())
@@ -196,11 +212,12 @@ def _arch_cell(arch: str, mode: str, mesh, wire_controller: str,
     name = f"{arch}/{mode}"
     leaf_sizes = [l.size for l in jax.tree.leaves(astate.params)]
     return _step_reports(step, (astate, abatch), qcfg, mesh, mode,
-                         astate.params, leaf_sizes, name)
+                         astate.params, leaf_sizes, name, wire_overlap)
 
 
 def _step_reports(step, abstract_args, qcfg, mesh, mode: str, params,
-                  leaf_sizes, name: str) -> List[Report]:
+                  leaf_sizes, name: str,
+                  wire_overlap: bool = False) -> List[Report]:
     n_params = sum(leaf_sizes)
     reports = [flow.analyze_jaxpr(jax.make_jaxpr(step)(*abstract_args),
                                   name=f"{name}/flow")]
@@ -210,7 +227,8 @@ def _step_reports(step, abstract_args, qcfg, mesh, mode: str, params,
     if claims.engaged:
         if mode in ("tree", "per-layer"):
             reports.append(_wire_pipeline_report(mode, leaf_sizes, mesh,
-                                                 f"{name}/pipeline"))
+                                                 f"{name}/pipeline",
+                                                 wire_overlap))
         reports.extend(_kernel_reports(mode, leaf_sizes, mesh.devices.size,
                                        f"{name}/kernel"))
     return reports
@@ -218,12 +236,12 @@ def _step_reports(step, abstract_args, qcfg, mesh, mode: str, params,
 
 def lint_cell(config: str, mode: str, mesh=None,
               wire_controller: str = "flexpoint",
-              seq: int = 128) -> List[Report]:
+              seq: int = 128, wire_overlap: bool = False) -> List[Report]:
     """All three passes over one (config, mode) cell; returns Reports."""
     mesh = mesh or _data_mesh()
     if config == "lenet":
-        return _lenet_cell(mode, mesh, wire_controller)
-    return _arch_cell(config, mode, mesh, wire_controller, seq)
+        return _lenet_cell(mode, mesh, wire_controller, wire_overlap)
+    return _arch_cell(config, mode, mesh, wire_controller, seq, wire_overlap)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -242,6 +260,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--modes", default=None,
                     help=f"comma-separated subset of {MODES}")
     ap.add_argument("--wire-controller", default="flexpoint")
+    ap.add_argument("--wire-overlap", choices=("on", "off"), default="off",
+                    help="rebuild the tree/per-layer cells with the "
+                         "backward-overlapped bucketed wire; the zero "
+                         "cell is skipped (buckets need leaf boundaries "
+                         "the flat ZeRO layout erases)")
     ap.add_argument("--seq", type=int, default=128,
                     help="sequence length for arch train cells")
     args = ap.parse_args(argv)
@@ -257,6 +280,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     for m in modes:
         if m not in MODES:
             ap.error(f"unknown mode {m!r} (choose from {MODES})")
+    wire_overlap = args.wire_overlap == "on"
+    if wire_overlap and "zero" in modes and not args.zero_opt:
+        modes = [m for m in modes if m != "zero"]
     configs = args.config or ["lenet"]
 
     mesh = _data_mesh()
@@ -267,7 +293,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         for mode in modes:
             try:
                 reports = lint_cell(config, mode, mesh,
-                                    args.wire_controller, args.seq)
+                                    args.wire_controller, args.seq,
+                                    wire_overlap)
             except Exception as e:          # a cell that cannot build IS a
                 n_viol += 1                 # lint failure, not a skip
                 print(f"ERROR {config}/{mode}: {e!r}", flush=True)

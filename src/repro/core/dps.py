@@ -64,6 +64,11 @@ class DPSHyper:
     # FlexPoint-like predictive scheme:
     flex_decay: float = 0.9
     flex_slack: float = 1.0            # extra headroom bits on predicted max
+    # measured-slack mode (wire domains): place the radix at the r_max
+    # tail quantile of the measured magnitude distribution instead of a
+    # hand-tuned 2^flex_slack over the max — see FlexpointController and
+    # wire_hyper(auto_slack=True)
+    flex_auto_slack: bool = False
 
 
 def _clamp_fmt(il: jax.Array, fl: jax.Array, h: DPSHyper):
@@ -300,6 +305,22 @@ class FlexpointController:
         m = jnp.maximum(h.flex_decay * state.max_ema,
                         stats.max_abs.astype(jnp.float32))
         pred = m * (2.0 ** h.flex_slack)
+        if h.flex_auto_slack:
+            # Measured slack: the per-element mean |x| over nonzero
+            # elements estimates the bulk scale b of the magnitude
+            # distribution; for a Laplace(0, b) tail the r_max quantile
+            # sits at b·ln(1/r_max), so placing the radix there clips an
+            # expected r_max fraction — the measured version of the
+            # hand-tuned negative gradient slack (see wire_hyper), and
+            # it tracks each stream (per-group rows included) instead of
+            # one per-tensor-class constant.  Never place above the max
+            # component (nothing out there to cover), and fall back to
+            # the static slack on steps where the stream carried no
+            # stats (e.g. wire domains before the sync first engages).
+            bulk = stats.abs_sum / jnp.maximum(stats.nonzero, 1.0)
+            cover = bulk * jnp.float32(jnp.log(1.0 / h.r_max))
+            pred = jnp.where(stats.nonzero > 0.0,
+                             jnp.minimum(m, cover), pred)
         # smallest IL whose signed range covers pred: 2^(IL-1) > pred
         il = jnp.ceil(jnp.log2(jnp.maximum(pred, 1e-30))).astype(jnp.int32) + 1
         il = jnp.clip(il, h.il_min, h.total_bits - h.fl_min)
@@ -320,7 +341,8 @@ def make_controller(name: str, hyper: Optional[DPSHyper] = None):
     return CONTROLLERS[name](hyper or DPSHyper())
 
 
-def wire_hyper(wire_bits: int, il_init: int, slack: float = 1.0) -> DPSHyper:
+def wire_hyper(wire_bits: int, il_init: int, slack: float = 1.0,
+               auto_slack: bool = False) -> DPSHyper:
     """Hyper-parameters for a *wire* precision domain.
 
     The wire payload is int8 grid integers, so every width knob is capped at
@@ -345,12 +367,21 @@ def wire_hyper(wire_bits: int, il_init: int, slack: float = 1.0) -> DPSHyper:
     ``max|g|`` stream, so the slack is per-tensor-class while the radix is
     per-layer — the spread across rows is the measured octave spread of
     the per-layer gradient ranges.
+
+    ``auto_slack=True`` replaces the hand-tuned constant with a measured
+    placement: the flexpoint controller derives the radix from the wire
+    stream's own ``abs_sum``/``nonzero`` (the bulk scale) at the ``r_max``
+    tail quantile, so each domain — and each group row under a per-layer
+    wire — tunes its own effective slack every step instead of inheriting
+    one per-tensor-class constant.  ``slack`` remains the fallback until
+    the stream first carries stats.
     """
     il0 = min(max(il_init, 1), wire_bits)
     return DPSHyper(il_min=1, il_max=wire_bits, fl_min=0,
                     fl_max=max(wire_bits - 1, 1), il_init=il0,
                     fl_init=wire_bits - il0, total_bits=wire_bits,
-                    max_total=wire_bits, flex_slack=slack)
+                    max_total=wire_bits, flex_slack=slack,
+                    flex_auto_slack=auto_slack)
 
 
 # ---------------------------------------------------------------------------

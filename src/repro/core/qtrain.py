@@ -83,6 +83,12 @@ class QuantConfig:
     wire_controller: str = "flexpoint"
     hyper_wire_grads: Optional[dps_lib.DPSHyper] = None   # None -> derived
     hyper_wire_params: Optional[dps_lib.DPSHyper] = None  # None -> derived
+    # Measured wire slack: derive each wire domain's radix headroom from
+    # its own measured abs_sum/nonzero tail quantile instead of the
+    # hand-tuned per-tensor-class constants (dps.wire_hyper(auto_slack=
+    # True)).  Only affects the DERIVED wire hypers — an explicit
+    # hyper_wire_* wins.
+    wire_auto_slack: bool = False
     # Per-LAYER wire formats: 0 = one global wire ⟨IL, FL⟩ (scalar state);
     # G > 0 gives the ``wire_grads`` domain a [G] controller state — one
     # ⟨IL, FL⟩ per gradient-tree leaf, fed group-wise by the collective's
@@ -104,6 +110,23 @@ class QuantConfig:
     # ``make_train_step(..., mesh=...)``; degrades to the identity on
     # single-device meshes.
     grad_allreduce_bits: Optional[int] = None
+    # Backward-overlapped bucketed wire (repro.dist.overlap): with the
+    # compressed sync engaged, split the gradient tree into DDP-style
+    # buckets (contiguous leaf runs in backward ready order — last layer
+    # first) and run one compressed collective pair per bucket instead of
+    # one monolithic pair for the tree.  Each bucket's wire legs depend
+    # only on its own leaves, so collective dispatch can overlap the
+    # remaining backward, working sets stay bucket-sized, and per-bucket
+    # GroupLayouts shrink grouped-padding overhead.  Gradient-readiness
+    # taps (custom-vjp identities on the params) mark each bucket's
+    # materialization point in the backward jaxpr; the precision-flow
+    # verifier's PF-BUCKET rules prove every bucket is encoded exactly
+    # once and decoded before the optimizer consumes it.  No effect
+    # without ``grad_allreduce_bits``; mutually exclusive with
+    # ``zero_opt_shards`` (the flat ZeRO layout erases the leaf
+    # boundaries buckets are made of).
+    wire_overlap: bool = False
+    wire_bucket_elems: int = 0          # 0 -> overlap.DEFAULT_BUCKET_ELEMS
     # ZeRO-1: shard the optimizer state across the data axis into this many
     # slices (must equal the mesh's data-axis size when it engages).  The
     # param tree is flattened into the padded 1-D ZeroPartitioner layout so
@@ -146,13 +169,15 @@ class QuantConfig:
             domains.append(("wire_grads", DomainSpec(
                 self.wire_controller,
                 self.hyper_wire_grads
-                or dps_lib.wire_hyper(wb, il_init=6, slack=-2.0),
+                or dps_lib.wire_hyper(wb, il_init=6, slack=-2.0,
+                                      auto_slack=self.wire_auto_slack),
                 groups=self.wire_grads_groups, wire=True)))
             if self.zero_opt_shards is not None:
                 domains.append(("wire_params", DomainSpec(
                     self.wire_controller,
                     self.hyper_wire_params
-                    or dps_lib.wire_hyper(wb, il_init=2, slack=1.0),
+                    or dps_lib.wire_hyper(wb, il_init=2, slack=1.0,
+                                          auto_slack=self.wire_auto_slack),
                     wire=True)))
         return PrecisionPlan(tuple(domains))
 
@@ -490,29 +515,45 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             "zero_opt_shards + grad_allreduce_bits put the parameter "
             f"all-gather on the int8 wire, but the precision plan "
             f"({plan.names}) declares no 'wire_params' domain")
+    wire_overlap = bool(qcfg.wire_overlap) and wire_sync
+    if qcfg.wire_overlap and zero_opt:
+        raise ValueError(
+            "wire_overlap buckets the gradient TREE (contiguous leaf runs "
+            "in backward ready order), but zero_opt_shards flattens the "
+            "tree into the ZeroPartitioner layout, which erases leaf "
+            "boundaries — run the overlapped wire without ZeRO-1")
     if wire_sync or zero_opt:
         from repro.dist import collectives  # deferred: dist imports core
+    if wire_overlap:
+        from repro.dist import overlap as overlap_lib
+        bucket_elems = (qcfg.wire_bucket_elems
+                        or overlap_lib.DEFAULT_BUCKET_ELEMS)
     if zero_opt:
         from repro.dist.sharding import ZeroPartitioner
 
-    def _grads(qparams, batch, fmts, k_a, microbatch_idx):
+    def _grads(qparams, batch, fmts, k_a, microbatch_idx, tap=None):
         qctx = None
         if qcfg.enabled and qcfg.policy.quantizes("acts"):
             qctx = QCtx(acts_fmt=fmts["acts"], grads_fmt=fmts["grads"],
                         key=jax.random.fold_in(k_a, microbatch_idx),
                         rounding=rounding, collect_stats=True)
-        return jax.value_and_grad(loss_fn, has_aux=True)(qparams, batch, qctx)
+        # the readiness tap must sit INSIDE the differentiated function:
+        # its custom-vjp backward tags each param leaf's cotangent at the
+        # point the backward materializes it (repro.dist.overlap).
+        fn = (loss_fn if tap is None
+              else lambda p, b, c: loss_fn(tap(p), b, c))
+        return jax.value_and_grad(fn, has_aux=True)(qparams, batch, qctx)
 
-    def _accum_grads(qparams, batch, fmts, k_a):
+    def _accum_grads(qparams, batch, fmts, k_a, tap=None):
         if accum_steps == 1:
-            return _grads(qparams, batch, fmts, k_a, 0)
+            return _grads(qparams, batch, fmts, k_a, 0, tap)
         micro = jax.tree.map(
             lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
                                 + x.shape[1:]), batch)
 
         def body(carry, xs):
             loss_acc, g_acc, stats_acc, idx = carry
-            (loss, aux), g = _grads(qparams, xs, fmts, k_a, idx)
+            (loss, aux), g = _grads(qparams, xs, fmts, k_a, idx, tap)
             g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
                                  g_acc, g)
             stats_acc = stats_acc.merge(aux.get("act_stats",
@@ -557,11 +598,25 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         ``dps_allreduce_mean`` replaces the implicit psum.  Scalars
         (loss, acc) come back pmean'ed and QuantStats psum'ed, so the
         caller sees the same global quantities as the GSPMD path.
+
+        With ``wire_overlap`` the monolithic tree collective becomes the
+        bucketed schedule (repro.dist.overlap): readiness taps on the
+        params mark each bucket's gradients as the backward materializes
+        them, and one compressed collective pair runs per bucket in that
+        order — bit-exact vs the monolithic path under nearest rounding,
+        identical dispatch-leg stats under both modes.
         """
         def body(qparams, batch, fmts, k_a, k_g, k_r):
             rank = jax.lax.axis_index(data_axis)
+            tap = bplan = None
+            if wire_overlap:
+                bplan = overlap_lib.plan_buckets(
+                    tuple(l.size
+                          for l in jax.tree_util.tree_leaves(qparams)),
+                    bucket_elems)
+                tap = lambda p: overlap_lib.tap_params(p, bplan)
             (loss, aux), grads = _accum_grads(
-                qparams, batch, fmts, jax.random.fold_in(k_a, rank))
+                qparams, batch, fmts, jax.random.fold_in(k_a, rank), tap)
             if wire_groups:
                 n_leaves = len(jax.tree_util.tree_leaves(grads))
                 if n_leaves != wire_groups:
@@ -571,9 +626,14 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                         "need one group per leaf (derive the config with "
                         "QuantConfig.with_per_layer_wire(params))")
             g_raw = _raw_grad_stats(grads, fmts, k_g, rank)
-            grads, wstats = collectives.dps_allreduce_mean_tree(
-                grads, fmts, data_axis, k_r, mode=rounding,
-                domain="wire_grads")
+            if wire_overlap:
+                grads, wstats = overlap_lib.bucketed_allreduce_mean_tree(
+                    grads, fmts, data_axis, k_r, mode=rounding,
+                    domain="wire_grads", plan=bplan)
+            else:
+                grads, wstats = collectives.dps_allreduce_mean_tree(
+                    grads, fmts, data_axis, k_r, mode=rounding,
+                    domain="wire_grads")
             wstats = collectives.psum_stats(wstats, data_axis)
             g_raw = collectives.psum_stats(g_raw, data_axis)
             loss = jax.lax.pmean(loss, data_axis)
@@ -815,4 +875,5 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     # introspection for drivers/tests: did the compressed paths engage?
     train_step.wire_sync_active = wire_sync
     train_step.zero_opt_active = zero_opt
+    train_step.wire_overlap_active = wire_overlap
     return train_step

@@ -12,6 +12,13 @@ values enter and leave the wire pipeline:
     kind="wire_stats"    QuantStats fields a wire leg measured
     kind="sr_bits"       the uniform-bits operand of a stochastic encode
     kind="stats_sink"    a stream a controller is about to consume
+    kind="wire_bucket"   a bucketed-wire landmark (repro.dist.overlap):
+                         stage="grad" where a bucket's gradient leaf
+                         materializes in the backward, stage="ready" on
+                         the raw leaf handed to the wire, stage="mean"
+                         on the decoded bucket mean — with bucket=b,
+                         n=<bucket count> (and leaf=g for per-leaf
+                         stages)
 
 Each tag carries the precision ``domain`` it belongs to (taken from the
 ambient :func:`domain` context when not given explicitly) plus arbitrary

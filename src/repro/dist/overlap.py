@@ -1,0 +1,353 @@
+"""Backward-overlapped bucketed wire: per-bucket compressed all-reduces.
+
+The monolithic tree collective (:func:`~repro.dist.collectives.
+dps_allreduce_mean_tree`) encodes every gradient leaf into ONE int8
+buffer and ships it through one ``all_to_all``/``all_gather`` pair — so
+the whole backward must finish before a single wire byte moves, and the
+encode → collective → decode chain sits on the critical path end to end.
+
+This module splits the gradient tree into DDP-style **buckets** and runs
+one compressed collective pair per bucket, in the order the backward
+materializes gradients (last layer first).  Each bucket's collective
+depends only on that bucket's leaves, so:
+
+* on backends with asynchronous collective dispatch, bucket k's wire
+  legs overlap bucket k+1's backward compute and decode — the classic
+  DDP overlap schedule (the per-bucket dependency chains are
+  independent; XLA's latency-hiding scheduler is free to interleave
+  them);
+* on any backend, each bucket's encode/reduce/decode runs over a small
+  working set instead of the whole flattened tree (cache locality), and
+  per-bucket :class:`~repro.dist.collectives.GroupLayout`\\ s resolve a
+  size-aware quantum per bucket, so grouped-layout padding shrinks from
+  "every leaf padded against the global layout" to "every leaf padded
+  against its bucket";
+* the int8 wire buffers are per-bucket jit temporaries: XLA double
+  buffers them (bucket k's buffer is dead — and its allocation reusable
+  — by the time bucket k+2 encodes), instead of holding one tree-sized
+  wire buffer live across the whole sync.
+
+Determinism and bit-exactness contract (pinned by tests/test_overlap.py):
+
+* ``BucketPlan`` is static Python — buckets are contiguous runs of leaf
+  indices, emitted in REVERSE flatten order (the backward's
+  materialization order), every leaf exactly once.
+* Leg-1 rounding keys are derived from the GLOBAL leaf index
+  (``fold_in(k1, g)``), exactly like the monolithic tree collective, so
+  dispatch-leg wire bytes and the returned per-leaf stats are
+  bit-identical to the monolithic path under both rounding modes.
+* Under ``mode="nearest"`` the decoded bucketed mean is **bit-exact**
+  vs the monolithic collective: encode/decode are elementwise
+  deterministic and the receive-leg sums run in identical rank order,
+  so chunk geometry cannot change a single ulp.  Under stochastic
+  rounding only the gather leg differs (its bits are element-indexed
+  relative to the layout, which is now per-bucket); each leg still
+  quantizes with < one grid step of unbiased error.
+
+Every bucket is wrapped in ``wire_bucket`` trace-time tags (see
+:mod:`repro.core.tagging`): ``stage="ready"`` on each raw leaf the
+moment the bucket is handed to the wire, ``stage="mean"`` on the decoded
+mean.  The precision-flow verifier's PF-BUCKET rules
+(:mod:`repro.analysis.flow`) prove from the jaxpr that every ready
+bucket is encoded exactly once and decoded before the optimizer consumes
+it.  ``bucket_ready_tap`` additionally plants a ``stage="grad"``
+landmark inside the *backward* itself (a custom-vjp identity on the
+parameters), marking where each bucket's gradients materialize — the
+readiness point the overlap schedule keys on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tagging
+from repro.core.fixed_point import (FixedPointFormat, QuantStats,
+                                    ROUND_STOCHASTIC)
+from repro.dist.collectives import (_aligned_allreduce_mean, _group_layout,
+                                    _resolve_backend, _resolve_quantum,
+                                    _validate_capacity, _wire_reduce,
+                                    group_layout, resolve_domain_format,
+                                    wire_decode, wire_encode)
+
+# Default bucket granularity, in elements.  Small enough that a LeNet-
+# scale tree still splits into a few buckets (so the schedule is
+# exercised at test scale), large enough that per-bucket collective
+# launch overhead stays negligible for multi-MiB layers — DDP's 25 MB
+# fp32 default is ~6.5M elements; revisit when a single transformer
+# block exceeds this by orders of magnitude.
+DEFAULT_BUCKET_ELEMS = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static assignment of gradient-tree leaves to wire buckets.
+
+    ``buckets[b]`` is the ascending, contiguous run of global leaf
+    indices (flatten order) that bucket ``b`` syncs; buckets are listed
+    in **ready order** — reverse flatten order, because the backward
+    materializes the last layer's gradients first.  All fields are
+    Python ints: the plan is part of the jit closure, never traced.
+    """
+
+    sizes: Tuple[int, ...]              # per-leaf element counts
+    buckets: Tuple[Tuple[int, ...], ...]  # ready-order leaf-index runs
+    target: int                         # requested elements per bucket
+
+    def __post_init__(self):
+        n = len(self.sizes)
+        if not self.buckets and n:
+            raise ValueError("empty bucket list for a non-empty tree")
+        flat = [g for b in self.buckets for g in b]
+        if sorted(flat) != list(range(n)):
+            raise ValueError(
+                f"buckets {self.buckets} are not a partition of the "
+                f"{n} leaves: every leaf must appear exactly once")
+        stop = n
+        for b, run in enumerate(self.buckets):
+            if not run:
+                raise ValueError(f"bucket {b} is empty")
+            if list(run) != list(range(run[0], run[0] + len(run))):
+                raise ValueError(
+                    f"bucket {b} = {run} is not a contiguous ascending "
+                    "run of leaf indices")
+            if run[-1] != stop - 1:
+                raise ValueError(
+                    f"buckets must cover leaves in reverse flatten order "
+                    f"(the backward's ready order): bucket {b} ends at "
+                    f"leaf {run[-1]}, expected {stop - 1}")
+            stop = run[0]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.sizes)
+
+    def bucket_of(self, leaf: int) -> int:
+        """The bucket index owning global leaf ``leaf``."""
+        for b, run in enumerate(self.buckets):
+            if run[0] <= leaf <= run[-1]:
+                return b
+        raise IndexError(f"leaf {leaf} not in any bucket")
+
+    def bucket_elems(self, b: int) -> int:
+        return sum(self.sizes[g] for g in self.buckets[b])
+
+
+def plan_buckets(sizes, target_elems: int = DEFAULT_BUCKET_ELEMS
+                 ) -> BucketPlan:
+    """Greedy reverse-order bucketing: walk leaves from the LAST flatten
+    index down (the order the backward produces gradients), open a new
+    bucket whenever the current one already holds ``target_elems``
+    elements.  Every bucket gets at least one leaf, so a single leaf
+    larger than the target becomes its own bucket rather than stalling
+    the schedule."""
+    sizes = tuple(int(s) for s in sizes)
+    if target_elems < 1:
+        raise ValueError(f"target_elems must be >= 1, got {target_elems}")
+    buckets, run, acc = [], [], 0
+    for g in range(len(sizes) - 1, -1, -1):
+        if run and acc + sizes[g] > target_elems:
+            buckets.append(tuple(reversed(run)))
+            run, acc = [], 0
+        run.append(g)
+        acc += sizes[g]
+    if run:
+        buckets.append(tuple(reversed(run)))
+    return BucketPlan(sizes=sizes, buckets=tuple(buckets),
+                      target=int(target_elems))
+
+
+# -------------------------------------------------- gradient-readiness taps
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def bucket_ready_tap(x, bucket: int, leaf: int, n_buckets: int):
+    """Identity on the forward; on the backward, tags the cotangent —
+    the leaf's gradient, at the exact point the backward materializes
+    it — with a ``wire_bucket`` ``stage="grad"`` landmark.  The tag is
+    the :data:`~repro.core.tagging.dps_tag` identity primitive: it
+    lowers to nothing, so the tap is free at runtime; it exists so the
+    readiness order is *visible in the jaxpr* (the per-bucket collective
+    chains hang off these points) and checkable by the flow verifier."""
+    return x
+
+
+def _tap_fwd(x, bucket, leaf, n_buckets):
+    return x, None
+
+
+def _tap_bwd(bucket, leaf, n_buckets, _, cot):
+    return (tagging.tag(cot, "wire_bucket", stage="grad", bucket=bucket,
+                        leaf=leaf, n=n_buckets),)
+
+
+bucket_ready_tap.defvjp(_tap_fwd, _tap_bwd)
+
+
+def tap_params(params, plan: BucketPlan):
+    """Wrap every param leaf in its bucket's readiness tap (identity
+    forward; gradient-materialization landmark backward).  Apply to the
+    parameters entering the loss so each grad leaf is born tagged."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    if len(leaves) != plan.n_leaves:
+        raise ValueError(
+            f"param tree has {len(leaves)} leaves but the bucket plan "
+            f"covers {plan.n_leaves}")
+    out = [bucket_ready_tap(l, plan.bucket_of(g), g, plan.n_buckets)
+           for g, l in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------- the bucketed collective
+
+def bucketed_allreduce_mean_tree(tree, formats, axis_name, key,
+                                 *, mode: str = ROUND_STOCHASTIC,
+                                 backend: str = "auto",
+                                 domain: str = "wire_grads",
+                                 quantum: Optional[int] = None,
+                                 plan: Optional[BucketPlan] = None,
+                                 target_elems: int = DEFAULT_BUCKET_ELEMS):
+    """Bucketed :func:`~repro.dist.collectives.dps_allreduce_mean_tree`:
+    one compressed ``all_to_all``/``all_gather`` pair **per bucket**, in
+    backward ready order, instead of one monolithic pair for the tree.
+
+    Same contract as the monolithic collective — ``(mean_tree, stats)``,
+    every leaf cast back to its own dtype, stats ``[G]``-stacked in leaf
+    order for grouped formats or merged in leaf order for a scalar
+    format, dispatch-leg stats covering exactly this rank's |tree|
+    elements — and bit-identical wire bytes / stats on the dispatch leg
+    (leg-1 rounding keys are global-leaf-indexed in both).  Under
+    ``mode="nearest"`` the decoded mean is bit-exact vs the monolithic
+    path; see the module docstring for the stochastic gather-leg caveat.
+
+    ``plan=None`` derives :func:`plan_buckets` over the leaf sizes with
+    ``target_elems``; a caller-supplied plan must match the tree's leaf
+    sizes (the qtrain readiness taps and this collective must agree on
+    the bucket → leaf mapping).
+    """
+    fmt = resolve_domain_format(formats, domain)
+    _validate_capacity(fmt)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return tree, QuantStats.zero(fmt.il.shape)
+    grouped = fmt.il.ndim != 0
+    if grouped and fmt.il.shape[0] != len(leaves):
+        raise ValueError(
+            f"[G]-shaped tree formats are one ⟨IL, FL⟩ per leaf: the table "
+            f"has {fmt.il.shape[0]} rows, the tree {len(leaves)} leaves")
+    sizes = tuple(l.size for l in leaves)
+    if plan is None:
+        plan = plan_buckets(sizes, target_elems)
+    elif plan.sizes != sizes:
+        raise ValueError(
+            f"bucket plan was built for leaf sizes {plan.sizes} but the "
+            f"tree has {sizes}; scheduler and collective must share one "
+            "plan")
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, idx))
+    # leg-2 bits are element-indexed (see _aligned_allreduce_mean), so the
+    # grouped gather leg needs a rank-invariant stream — same fold as the
+    # monolithic path, further folded per bucket.
+    k2s = jax.random.fold_in(key, 0x4C454732)                # "LEG2"
+    be = _resolve_backend(backend)
+    B = plan.n_buckets
+
+    out = [None] * len(leaves)
+    leaf_stats = [None] * len(leaves)
+
+    with tagging.domain(domain):
+        for b, run in enumerate(plan.buckets):
+            bleaves = [
+                tagging.tag(leaves[g], "wire_bucket", stage="ready",
+                            bucket=b, leaf=g, n=B)
+                for g in run]
+            bsizes = tuple(sizes[g] for g in run)
+            if grouped:
+                lo, hi = run[0], run[-1] + 1
+                fmt_b = FixedPointFormat(fmt.il[lo:hi], fmt.fl[lo:hi])
+                q = _resolve_quantum(quantum, sum(bsizes), len(run), be)
+                layout = group_layout(bsizes, n_chunks=n, quantum=q)
+
+                def encode_leg1(tg_all, mask, _run=run, _bl=bleaves,
+                                _fmt=fmt_b, _lay=layout):
+                    buf = jnp.zeros((_lay.total,), jnp.int8)
+                    for j, g in enumerate(_run):
+                        fmt_g = FixedPointFormat(_fmt.il[j], _fmt.fl[j])
+                        w, s = wire_encode(
+                            _bl[j].reshape(-1), fmt_g,
+                            key=jax.random.fold_in(k1, g), mode=mode,
+                            backend=be)
+                        buf = jax.lax.dynamic_update_slice(
+                            buf, w, (_lay.offsets[j],))
+                        leaf_stats[g] = s
+                    per = [leaf_stats[g] for g in _run]
+                    return buf, jax.tree.map(lambda *xs: jnp.stack(xs),
+                                             *per)
+
+                mean_al, _ = _aligned_allreduce_mean(
+                    None, fmt_b, layout, axis_name, k1,
+                    jax.random.fold_in(k2s, b), mode=mode, backend=be,
+                    encode_leg1=encode_leg1)
+                mean_al = tagging.tag(mean_al, "wire_bucket", stage="mean",
+                                      bucket=b, n=B)
+                for j, g in enumerate(run):
+                    sl = jax.lax.dynamic_slice(
+                        mean_al, (layout.offsets[j],), (sizes[g],))
+                    out[g] = sl.reshape(leaves[g].shape).astype(
+                        leaves[g].dtype)
+            else:
+                size_b = sum(bsizes)
+                chunk, _ = _group_layout(size_b, n)
+                offsets = tuple(int(o)
+                                for o in np.cumsum((0,) + bsizes[:-1]))
+                total = chunk * n
+                q = _resolve_quantum(quantum, size_b, 1, be)
+                buf = jnp.zeros((total,), jnp.int8)
+                for j, g in enumerate(run):
+                    w, s = wire_encode(bleaves[j].reshape(-1), fmt,
+                                       key=jax.random.fold_in(k1, g),
+                                       mode=mode, backend=be)
+                    buf = jax.lax.dynamic_update_slice(buf, w, (offsets[j],))
+                    leaf_stats[g] = s
+                payload = tagging.tag(buf.reshape(n, chunk), "wire_payload",
+                                      leg="dispatch")
+                wire = jax.lax.all_to_all(payload, axis_name, split_axis=0,
+                                          concat_axis=0, tiled=True)
+                part = _wire_reduce(wire, fmt, None, backend=be, quantum=q)
+                wire2, _ = wire_encode(part, fmt,
+                                       key=jax.random.fold_in(k2, b),
+                                       mode=mode, compute_stats=False,
+                                       backend=be)
+                wire2 = tagging.tag(wire2, "wire_payload", leg="gather")
+                full = jax.lax.all_gather(wire2, axis_name, axis=0,
+                                          tiled=True)
+                for j, g in enumerate(run):
+                    dec = wire_decode(
+                        jax.lax.dynamic_slice(full, (offsets[j],),
+                                              (sizes[g],)), fmt)
+                    dec = tagging.tag(dec, "wire_bucket", stage="mean",
+                                      bucket=b, n=B)
+                    out[g] = dec.reshape(leaves[g].shape).astype(
+                        leaves[g].dtype)
+
+        # reassemble stats in GLOBAL leaf order — the same stack/merge
+        # order as the monolithic tree collective, so the controller
+        # stream is bit-identical to the un-bucketed path.
+        if grouped:
+            stats = jax.tree.map(lambda *xs: jnp.stack(xs), *leaf_stats)
+        else:
+            stats = leaf_stats[0]
+            for s in leaf_stats[1:]:
+                stats = stats.merge(s)
+        stats = tagging.tag_tree(stats, "wire_stats")
+
+    return jax.tree_util.tree_unflatten(treedef, out), stats

@@ -49,6 +49,17 @@ HBM traffic accounting per leg (E = elements, n = ranks):
     naive decode-reduce        read nE, write 4nE, read 4nE + 4E chunk out
     fused dps_wire_reduce      read nE + write 4E·(1/n per rank)
 
+Bucketed wire (``repro.dist.overlap``): the backward-overlapped schedule
+runs the SAME two kernels once per bucket instead of once per tree, so
+the per-element traffic is unchanged — but the working set of each
+launch shrinks from the whole packed tree to one bucket (default 2^16
+elements = 256 KiB fp32 in + 64 KiB int8 out), which fits last-level
+cache on the CPU emulation path and one VMEM residency on TPU, and each
+bucket's group-aligned layout resolves its own size-aware quantum, so a
+bucket of small leaves no longer pays the whole tree's per-group
+padding.  ``ops.bucketed_wire_call_geometries`` declares the per-bucket
+launch pair statically.
+
 Two variants of the stochastic-rounding noise source:
 
   * ``use_onchip_prng=False`` (default; CPU-validatable): uniform bits enter

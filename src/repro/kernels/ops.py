@@ -117,6 +117,26 @@ def wire_reduce_call_geometry(n_ranks: int, chunk: int, n_groups: int,
         table_rows=n_groups, tile_group_len=tiles, quantum=quantum)
 
 
+def bucketed_wire_call_geometries(bucket_leaf_sizes, n_ranks: int,
+                                  quantum: int = DEFAULT_GROUP_QUANTUM
+                                  ) -> Tuple[KernelCallGeometry, ...]:
+    """Geometries of the kernel-backend launches ONE bucket of the
+    backward-overlapped wire (``repro.dist.overlap``) would run: the
+    grouped encode over the bucket's group-aligned buffer plus the fused
+    decode-reduce on its ``(n_ranks, chunk)`` payload.  Mirrors the
+    per-bucket ``group_layout`` arithmetic (each leaf padded to a quantum
+    multiple, the total rounded up to ``n_ranks`` quantum-sized chunks),
+    so a bucketed step's kernel schedule is checkable statically — G is
+    the bucket's leaf count, not the whole tree's."""
+    sizes = tuple(int(s) for s in bucket_leaf_sizes)
+    padded = sum(-(-s // quantum) * quantum for s in sizes)
+    chunk = (quantum * -(-padded // (n_ranks * quantum)) if padded
+             else quantum)
+    total = chunk * n_ranks
+    return (group_wire_call_geometry(total, len(sizes), quantum),
+            wire_reduce_call_geometry(n_ranks, chunk, len(sizes), quantum))
+
+
 def _fold_and_call(pallas_fn, x, fmt, *, key, bits, stochastic, onchip_prng,
                    block, interpret):
     """Shared any-rank → 2-D tiling adapter around a dps_quant kernel."""

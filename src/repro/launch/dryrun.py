@@ -58,11 +58,12 @@ def _mesh_and_rules(multi_pod: bool):
 
 
 def _qcfg(grad_allreduce_bits=None, zero_opt_shards=None,
-          wire_controller="flexpoint") -> qtrain.QuantConfig:
+          wire_controller="flexpoint", wire_overlap=False) -> qtrain.QuantConfig:
     return qtrain.QuantConfig(enabled=True, controller="paper",
                               grad_allreduce_bits=grad_allreduce_bits,
                               zero_opt_shards=zero_opt_shards,
-                              wire_controller=wire_controller)
+                              wire_controller=wire_controller,
+                              wire_overlap=wire_overlap)
 
 
 def _optimizer():
@@ -71,14 +72,16 @@ def _optimizer():
 
 def _train_qcfg(cfg, mesh, grad_allreduce_bits=None, zero_opt=False,
                 wire_controller="flexpoint",
-                wire_groups="global") -> qtrain.QuantConfig:
+                wire_groups="global",
+                wire_overlap=False) -> qtrain.QuantConfig:
     """The QuantConfig a train cell compiles under — single source for the
     compile itself and the per-cell ``precision_domains`` report."""
     zero_shards = None
     if zero_opt:
         zero_shards = int(dict(zip(mesh.axis_names,
                                    mesh.devices.shape)).get("data", 1))
-    qcfg = _qcfg(grad_allreduce_bits, zero_shards, wire_controller)
+    qcfg = _qcfg(grad_allreduce_bits, zero_shards, wire_controller,
+                 wire_overlap)
     if wire_groups == "per-layer" and zero_shards is None:
         qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
     return qcfg
@@ -139,9 +142,10 @@ def _audit_wire(cfg: ModelConfig, qcfg: qtrain.QuantConfig, mesh,
 
 def _compile_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
                    grad_allreduce_bits=None, zero_opt=False,
-                   wire_controller="flexpoint", wire_groups="global"):
+                   wire_controller="flexpoint", wire_groups="global",
+                   wire_overlap=False):
     qcfg = _train_qcfg(cfg, mesh, grad_allreduce_bits, zero_opt,
-                       wire_controller, wire_groups)
+                       wire_controller, wire_groups, wire_overlap)
     opt = _optimizer()
     # On the production meshes (model axis > 1) the compressed all-reduce
     # and ZeRO-1 fall back (with a warning) to the implicit psum /
@@ -278,7 +282,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              grad_allreduce_bits: int = None,
              zero_opt: bool = False,
              wire_controller: str = "flexpoint",
-             wire_groups: str = "global") -> Dict[str, Any]:
+             wire_groups: str = "global",
+             wire_overlap: bool = False) -> Dict[str, Any]:
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
@@ -290,7 +295,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compile_fn = functools.partial(
             _compile_train, grad_allreduce_bits=grad_allreduce_bits,
             zero_opt=zero_opt, wire_controller=wire_controller,
-            wire_groups=wire_groups)
+            wire_groups=wire_groups, wire_overlap=wire_overlap)
 
     t0 = time.time()
     lowered, compiled = compile_fn(cfg, shape, mesh, rules)
@@ -305,7 +310,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         # per-layer wire domains report their group count = leaf count);
         # _train_qcfg is the same derivation _compile_train compiled with
         qcfg = _train_qcfg(cfg, mesh, grad_allreduce_bits, zero_opt,
-                           wire_controller, wire_groups)
+                           wire_controller, wire_groups, wire_overlap)
         plan = qcfg.plan()
         engaged = _engaged_domains(cfg, qcfg, mesh)
         stats["precision_domains"] = {
@@ -315,6 +320,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             for n, s in plan.domains}
         stats["wire_audit"] = _audit_wire(cfg, qcfg, mesh,
                                           compiled.as_text(), engaged)
+        bplan = specs_lib.wire_bucket_plan(cfg, qcfg)
+        if bplan is not None:
+            stats["wire_buckets"] = {
+                "n_buckets": bplan.n_buckets,
+                "n_leaves": bplan.n_leaves,
+                "target_elems": bplan.target,
+                "bucket_elems": [bplan.bucket_elems(b)
+                                 for b in range(bplan.n_buckets)],
+                "engaged": "wire_grads" in engaged,
+            }
 
     if probes:
         variants, rec = _probe_variants(cfg)
@@ -357,6 +372,12 @@ def main():
                     help="controller kind for the wire precision domains "
                          "(wire_grads/wire_params) of compressed train "
                          "cells")
+    ap.add_argument("--wire-overlap", choices=("on", "off"), default="off",
+                    help="compile compressed train cells with the "
+                         "backward-overlapped bucketed wire "
+                         "(repro.dist.overlap) instead of the monolithic "
+                         "collective; same engagement rule as "
+                         "--grad-allreduce-bits")
     ap.add_argument("--wire-groups", choices=("per-layer", "global"),
                     default="global",
                     help="wire_grads granularity for compressed train "
@@ -396,7 +417,8 @@ def main():
                              grad_allreduce_bits=args.grad_allreduce_bits,
                              zero_opt=args.zero_opt,
                              wire_controller=args.wire_controller,
-                             wire_groups=args.wire_groups)
+                             wire_groups=args.wire_groups,
+                             wire_overlap=args.wire_overlap == "on")
             with open(out_path, "w") as f:
                 json.dump(stats, f, indent=1)
             print(f"  ok: flops={stats['flops']:.3e} "

@@ -204,6 +204,22 @@ def per_layer_wire_qcfg(cfg: ModelConfig,
         abstract_params(registry(cfg.family).model_defs(cfg)))
 
 
+def wire_bucket_plan(cfg: ModelConfig, qcfg: qtrain.QuantConfig):
+    """The :class:`repro.dist.overlap.BucketPlan` a ``wire_overlap`` train
+    step would bucket this arch's gradients under, derived from the
+    abstract param tree (no tensor exists yet) — the same derivation
+    :func:`repro.core.qtrain.make_train_step` performs, so launch code and
+    the dry-run report the geometry the step actually runs.  ``None``
+    unless the overlapped wire is configured."""
+    if not (qcfg.wire_overlap and qcfg.grad_allreduce_bits is not None):
+        return None
+    from repro.dist import overlap as overlap_lib
+    aparams = abstract_params(registry(cfg.family).model_defs(cfg))
+    sizes = tuple(l.size for l in jax.tree_util.tree_leaves(aparams))
+    return overlap_lib.plan_buckets(
+        sizes, qcfg.wire_bucket_elems or overlap_lib.DEFAULT_BUCKET_ELEMS)
+
+
 def build_train_step(cfg: ModelConfig, qcfg: qtrain.QuantConfig, optimizer,
                      accum_steps: Optional[int] = None, mesh: Optional[Mesh] = None):
     """Train step for one arch.  ``mesh`` is only needed when

@@ -97,6 +97,22 @@ def main(argv=None):
                          "flat layout erases leaf boundaries).  Resume "
                          "with the same choice — the wire_grads ckpt "
                          "state is [G]-shaped under per-layer")
+    ap.add_argument("--wire-overlap", choices=("on", "off"),
+                    default=os.environ.get("REPRO_WIRE_OVERLAP") or "off",
+                    help="backward-overlapped bucketed wire: split the "
+                         "gradient tree into buckets and run one "
+                         "compressed collective pair per bucket in "
+                         "backward ready order (repro.dist.overlap), "
+                         "instead of one monolithic pair after the full "
+                         "backward.  Needs --grad-allreduce-bits; "
+                         "mutually exclusive with --zero-opt")
+    ap.add_argument("--wire-auto-slack", action="store_true",
+                    default=bool(os.environ.get("REPRO_WIRE_AUTO_SLACK")),
+                    help="derive each wire domain's radix headroom from "
+                         "its measured abs_sum/nonzero tail quantile "
+                         "(dps.wire_hyper(auto_slack=True)) instead of "
+                         "the hand-tuned per-tensor-class slack "
+                         "constants")
     ap.add_argument("--zero-opt", action="store_true",
                     help="ZeRO-1: shard the optimizer state across the "
                          "data axis (flat padded layout, 1/n state bytes "
@@ -123,7 +139,9 @@ def main(argv=None):
                               if args.controller != "off" else "paper",
                               grad_allreduce_bits=args.grad_allreduce_bits,
                               zero_opt_shards=zero_shards,
-                              wire_controller=args.wire_controller)
+                              wire_controller=args.wire_controller,
+                              wire_overlap=args.wire_overlap == "on",
+                              wire_auto_slack=args.wire_auto_slack)
     if args.wire_groups == "per-layer" and zero_shards is None:
         # one wire ⟨IL, FL⟩ per gradient leaf; the group count derives
         # from the abstract param tree so the plan (and with it the DPS
@@ -174,19 +192,36 @@ def main(argv=None):
             (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
 
     history = []
+    pending = []   # device-side metrics, fetched in batch at the log points
+
+    def _drain():
+        """One host sync for the whole pending window.  The step loop
+        never blocks on metrics per step (the fetch/format transfer used
+        to dominate small-step walltime); everything since the last log
+        point converts to floats here in a single transfer burst."""
+        for m in pending:
+            history.append({k: float(v) for k, v in m.items()})
+        pending.clear()
+
     try:
         for step in range(start, args.steps):
             batch = {**data.batch(step), **extras}
             t0 = time.time()
             state, metrics = jitted(state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
+            if args.step_timeout:
+                # the straggler watchdog needs the REAL step walltime, so
+                # it opts back into the per-step device sync the deferred
+                # metrics path exists to avoid
+                jax.block_until_ready(metrics)
             dt = time.time() - t0
             if args.step_timeout and dt > args.step_timeout and step > start:
                 raise TimeoutError(
                     f"step {step} took {dt:.1f}s > {args.step_timeout}s "
                     "(straggler watchdog)")
-            history.append(metrics)
+            pending.append(metrics)
             if step % args.log_every == 0 or step == args.steps - 1:
+                _drain()
+                metrics = history[-1]
                 # wire precision domains log alongside the compute triple;
                 # per-layer (grouped) wire domains show mean(min-max) so
                 # the per-group spread is visible in the train log
@@ -229,6 +264,7 @@ def main(argv=None):
     if ckpt:
         ckpt.save(args.steps, state, meta=data.state(args.steps))
         ckpt.wait()
+    _drain()
     out = {"final_loss": history[-1]["loss"] if history else None,
            "history_tail": history[-5:]}
     print(json.dumps(out, indent=1))

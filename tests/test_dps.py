@@ -144,6 +144,37 @@ def test_flexpoint_tracks_max():
     assert int(s.il) < 9
 
 
+def test_flexpoint_auto_slack_places_radix_from_measured_bulk():
+    from repro.core.dps import wire_hyper
+
+    def st(bulk, mx, nz=1000.0):
+        return QuantStats(
+            count=jnp.float32(1000), nonzero=jnp.float32(nz),
+            overflow=jnp.float32(0), abs_err_sum=jnp.float32(0),
+            rel_err_sum=jnp.float32(0), abs_sum=jnp.float32(bulk * nz),
+            max_abs=jnp.float32(mx))
+
+    c_s = make_controller("flexpoint", wire_hyper(8, il_init=6, slack=0.0))
+    c_a = make_controller("flexpoint", wire_hyper(8, il_init=6, slack=0.0,
+                                                  auto_slack=True))
+    # heavy tail (bulk 0.01, max 100): the static slack covers the max;
+    # the measured placement covers the r_max tail quantile of the bulk
+    # (0.01 · ln(1e4) ≈ 0.09), spending the 8-bit grid on the signal
+    s_s = c_s.update(c_s.init(), st(0.01, 100.0))
+    s_a = c_a.update(c_a.init(), st(0.01, 100.0))
+    assert int(s_a.il) < int(s_s.il)
+    # concentrated tensor (bulk ~ max): the tail quantile overshoots the
+    # max, so the placement caps at the max component — never wider
+    s_a2 = c_a.update(c_a.init(), st(50.0, 100.0))
+    s_s2 = c_s.update(c_s.init(), st(50.0, 100.0))
+    assert int(s_a2.il) <= int(s_s2.il)
+    # an empty stream (wire not engaged this step) falls back to the
+    # static-slack path bit-for-bit
+    s_a3 = c_a.update(c_a.init(), st(0.0, 0.0, nz=0.0))
+    s_s3 = c_s.update(c_s.init(), st(0.0, 0.0, nz=0.0))
+    assert (int(s_a3.il), int(s_a3.fl)) == (int(s_s3.il), int(s_s3.fl))
+
+
 def test_all_controllers_jittable_and_stable_shape():
     for name in CONTROLLERS:
         c = make_controller(name)
