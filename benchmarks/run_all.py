@@ -65,6 +65,18 @@ def collectives_summary(res: dict) -> dict:
         "overlap_improvement_over_serial":
             res.get("overlap", {}).get("overlap_improvement_over_serial"),
         "overlap_n_buckets": res.get("overlap", {}).get("n_buckets"),
+        "zero_groupaligned": {
+            "wire_ratio_int8_over_fp32":
+                res.get("zero_groupaligned", {})
+                   .get("wire_ratio_int8_over_fp32"),
+            "padded_elems": res.get("zero_groupaligned", {})
+                               .get("padded_elems"),
+            "n_buckets": res.get("zero_groupaligned", {}).get("n_buckets"),
+            "ms_per_step": {
+                k: v.get("ms_per_step")
+                for k, v in res.get("zero_groupaligned", {})
+                               .get("per_variant", {}).items()},
+        },
         "metrics_fetch": {
             k: res.get("metrics_fetch", {}).get(k)
             for k in ("synced_ms_per_step", "deferred_ms_per_step",

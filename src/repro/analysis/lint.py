@@ -22,20 +22,28 @@ shrunk cell proves the same invariants at a fraction of the compile cost.
 
 The mode grid:
 
-* ``baseline``  — no wire: flow rules must pass vacuously-clean.
-* ``tree``      — global-format compressed gradient all-reduce
-                  (``grad_allreduce_bits=8``, one tree collective pair).
-* ``per-layer`` — one wire ⟨IL, FL⟩ per param leaf (grouped tree +
-                  group-aligned kernel schedule).
-* ``zero``      — ZeRO-1: int8 reduce-scatter + parameter all-gather.
+* ``baseline``       — no wire: flow rules must pass vacuously-clean.
+* ``tree``           — global-format compressed gradient all-reduce
+                       (``grad_allreduce_bits=8``, one tree collective
+                       pair).
+* ``per-layer``      — one wire ⟨IL, FL⟩ per param leaf (grouped tree +
+                       group-aligned kernel schedule).
+* ``zero``           — ZeRO-1: int8 reduce-scatter + parameter
+                       all-gather over the plain flat layout.
+* ``zero-per-layer`` — ZeRO-1 + per-layer wire formats: both sharded
+                       halves run the grouped codec over the
+                       group-aligned flat layout.
+* ``zero-overlap``   — ZeRO-1 + the backward-overlapped bucketed wire:
+                       one int8 reduce-scatter per bucket in backward
+                       ready order over the bucketed aligned layout.
 
 ``--wire-overlap on`` rebuilds the ``tree`` and ``per-layer`` cells with
 the backward-overlapped bucketed wire (:mod:`repro.dist.overlap`) — the
 flow pass then additionally proves PF-BUCKET-ENCODE / PF-BUCKET-DECODE
 (every bucket encoded exactly once and decoded before the optimizer
-consumes it).  ``baseline`` is unaffected and ``zero`` is skipped under
-overlap (the flat ZeRO layout erases the leaf boundaries buckets need —
-the combination is rejected by ``qtrain.make_train_step``).
+consumes it); the same rules are proven on the sharded reduce-scatter
+half by the ``zero-overlap`` cell, which carries the overlap intrinsically.
+``baseline`` is unaffected.
 """
 
 from __future__ import annotations
@@ -54,7 +62,8 @@ from repro.analysis.report import Report
 from repro.core import qtrain
 from repro.dist import collectives
 
-MODES = ("baseline", "tree", "per-layer", "zero")
+MODES = ("baseline", "tree", "per-layer", "zero", "zero-per-layer",
+         "zero-overlap")
 
 
 def _data_mesh():
@@ -69,9 +78,10 @@ def _mode_qcfg(mode: str, n_ranks: int, wire_controller: str,
     if mode in ("tree", "per-layer"):
         kw["grad_allreduce_bits"] = 8
         kw["wire_overlap"] = wire_overlap
-    elif mode == "zero":
+    elif mode in ("zero", "zero-per-layer", "zero-overlap"):
         kw["grad_allreduce_bits"] = 8
         kw["zero_opt_shards"] = n_ranks
+        kw["wire_overlap"] = mode == "zero-overlap"
     return qtrain.QuantConfig(**kw)
 
 
@@ -80,17 +90,23 @@ def _claims(qcfg: qtrain.QuantConfig, mesh, params,
     engaged: List[str] = []
     two_leg = True
     declared_f32 = 0.0
+    n_wire = n_params
     if qtrain.wire_sync_engaged(qcfg, mesh):
         engaged.append("wire_grads")
     if qtrain.zero_opt_engaged(qcfg, mesh):
         engaged.append("wire_grads")
+        # both sharded legs ship the flat layout's padded element count —
+        # under the group-aligned partitioner that exceeds the raw param
+        # count (every leaf slot is padded to the wire quantum)
+        part = qtrain.zero_partitioner(qcfg, params, qcfg.zero_opt_shards)
+        n_wire = part.padded_size
         if qtrain.wire_params_engaged(qcfg, params, mesh):
             engaged.append("wire_params")
         else:
             # the policy excludes leaves: the param all-gather falls back
             # to fp32 BY DESIGN — one declared fp32 gather, one s8 leg
             two_leg = False
-            declared_f32 = 4.0 * n_params * 1.25
+            declared_f32 = 4.0 * part.padded_size * 1.25
     # grouped (zero-f32-concat) is NOT claimed on the full step: model
     # activations legitimately concatenate in fp32.  The strict concat
     # claim runs on the isolated wire pipeline (_wire_pipeline_report).
@@ -99,7 +115,7 @@ def _claims(qcfg: qtrain.QuantConfig, mesh, params,
         two_leg=two_leg,
         grouped=False,
         f32_declared_bytes=declared_f32,
-        n_wire_elems=n_params if engaged else None)
+        n_wire_elems=n_wire if engaged else None)
 
 
 def _kernel_reports(mode: str, leaf_sizes, n_ranks: int,
@@ -108,7 +124,7 @@ def _kernel_reports(mode: str, leaf_sizes, n_ranks: int,
     kernel backend (the TPU tiling is checkable anywhere)."""
     from repro.kernels import ops
     total = sum(leaf_sizes)
-    if mode == "per-layer":
+    if "per-layer" in mode:
         sizes, groups = tuple(leaf_sizes), len(leaf_sizes)
     else:
         sizes, groups = (total,), 1
@@ -174,11 +190,13 @@ def _lenet_cell(mode: str, mesh, wire_controller: str,
     n = mesh.devices.size
     qcfg = _mode_qcfg(mode, n, wire_controller, wire_overlap)
     params = lenet.init(jax.random.key(0))
-    if mode == "per-layer":
+    if "per-layer" in mode:
         qcfg = qcfg.with_per_layer_wire(params)
     opt = make_optimizer(SGDConfig())
-    opt_state = (qtrain.zero_opt_state(opt, params, n) if mode == "zero"
-                 else opt.init(params))
+    # qcfg rides along so ZeRO cells init whichever flat layout the step
+    # will use (group-aligned under per-layer wire / overlap)
+    opt_state = (qtrain.zero_opt_state(opt, params, n, qcfg=qcfg)
+                 if mode.startswith("zero") else opt.init(params))
     state = qtrain.TrainState.create(params, opt_state, qcfg,
                                      jax.random.key(1))
     batch = {"images": jnp.zeros((2 * n, 28, 28, 1), jnp.float32),
@@ -203,7 +221,7 @@ def _arch_cell(arch: str, mode: str, mesh, wire_controller: str,
     n = mesh.devices.size
     shape = ShapeConfig("lint_train", "train", seq=seq, batch=n)
     qcfg = _mode_qcfg(mode, n, wire_controller, wire_overlap)
-    if mode == "per-layer":
+    if "per-layer" in mode:
         qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
     opt = make_optimizer(SGDConfig())
     step = specs_lib.build_train_step(cfg, qcfg, opt, mesh=mesh)
@@ -253,7 +271,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="config to lint: 'lenet' (default) or an arch "
                          "name from repro.configs.base (repeatable)")
     ap.add_argument("--zero-opt", action="store_true",
-                    help="lint only the ZeRO-1 cell")
+                    help="lint only the ZeRO-1 cell (composes with "
+                         "--wire-groups per-layer / --wire-overlap on to "
+                         "select the group-aligned cells)")
     ap.add_argument("--wire-groups", choices=("global", "per-layer"),
                     default=None,
                     help="lint only the tree (global) or per-layer cell")
@@ -262,15 +282,20 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--wire-controller", default="flexpoint")
     ap.add_argument("--wire-overlap", choices=("on", "off"), default="off",
                     help="rebuild the tree/per-layer cells with the "
-                         "backward-overlapped bucketed wire; the zero "
-                         "cell is skipped (buckets need leaf boundaries "
-                         "the flat ZeRO layout erases)")
+                         "backward-overlapped bucketed wire (the "
+                         "zero-overlap cell carries it intrinsically; "
+                         "combined with --zero-opt this selects that cell)")
     ap.add_argument("--seq", type=int, default=128,
                     help="sequence length for arch train cells")
     args = ap.parse_args(argv)
 
     if args.zero_opt:
-        modes = ["zero"]
+        if args.wire_groups == "per-layer":
+            modes = ["zero-per-layer"]
+        elif args.wire_overlap == "on":
+            modes = ["zero-overlap"]
+        else:
+            modes = ["zero"]
     elif args.wire_groups is not None:
         modes = ["per-layer" if args.wire_groups == "per-layer" else "tree"]
     elif args.modes:
@@ -281,8 +306,6 @@ def main(argv: Optional[List[str]] = None) -> int:
         if m not in MODES:
             ap.error(f"unknown mode {m!r} (choose from {MODES})")
     wire_overlap = args.wire_overlap == "on"
-    if wire_overlap and "zero" in modes and not args.zero_opt:
-        modes = [m for m in modes if m != "zero"]
     configs = args.config or ["lenet"]
 
     mesh = _data_mesh()

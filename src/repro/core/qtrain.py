@@ -44,6 +44,7 @@ Everything here is shape-polymorphic and mesh-agnostic: stats are plain
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 from typing import Any, Dict, Optional
 
@@ -95,9 +96,13 @@ class QuantConfig:
     # [G] wire stats and handed to the group-aligned collectives as the
     # [G, 2] kernel format table.  G must equal the grad tree's leaf count
     # when the compressed sync engages (``make_train_step`` checks);
-    # ``with_per_layer_wire`` derives it from a params tree.  Per-layer
-    # groups need the tree schedule, so they are mutually exclusive with
-    # ``zero_opt_shards`` (the ZeRO flat layout erases leaf boundaries).
+    # ``with_per_layer_wire`` derives it from a params tree.  Under
+    # ``zero_opt_shards`` the flat optimizer layout switches to the
+    # group-aligned :class:`~repro.dist.sharding.GroupAlignedPartitioner`
+    # (leaf slots padded to the wire quantum), so per-leaf boundaries —
+    # and with them the per-leaf ⟨IL, FL⟩ — survive the flatten and both
+    # sharded wire legs run the grouped codec.  ``wire_params`` mirrors
+    # the group count: one params-leg format per leaf too.
     wire_grads_groups: int = 0
     # Full custom registry: overrides the standard five-domain plan built
     # from the fields above.
@@ -122,16 +127,22 @@ class QuantConfig:
     # materialization point in the backward jaxpr; the precision-flow
     # verifier's PF-BUCKET rules prove every bucket is encoded exactly
     # once and decoded before the optimizer consumes it.  No effect
-    # without ``grad_allreduce_bits``; mutually exclusive with
-    # ``zero_opt_shards`` (the flat ZeRO layout erases the leaf
-    # boundaries buckets are made of).
+    # without ``grad_allreduce_bits``.  Composes with
+    # ``zero_opt_shards``: the group-aligned ZeRO layout materializes
+    # each bucket as a contiguous run of aligned leaf slots, so the
+    # sharded path runs one int8 reduce-scatter per bucket in the same
+    # backward-ready order (the all-gather return leg stays monolithic —
+    # it has no readiness structure to exploit).
     wire_overlap: bool = False
     wire_bucket_elems: int = 0          # 0 -> overlap.DEFAULT_BUCKET_ELEMS
     # ZeRO-1: shard the optimizer state across the data axis into this many
     # slices (must equal the mesh's data-axis size when it engages).  The
-    # param tree is flattened into the padded 1-D ZeroPartitioner layout so
-    # non-divisible leaves still shard; each rank steps its slice locally
-    # and the updated parameter shards are all-gathered back.  Combined
+    # param tree is flattened into a padded 1-D layout so non-divisible
+    # leaves still shard — the plain ZeroPartitioner normally, or the
+    # group-aligned :class:`~repro.dist.sharding.GroupAlignedPartitioner`
+    # when per-layer wire formats or ``wire_overlap`` engage (see
+    # :func:`zero_partitioner`); each rank steps its slice locally and
+    # the updated parameter shards are all-gathered back.  Combined
     # with ``grad_allreduce_bits``, both collective legs (reduce-scatter of
     # grads, all-gather of params) ride the int8 wire.  Optimizer state is
     # created with :func:`zero_opt_state` instead of ``optimizer.init``.
@@ -173,12 +184,15 @@ class QuantConfig:
                                       auto_slack=self.wire_auto_slack),
                 groups=self.wire_grads_groups, wire=True)))
             if self.zero_opt_shards is not None:
+                # wire_params mirrors the grads domain's granularity: the
+                # group-aligned layout keeps leaf boundaries, so per-layer
+                # wire runs one params-leg ⟨IL, FL⟩ per leaf as well.
                 domains.append(("wire_params", DomainSpec(
                     self.wire_controller,
                     self.hyper_wire_params
                     or dps_lib.wire_hyper(wb, il_init=2, slack=1.0,
                                           auto_slack=self.wire_auto_slack),
-                    wire=True)))
+                    groups=self.wire_grads_groups, wire=True)))
         return PrecisionPlan(tuple(domains))
 
     def with_per_layer_wire(self, params) -> "QuantConfig":
@@ -346,14 +360,17 @@ def zero_opt_engaged(qcfg: QuantConfig, mesh, data_axis: str = "data") -> bool:
 
     Mirrors :func:`make_train_step`'s own checks so launch code and specs
     can size/shard the optimizer state consistently with the step that will
-    actually run: requires ``zero_opt_shards`` set, a mesh whose
-    ``data_axis`` is larger than 1, and a pure data-parallel mesh (every
-    other axis of size 1 — the partial-manual shard_map constraint).
+    actually run: requires ``zero_opt_shards`` set AND equal to the mesh's
+    ``data_axis`` size (larger than 1), and a pure data-parallel mesh
+    (every other axis of size 1 — the partial-manual shard_map
+    constraint).  Any mismatch means the step warns and falls back to the
+    replicated optimizer state, so this returns False for it too.
     """
     if qcfg.zero_opt_shards is None:
         return False
     sizes = _mesh_axis_sizes(mesh)
-    if int(sizes.get(data_axis, 1)) <= 1:
+    n_data = int(sizes.get(data_axis, 1))
+    if n_data <= 1 or qcfg.zero_opt_shards != n_data:
         return False
     return not any(s > 1 for a, s in sizes.items() if a != data_axis)
 
@@ -397,16 +414,64 @@ def wire_params_engaged(qcfg: QuantConfig, params, mesh,
                jax.tree_util.tree_flatten_with_path(params)[0])
 
 
-def zero_opt_state(optimizer, params, n_shards: int):
+def zero_partitioner(qcfg: QuantConfig, params, n_shards: int):
+    """The flat ZeRO-1 layout this config shards its optimizer state over.
+
+    The plain :class:`~repro.dist.sharding.ZeroPartitioner` (minimal
+    divisibility padding, leaf boundaries erased) unless the compressed
+    sync runs a layout that must keep leaf boundaries — per-layer
+    ``wire_grads`` groups or the overlapped bucketed wire — in which case
+    the :class:`~repro.dist.sharding.GroupAlignedPartitioner` pads every
+    leaf slot to the wire quantum so rank chunks and collective
+    boundaries never straddle a leaf and per-leaf ⟨IL, FL⟩ survive the
+    flatten.  With ``wire_overlap`` the aligned layout is additionally
+    bucketed by :func:`repro.dist.overlap.plan_buckets` (same plan as the
+    readiness taps) so each bucket is a contiguous aligned slot run.
+
+    ``params`` may be concrete or abstract.  The decision is mesh-free on
+    purpose: it must agree between :func:`zero_opt_state` (called at init,
+    often before the mesh exists) and the step body, and every input to it
+    is static config.
+    """
+    from repro.dist.sharding import (  # deferred: dist imports core
+        GroupAlignedPartitioner, ZeroPartitioner)
+    plan = qcfg.plan()
+    groups = plan.spec("wire_grads").groups if "wire_grads" in plan else 0
+    aligned = (qcfg.grad_allreduce_bits is not None
+               and (groups > 0 or qcfg.wire_overlap))
+    if not aligned:
+        return ZeroPartitioner.create(params, n_shards)
+    buckets = None
+    if qcfg.wire_overlap:
+        from repro.dist import overlap as overlap_lib
+        sizes = tuple(int(math.prod(tuple(l.shape))) or 1
+                      for l in jax.tree_util.tree_leaves(params))
+        bplan = overlap_lib.plan_buckets(
+            sizes, qcfg.wire_bucket_elems or overlap_lib.DEFAULT_BUCKET_ELEMS)
+        # BucketPlan lists buckets in backward-ready (reverse flatten)
+        # order; the partitioner wants flatten order.
+        buckets = tuple(sorted(bplan.buckets, key=lambda r: r[0]))
+    return GroupAlignedPartitioner.create(params, n_shards, buckets=buckets)
+
+
+def zero_opt_state(optimizer, params, n_shards: int,
+                   qcfg: Optional[QuantConfig] = None):
     """ZeRO-1 optimizer state: one flat padded vector per state tensor.
 
-    Returns ``optimizer.init_shard`` over the :class:`ZeroPartitioner`
-    flat layout — a GLOBAL ``[padded_size]`` array per state leaf, meant to
-    be placed with ``NamedSharding(mesh, P("data"))`` so each rank holds
-    ``1/n_shards`` of it (see ``launch.specs.train_state_shardings``).
+    Returns ``optimizer.init_shard`` over the flat ZeRO layout — a GLOBAL
+    ``[padded_size]`` array per state leaf, meant to be placed with
+    ``NamedSharding(mesh, P("data"))`` so each rank holds ``1/n_shards``
+    of it (see ``launch.specs.train_state_shardings``).
+
+    Pass the run's ``qcfg`` so the layout matches the step that will
+    consume the state: per-layer wire formats and the overlapped wire run
+    the group-aligned layout, whose padded size differs from the plain
+    ZeroPartitioner's (see :func:`zero_partitioner`).  ``qcfg=None`` keeps
+    the legacy plain layout.
     """
     from repro.dist.sharding import ZeroPartitioner  # deferred: dist imports core
-    part = ZeroPartitioner.create(params, n_shards)
+    part = (zero_partitioner(qcfg, params, n_shards) if qcfg is not None
+            else ZeroPartitioner.create(params, n_shards))
     flat = jax.eval_shape(lambda t: part.flatten(t), params)
     return optimizer.init_shard(flat)
 
@@ -457,6 +522,21 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     ``wire_grads`` domain and the params-leg wire stats feed the
     ``wire_params`` domain.  Same pure-data-parallel constraint and
     single-device degradation as above.
+
+    Per-layer wire formats (``wire_grads_groups > 0``) and the overlapped
+    bucketed wire (``wire_overlap``) COMPOSE with ZeRO-1: the flat layout
+    switches to the group-aligned partitioner (:func:`zero_partitioner`),
+    whose aligned leaf slots keep per-leaf ⟨IL, FL⟩ through the flatten,
+    and the fused body becomes readiness-tapped fwd/bwd → grouped int8
+    ``zero_bucketed_reduce_scatter`` (one collective per bucket, backward-
+    ready order) → local optimizer over aligned slices → grouped int8
+    ``zero_allgather_params``.  At ``bits=None``-equivalent settings and
+    under nearest rounding the decoded updates are bit-exact vs the
+    replicated per-layer step (and under stochastic rounding too: every
+    wire rounding-bit draw is keyed by global leaf index, see
+    ``repro.dist.overlap``).  Mismatched ``zero_opt_shards`` vs the mesh
+    warns and falls back to the replicated state — the same policy as
+    every other engagement mismatch; only impossible configs raise.
     """
     plan = qcfg.plan()
     rounding = getattr(plan.controller("weights"), "rounding", qcfg.rounding)
@@ -482,18 +562,27 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             "back to the implicit fp32 gradient all-reduce.")
         wire_sync = False
 
+    # Engagement policy (uniform): a config/mesh MISMATCH — the requested
+    # path simply cannot engage on this mesh — warns and falls back to the
+    # equivalent uncompressed/replicated step; an IMPOSSIBLE config — one
+    # no mesh could satisfy — raises.  The chosen paths are surfaced as
+    # ``train_step.{wire_sync,zero_opt,wire_overlap,zero_groupaligned}_
+    # active`` attributes.
     zero_opt = qcfg.zero_opt_shards is not None and n_data > 1
-    if zero_opt and not zero_opt_engaged(qcfg, mesh, data_axis):
+    if zero_opt and any(s > 1 for a, s in axis_sizes.items()
+                        if a != data_axis):
         warnings.warn(
             "zero_opt_shards needs a pure data-parallel mesh (all "
             f"non-'{data_axis}' axes of size 1); got {axis_sizes}. Falling "
             "back to the replicated optimizer state.")
         zero_opt = False
     if zero_opt and qcfg.zero_opt_shards != n_data:
-        raise ValueError(
-            f"zero_opt_shards={qcfg.zero_opt_shards} must equal the mesh's "
-            f"'{data_axis}' axis size ({n_data}): the optimizer state shards "
-            "over that axis")
+        warnings.warn(
+            f"zero_opt_shards={qcfg.zero_opt_shards} does not match the "
+            f"mesh's '{data_axis}' axis size ({n_data}); the optimizer "
+            "state shards over that axis. Falling back to the replicated "
+            "optimizer state.")
+        zero_opt = False
     if zero_opt and not hasattr(optimizer, "update_shard"):
         raise TypeError(f"{type(optimizer).__name__} has no shard-local "
                         "update_shard/init_shard interface; ZeRO-1 needs it")
@@ -503,33 +592,23 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
             f"the precision plan ({plan.names}) declares no 'wire_grads' "
             "domain to govern the wire format")
     wire_groups = plan.spec("wire_grads").groups if "wire_grads" in plan else 0
-    if wire_groups and zero_opt:
-        raise ValueError(
-            f"per-layer wire formats (wire_grads groups={wire_groups}) need "
-            "the tree all-reduce schedule, but zero_opt_shards flattens the "
-            "tree into the ZeroPartitioner layout, which erases leaf "
-            "boundaries — use a global wire format (wire_grads_groups=0) "
-            "under ZeRO-1")
     if wire_sync and zero_opt and "wire_params" not in plan:
         raise ValueError(
             "zero_opt_shards + grad_allreduce_bits put the parameter "
             f"all-gather on the int8 wire, but the precision plan "
             f"({plan.names}) declares no 'wire_params' domain")
     wire_overlap = bool(qcfg.wire_overlap) and wire_sync
-    if qcfg.wire_overlap and zero_opt:
-        raise ValueError(
-            "wire_overlap buckets the gradient TREE (contiguous leaf runs "
-            "in backward ready order), but zero_opt_shards flattens the "
-            "tree into the ZeroPartitioner layout, which erases leaf "
-            "boundaries — run the overlapped wire without ZeRO-1")
+    # per-layer wire formats and the overlapped bucketed wire keep leaf
+    # boundaries through the flatten via the group-aligned layout
+    # (zero_partitioner); the sharded legs then run the grouped codec.
+    zero_aligned = zero_opt and wire_sync and (wire_groups > 0
+                                               or wire_overlap)
     if wire_sync or zero_opt:
         from repro.dist import collectives  # deferred: dist imports core
-    if wire_overlap:
+    if wire_overlap or zero_aligned:
         from repro.dist import overlap as overlap_lib
         bucket_elems = (qcfg.wire_bucket_elems
                         or overlap_lib.DEFAULT_BUCKET_ELEMS)
-    if zero_opt:
-        from repro.dist.sharding import ZeroPartitioner
 
     def _grads(qparams, batch, fmts, k_a, microbatch_idx, tap=None):
         qctx = None
@@ -716,6 +795,88 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         return fn(qparams, pflat, opt_state, batch, fmts, count, k_a, k_g,
                   k_r)
 
+    def _zero_aligned_wire_step(part, full_quant, qparams, pflat, opt_state,
+                                batch, fmts, count, k_a, k_g, k_r):
+        """Group-aligned fused ZeRO-1 step: per-shard fwd/bwd, grouped int8
+        reduce-scatter per bucket (backward-ready order when the overlap
+        engages), shard-local optimizer over aligned slices, grouped int8
+        (or fp32) all-gather of the updated parameter shards.
+
+        The sharded twin of ``_zero_wire_step`` for the
+        GroupAlignedPartitioner layout: per-leaf ⟨IL, FL⟩ from the [G]
+        ``wire_grads``/``wire_params`` tables ride both legs, and with
+        ``wire_overlap`` the gradients carry readiness taps so each
+        bucket's reduce-scatter dispatches as the backward materializes
+        it.  Same return contract as ``_zero_wire_step``.
+        """
+        def body(qparams, pflat, opt_local, batch, fmts, count, k_a, k_g,
+                 k_r):
+            rank = jax.lax.axis_index(data_axis)
+            tap = None
+            if wire_overlap:
+                bplan = overlap_lib.plan_buckets(
+                    tuple(l.size
+                          for l in jax.tree_util.tree_leaves(qparams)),
+                    bucket_elems)
+                tap = lambda p: overlap_lib.tap_params(p, bplan)
+            (loss, aux), grads = _accum_grads(
+                qparams, batch, fmts, jax.random.fold_in(k_a, rank), tap)
+            if wire_groups:
+                n_leaves = len(jax.tree_util.tree_leaves(grads))
+                if n_leaves != wire_groups:
+                    raise ValueError(
+                        f"wire_grads_groups={wire_groups} but the gradient "
+                        f"tree has {n_leaves} leaves; per-layer wire formats "
+                        "need one group per leaf (derive the config with "
+                        "QuantConfig.with_per_layer_wire(params))")
+            g_stats = _raw_grad_stats(grads, fmts, k_g, rank)
+            # k_r goes to BOTH legs verbatim — the same key the replicated
+            # tree collective consumes, so every leg-1 draw (split(fold_in(
+            # k_r, idx))) and leg-2 draw (fold_in(k_r, LEG2)) matches the
+            # replicated per-layer step bit for bit; the params leg derives
+            # its own disjoint stream (fold_in(k_r, WPLG)) internally.
+            gshard, g_wire = overlap_lib.zero_bucketed_reduce_scatter(
+                grads, fmts, data_axis, k_r, part=part, mode=rounding,
+                domain="wire_grads", tag_buckets=wire_overlap)
+            if full_quant and qcfg.enabled and qcfg.policy.quantizes("grads"):
+                # optimizer-input gradient quantization on this rank's
+                # slice (same contract as _zero_wire_step)
+                gshard, _ = fxp.quantize(
+                    gshard, fmts[grad_domain], mode=qcfg.rounding,
+                    key=jax.random.fold_in(k_g, 0x524157 + rank))
+            pshard = part.shard(pflat, rank)
+            upd, new_opt = optimizer.update_shard(gshard, opt_local, pshard,
+                                                  count, axis_name=data_axis)
+            if full_quant:
+                new_flat, p_wire = overlap_lib.zero_allgather_params(
+                    pshard + upd, fmts, data_axis, k_r, part=part,
+                    mode=rounding, domain="wire_params")
+            else:
+                # fp32 return leg; the aligned layout is bucket-major, so
+                # the rank-major gather goes through part.assemble
+                gathered = jax.lax.all_gather(pshard + upd, data_axis,
+                                              axis=0, tiled=False)
+                new_flat = part.assemble(gathered)
+                p_wire = QuantStats.zero(fmts["wire_params"].il.shape)
+            g_wire = collectives.psum_stats(g_wire, data_axis)
+            p_wire = collectives.psum_stats(p_wire, data_axis)
+            g_stats = collectives.psum_stats(g_stats, data_axis)
+            loss = jax.lax.pmean(loss, data_axis)
+            aux = {k: (collectives.psum_stats(v, data_axis)
+                       if isinstance(v, QuantStats)
+                       else jax.lax.pmean(v, data_axis))
+                   for k, v in aux.items()}
+            return (loss, aux), new_flat, new_opt, g_wire, p_wire, g_stats
+
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), P(data_axis), P(data_axis), P(), P(), P(),
+                      P(), P()),
+            out_specs=((P(), P()), P(), P(data_axis), P(), P(), P()),
+            check_vma=False)
+        return fn(qparams, pflat, opt_state, batch, fmts, count, k_a, k_g,
+                  k_r)
+
     def _zero_plain_opt(part, gflat, pflat, opt_state, count):
         """ZeRO-1 optimizer leg without wire compression: slice the (already
         averaged, replicated) flat gradients, step the local shard, and
@@ -747,9 +908,10 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         g_wire = p_wire = wire_stats = None
         if zero_opt:
             # ZeRO-1: the optimizer steps flat P(data)-sharded slices of the
-            # ZeroPartitioner layout, then the updated parameter shards are
-            # gathered back into the (replicated) tree.
-            part = ZeroPartitioner.create(state.params, n_data)
+            # flat layout (plain or group-aligned, see zero_partitioner),
+            # then the updated parameter shards are gathered back into the
+            # (replicated) tree.
+            part = zero_partitioner(qcfg, state.params, n_data)
             pflat = part.flatten(state.params)
             if wire_sync:
                 # the flat wire legs can't honor per-leaf carve-outs: only
@@ -767,10 +929,12 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                         "skipping the flat optimizer-input gradient "
                         "quantization (the gradient wire stays int8).")
                 k_r = jax.random.fold_in(key, 0x57495245)  # "WIRE"
+                step_fn = (_zero_aligned_wire_step if zero_aligned
+                           else _zero_wire_step)
                 (loss, aux), new_flat, opt_state, g_wire, p_wire, g_stats = \
-                    _zero_wire_step(part, full_quant, qparams, pflat,
-                                    state.opt_state, batch, fmts, state.step,
-                                    k_a, k_g, k_r)
+                    step_fn(part, full_quant, qparams, pflat,
+                            state.opt_state, batch, fmts, state.step,
+                            k_a, k_g, k_r)
                 wire_stats = g_wire.merge(p_wire)
             else:
                 # exact legs: grads from the ordinary (implicit-psum)
@@ -876,4 +1040,5 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     train_step.wire_sync_active = wire_sync
     train_step.zero_opt_active = zero_opt
     train_step.wire_overlap_active = wire_overlap
+    train_step.zero_groupaligned_active = zero_aligned
     return train_step

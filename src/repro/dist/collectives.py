@@ -657,27 +657,57 @@ def dps_allreduce_mean(x: jax.Array, formats, axis_name,
         return mean, tagging.tag_tree(stats, "wire_stats")
 
 
-def _aligned_allreduce_mean(x_al: jax.Array, fmt: FixedPointFormat,
-                            layout: GroupLayout, axis_name, k1, k2,
-                            *, mode: str, backend: str,
-                            encode_leg1=None):
-    """Both compressed legs over a group-aligned ``[total]`` fp32 buffer.
+def _leg2_bits(k2, group_sizes, group_offset: int = 0) -> jax.Array:
+    """Rank-invariant gather-leg rounding bits, keyed by GLOBAL group index.
+
+    Element e of group ``group_offset + g`` always draws the same uint32 —
+    no matter which layout (monolithic, per-bucket, sharded) carries the
+    group — because each group gets its own ``fold_in(k2, global_g)``
+    stream, mirroring the dispatch leg's per-leaf ``fold_in(k1, g)``
+    draws.  This is what makes the bucketed pipeline and the sharded ZeRO
+    halves bit-exact with the monolithic collective under stochastic
+    rounding.  Returns the contiguous ``[sum(group_sizes)]`` stream.
+    """
+    streams = [jax.random.bits(jax.random.fold_in(k2, group_offset + g),
+                               shape=(s,), dtype=jnp.uint32)
+               for g, s in enumerate(group_sizes) if s]
+    return streams[0] if len(streams) == 1 else jnp.concatenate(streams)
+
+
+def _aligned_rs_snap(x_al, fmt: FixedPointFormat,
+                     layout: GroupLayout, axis_name, k1, k2,
+                     *, mode: str, backend: str, group_offset: int = 0,
+                     encode_leg1=None):
+    """Compressed reduce-scatter + wire-grid snap of an aligned buffer.
+
+    The first half of :func:`_aligned_allreduce_mean`, usable on its own
+    as the ZeRO-1 gradient half: dispatch-leg encode, tiled
+    ``all_to_all``, fused decode-reduce of the owned chunk, then a LOCAL
+    re-encode of the mean chunk onto the wire grid (no collective — the
+    int8 ``wire2`` only travels if the caller gathers it).  Because the
+    all-reduce decodes exactly this ``wire2`` after its gather, a sharded
+    consumer that decodes ``wire2`` locally sees bit-identical values to
+    its chunk of the gathered mean — the property that makes ZeRO +
+    per-layer wire bit-exact with the replicated step.
 
     ``encode_leg1(tile_groups, mask) -> (wire_al, stats)`` overrides the
-    dispatch-leg encode (the tree collective encodes leaf-by-leaf into a
+    dispatch-leg encode (the tree collectives encode leaf-by-leaf into a
     preallocated buffer instead of scattering an fp32 copy); the default
-    runs :func:`_encode_aligned` on ``x_al``.  Returns ``(mean_al fp32
-    [total], [G] stats)``.
+    runs :func:`_encode_aligned` on ``x_al``.
 
-    Rounding bits on both legs are drawn per **element** — leg 1 aligns a
-    ``[layout.size]`` stream into the buffer, leg 2 slices a shared
-    ``[layout.size]`` aligned stream at the owned chunk — so the
-    per-element result is invariant to the layout's quantum and rank-chunk
-    geometry (the receive-leg sums are exact in the fp32 mantissa), and
-    the two backends stay bit-identical even when they resolve different
-    default quanta.  ``k2`` must therefore be identical on every rank
-    (element → bits, not rank → bits); ``k1`` may be per-rank (leg 1
-    encodes rank-local data).
+    Rounding bits on both legs are drawn per **element** and keyed by
+    global group index — leg 1 via the caller's per-leaf ``fold_in(k1,
+    g)`` draws (or one ``[layout.size]`` stream in the default encode),
+    leg 2 via :func:`_leg2_bits` with ``group_offset`` naming the first
+    group's global index — so the per-element result is invariant to the
+    layout's quantum, rank-chunk and bucket geometry (receive-leg sums
+    are exact in the fp32 mantissa), and the two backends stay
+    bit-identical even when they resolve different default quanta.
+    ``k2`` must be identical on every rank (element → bits, not rank →
+    bits); ``k1`` may be per-rank (leg 1 encodes rank-local data).
+
+    Returns ``(part fp32 [chunk] raw mean, wire2 int8 [chunk], stats,
+    my_tg)``.
     """
     n = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
@@ -708,17 +738,35 @@ def _aligned_allreduce_mean(x_al: jax.Array, fmt: FixedPointFormat,
     # alignment padding is zero and encodes to zero bytes)
     if stochastic:
         bits2 = jax.lax.dynamic_slice(
-            layout.align(jax.random.bits(k2, shape=(layout.size,),
-                                         dtype=jnp.uint32)),
+            layout.align(_leg2_bits(k2, layout.group_sizes, group_offset)),
             (idx * layout.chunk,), (layout.chunk,))
     else:
         bits2 = None
     wire2, _ = _encode_aligned(part, fmt, my_tg, None, bits=bits2,
                                mode=mode, backend=backend,
                                quantum=layout.quantum, compute_stats=False)
+    return part, wire2, stats, my_tg
+
+
+def _aligned_allreduce_mean(x_al: jax.Array, fmt: FixedPointFormat,
+                            layout: GroupLayout, axis_name, k1, k2,
+                            *, mode: str, backend: str,
+                            group_offset: int = 0, encode_leg1=None):
+    """Both compressed legs over a group-aligned ``[total]`` fp32 buffer.
+
+    :func:`_aligned_rs_snap` (dispatch, reduce, wire-grid re-encode of
+    the owned mean chunk) followed by the int8 ``all_gather`` of the
+    re-encoded chunks and the per-tile decode.  Returns ``(mean_al fp32
+    [total], [G] stats)``; see :func:`_aligned_rs_snap` for the
+    element-indexed rounding-bit contract.
+    """
+    _, wire2, stats, _ = _aligned_rs_snap(
+        x_al, fmt, layout, axis_name, k1, k2, mode=mode, backend=backend,
+        group_offset=group_offset, encode_leg1=encode_leg1)
     wire2 = tagging.tag(wire2, "wire_payload", leg="gather")
     full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)
-    return _decode_aligned(full, fmt, tg_all, layout.quantum), stats
+    return _decode_aligned(full, fmt, jnp.asarray(layout.tile_groups()),
+                           layout.quantum), stats
 
 
 def dps_reduce_scatter_mean(x: jax.Array, formats, axis_name,
@@ -750,8 +798,12 @@ def dps_reduce_scatter_mean(x: jax.Array, formats, axis_name,
     stats.  The chunk layout here is the CALLER's contract (the
     ``ZeroPartitioner`` flat slices), so the grouped codec runs
     per-element formats on the jnp path — group boundaries need not align
-    with rank chunks — rather than the aligned-layout kernel (use
-    :func:`dps_allreduce_mean` for the kernel-speed grouped schedule).
+    with rank chunks.  The train step's grouped ZeRO path does NOT come
+    through here: it runs the group-aligned
+    :class:`repro.dist.sharding.GroupAlignedPartitioner` layout through
+    :func:`repro.dist.overlap.zero_bucketed_reduce_scatter` (kernel-grade
+    aligned codec, per-bucket collectives); this per-element form remains
+    for callers that own their own chunk layout.
 
     Returns ``(shard, stats)``: ``shard`` is this rank's chunk of the
     flattened, zero-padded mean — shape ``[ceil(x.size / n)]``, the padded
@@ -839,7 +891,9 @@ def dps_allgather_params(shard: jax.Array, formats, axis_name,
     chunks): each rank encodes its shard with the formats of its own
     positions and every rank decodes the concatenation group-wise.  The
     shard layout is the caller's contract, so the grouped codec runs
-    per-element formats (jnp path) — no alignment assumed.
+    per-element formats (jnp path) — no alignment assumed.  (The train
+    step's grouped ZeRO return leg runs the group-aligned layout through
+    :func:`repro.dist.overlap.zero_allgather_params` instead.)
 
     Returns ``(full, stats)``: ``full`` is the flat ``[n · shard.size]``
     gathered vector (identical on every rank), ``stats`` cover this rank's
@@ -983,7 +1037,19 @@ def dps_allreduce_mean_tree(tree, formats, axis_name,
                                       split_axis=0, concat_axis=0,
                                       tiled=True)
             part = _wire_reduce(wire, fmt, None, backend=be, quantum=q)
-            wire2, _ = wire_encode(part, fmt, key=k2, mode=mode,
+            # gather-leg bits keyed by global leaf index (rank-invariant
+            # k2s stream, same contract as _aligned_rs_snap) so the
+            # bucketed and sharded schedules stay bit-exact with this
+            # monolithic one under stochastic rounding
+            if mode == ROUND_STOCHASTIC:
+                k2s = jax.random.fold_in(key, 0x4C454732)    # "LEG2"
+                bits2 = jax.lax.dynamic_slice(
+                    _pad_reshape(_leg2_bits(k2s, sizes), total - sum(sizes),
+                                 (total,)),
+                    (idx * chunk,), (chunk,))
+            else:
+                bits2 = None
+            wire2, _ = wire_encode(part, fmt, bits=bits2, mode=mode,
                                    compute_stats=False, backend=be)
             wire2 = tagging.tag(wire2, "wire_payload", leg="gather")
             full = jax.lax.all_gather(wire2, axis_name, axis=0, tiled=True)

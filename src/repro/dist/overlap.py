@@ -36,13 +36,15 @@ Determinism and bit-exactness contract (pinned by tests/test_overlap.py):
   (``fold_in(k1, g)``), exactly like the monolithic tree collective, so
   dispatch-leg wire bytes and the returned per-leaf stats are
   bit-identical to the monolithic path under both rounding modes.
-* Under ``mode="nearest"`` the decoded bucketed mean is **bit-exact**
-  vs the monolithic collective: encode/decode are elementwise
-  deterministic and the receive-leg sums run in identical rank order,
-  so chunk geometry cannot change a single ulp.  Under stochastic
-  rounding only the gather leg differs (its bits are element-indexed
-  relative to the layout, which is now per-bucket); each leg still
-  quantizes with < one grid step of unbiased error.
+* Gather-leg rounding bits are ALSO keyed by global leaf index
+  (:func:`~repro.dist.collectives._leg2_bits` with the bucket's first
+  leaf as ``group_offset``), so the decoded bucketed mean is
+  **bit-exact** vs the monolithic collective under BOTH rounding
+  modes: encode/decode are elementwise deterministic, the receive-leg
+  sums run in identical rank order, and every rounding-bit draw is a
+  function of (leaf, element offset) alone — chunk and bucket geometry
+  cannot change a single ulp (pinned by
+  tests/test_overlap.py::test_bucketed_bitexact_both_modes).
 
 Every bucket is wrapped in ``wire_bucket`` trace-time tags (see
 :mod:`repro.core.tagging`): ``stage="ready"`` on each raw leaf the
@@ -69,7 +71,10 @@ import numpy as np
 from repro.core import tagging
 from repro.core.fixed_point import (FixedPointFormat, QuantStats,
                                     ROUND_STOCHASTIC)
-from repro.dist.collectives import (_aligned_allreduce_mean, _group_layout,
+from repro.dist.collectives import (_aligned_allreduce_mean,
+                                    _aligned_rs_snap, _decode_aligned,
+                                    _encode_aligned, _group_layout,
+                                    _leg2_bits, _pad_reshape,
                                     _resolve_backend, _resolve_quantum,
                                     _validate_capacity, _wire_reduce,
                                     group_layout, resolve_domain_format,
@@ -224,9 +229,10 @@ def bucketed_allreduce_mean_tree(tree, formats, axis_name, key,
     order for grouped formats or merged in leaf order for a scalar
     format, dispatch-leg stats covering exactly this rank's |tree|
     elements — and bit-identical wire bytes / stats on the dispatch leg
-    (leg-1 rounding keys are global-leaf-indexed in both).  Under
-    ``mode="nearest"`` the decoded mean is bit-exact vs the monolithic
-    path; see the module docstring for the stochastic gather-leg caveat.
+    (leg-1 rounding keys are global-leaf-indexed in both).  The decoded
+    mean is bit-exact vs the monolithic path under BOTH rounding modes:
+    gather-leg bits are global-leaf-indexed too (see the module
+    docstring).
 
     ``plan=None`` derives :func:`plan_buckets` over the leaf sizes with
     ``target_elems``; a caller-supplied plan must match the tree's leaf
@@ -254,9 +260,13 @@ def bucketed_allreduce_mean_tree(tree, formats, axis_name, key,
     n = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     k1, k2 = jax.random.split(jax.random.fold_in(key, idx))
-    # leg-2 bits are element-indexed (see _aligned_allreduce_mean), so the
-    # grouped gather leg needs a rank-invariant stream — same fold as the
-    # monolithic path, further folded per bucket.
+    del k2  # gather-leg bits come from the rank-invariant k2s stream
+    # leg-2 bits are element-indexed and keyed by GLOBAL leaf index
+    # (collectives._leg2_bits): the same rank-invariant fold as the
+    # monolithic path, with each bucket passing its first leaf's global
+    # index as group_offset — so every leaf draws the exact bits the
+    # monolithic layout would, and bucketing is invisible under
+    # stochastic rounding.
     k2s = jax.random.fold_in(key, 0x4C454732)                # "LEG2"
     be = _resolve_backend(backend)
     B = plan.n_buckets
@@ -294,8 +304,8 @@ def bucketed_allreduce_mean_tree(tree, formats, axis_name, key,
                                              *per)
 
                 mean_al, _ = _aligned_allreduce_mean(
-                    None, fmt_b, layout, axis_name, k1,
-                    jax.random.fold_in(k2s, b), mode=mode, backend=be,
+                    None, fmt_b, layout, axis_name, k1, k2s,
+                    mode=mode, backend=be, group_offset=lo,
                     encode_leg1=encode_leg1)
                 mean_al = tagging.tag(mean_al, "wire_bucket", stage="mean",
                                       bucket=b, n=B)
@@ -323,8 +333,14 @@ def bucketed_allreduce_mean_tree(tree, formats, axis_name, key,
                 wire = jax.lax.all_to_all(payload, axis_name, split_axis=0,
                                           concat_axis=0, tiled=True)
                 part = _wire_reduce(wire, fmt, None, backend=be, quantum=q)
-                wire2, _ = wire_encode(part, fmt,
-                                       key=jax.random.fold_in(k2, b),
+                if mode == ROUND_STOCHASTIC:
+                    bits2 = jax.lax.dynamic_slice(
+                        _pad_reshape(_leg2_bits(k2s, bsizes, run[0]),
+                                     total - size_b, (total,)),
+                        (idx * chunk,), (chunk,))
+                else:
+                    bits2 = None
+                wire2, _ = wire_encode(part, fmt, bits=bits2,
                                        mode=mode, compute_stats=False,
                                        backend=be)
                 wire2 = tagging.tag(wire2, "wire_payload", leg="gather")
@@ -351,3 +367,236 @@ def bucketed_allreduce_mean_tree(tree, formats, axis_name, key,
         stats = tagging.tag_tree(stats, "wire_stats")
 
     return jax.tree_util.tree_unflatten(treedef, out), stats
+
+
+# ------------------------------------------- the sharded (ZeRO-1) halves
+
+def _bucket_format(fmt: FixedPointFormat, lo: int, gb: int,
+                   grouped: bool) -> FixedPointFormat:
+    """Bucket rows ``[lo, lo + gb)`` of a per-leaf ``[G]`` format table —
+    or a scalar format broadcast to ``gb`` identical rows, so the aligned
+    codec (which resolves per-tile formats from a row table) runs the
+    scalar grid unchanged."""
+    if grouped:
+        return FixedPointFormat(fmt.il[lo:lo + gb], fmt.fl[lo:lo + gb])
+    return FixedPointFormat(
+        jnp.broadcast_to(jnp.asarray(fmt.il), (gb,)),
+        jnp.broadcast_to(jnp.asarray(fmt.fl), (gb,)))
+
+
+def _check_partitioner(part, n: int, n_leaves: int, fmt: FixedPointFormat,
+                       backend: str, what: str):
+    be = _resolve_backend(backend)
+    if be != part.backend:
+        raise ValueError(
+            f"{what}: partitioner layout was built for the "
+            f"{part.backend!r} codec backend but the collective resolved "
+            f"{be!r}; build the GroupAlignedPartitioner with the backend "
+            "the step runs")
+    if n != part.n_shards:
+        raise ValueError(
+            f"{what}: partitioner has n_shards={part.n_shards} but the "
+            f"mesh axis has {n} ranks")
+    if len(part.shapes) != n_leaves:
+        raise ValueError(
+            f"{what}: partitioner covers {len(part.shapes)} leaves, "
+            f"got {n_leaves}")
+    if fmt.il.ndim != 0 and fmt.il.shape[0] != n_leaves:
+        raise ValueError(
+            f"[G]-shaped formats are one ⟨IL, FL⟩ per leaf: the table has "
+            f"{fmt.il.shape[0]} rows, the tree {n_leaves} leaves")
+    return be
+
+
+def zero_bucketed_reduce_scatter(tree, formats, axis_name, key, *, part,
+                                 mode: str = ROUND_STOCHASTIC,
+                                 backend: str = "auto",
+                                 domain: str = "wire_grads",
+                                 tag_buckets: bool = False):
+    """Compressed gradient reduce-scatter onto a group-aligned ZeRO shard.
+
+    The sharded first half of :func:`bucketed_allreduce_mean_tree`: one
+    int8 ``all_to_all`` per bucket of ``part`` (a
+    :class:`repro.dist.sharding.GroupAlignedPartitioner`), walked in
+    backward-ready order (reverse flatten order), each followed by the
+    fused decode-reduce of the owned chunk and a LOCAL wire-grid snap
+    (:func:`~repro.dist.collectives._aligned_rs_snap`) — the re-encode +
+    decode the all-reduce's gather leg would have applied, minus the
+    gather.  Rank r therefore holds values bit-identical to its chunk of
+    the replicated collective's decoded mean, under both rounding modes
+    (every rounding-bit draw is keyed by global leaf index; see the
+    module docstring), which is what makes ZeRO + per-layer wire +
+    overlap bit-exact with the replicated per-layer step.
+
+    ``formats`` may be scalar (one wire grid everywhere) or per-leaf
+    ``[G]``-shaped; stats come back in the same shape, assembled in
+    global leaf order exactly like the replicated collectives.
+
+    ``tag_buckets=True`` wraps every bucket in the ``wire_bucket``
+    ready/mean trace tags the PF-BUCKET verifier rules consume — turn it
+    on exactly when the gradients carry :func:`bucket_ready_tap`
+    landmarks (the overlapped step), whose plan must list this
+    partitioner's buckets in reverse order.
+
+    Returns ``(gshard fp32 [part.shard_size], stats)``; ``gshard`` is
+    this rank's concatenated per-bucket chunks of the snapped mean —
+    ``part.shard(part.flatten(mean_tree), rank)`` of the replicated
+    result.  Must run inside ``shard_map``; ``key`` may be identical
+    across ranks.
+    """
+    fmt = resolve_domain_format(formats, domain)
+    _validate_capacity(fmt)
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    be = _check_partitioner(part, n, len(leaves), fmt, backend,
+                            "zero_bucketed_reduce_scatter")
+    grouped = fmt.il.ndim != 0
+    k1, _ = jax.random.split(jax.random.fold_in(key, idx))
+    k2s = jax.random.fold_in(key, 0x4C454732)                # "LEG2"
+    B = part.n_buckets
+
+    chunks = [None] * B
+    leaf_stats = [None] * len(leaves)
+    with tagging.domain(domain):
+        for rb in range(B):          # ready order = reverse flatten order
+            pb = B - 1 - rb
+            run = part.buckets[pb]
+            lay = part.layouts[pb]
+            lo, gb = run[0], len(run)
+            fmt_b = _bucket_format(fmt, lo, gb, grouped)
+            bleaves = [
+                tagging.tag(leaves[g], "wire_bucket", stage="ready",
+                            bucket=rb, leaf=g, n=B) if tag_buckets
+                else leaves[g]
+                for g in run]
+
+            def encode_leg1(tg_all, mask, _run=run, _bl=bleaves,
+                            _fmt=fmt_b, _lay=lay):
+                buf = jnp.zeros((_lay.total,), jnp.int8)
+                for j, g in enumerate(_run):
+                    fmt_g = FixedPointFormat(_fmt.il[j], _fmt.fl[j])
+                    w, s = wire_encode(
+                        _bl[j].reshape(-1), fmt_g,
+                        key=jax.random.fold_in(k1, g), mode=mode,
+                        backend=be)
+                    buf = jax.lax.dynamic_update_slice(
+                        buf, w, (_lay.offsets[j],))
+                    leaf_stats[g] = s
+                per = [leaf_stats[g] for g in _run]
+                return buf, jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+            _, wire2, _, my_tg = _aligned_rs_snap(
+                None, fmt_b, lay, axis_name, k1, k2s, mode=mode,
+                backend=be, group_offset=lo, encode_leg1=encode_leg1)
+            dec = _decode_aligned(wire2, fmt_b, my_tg, lay.quantum)
+            if tag_buckets:
+                dec = tagging.tag(dec, "wire_bucket", stage="mean",
+                                  bucket=rb, n=B)
+            chunks[pb] = dec
+
+        # stats in GLOBAL leaf order, same as the replicated collectives
+        if grouped:
+            stats = jax.tree.map(lambda *xs: jnp.stack(xs), *leaf_stats)
+        else:
+            stats = leaf_stats[0]
+            for s in leaf_stats[1:]:
+                stats = stats.merge(s)
+        stats = tagging.tag_tree(stats, "wire_stats")
+
+    gshard = chunks[0] if B == 1 else jnp.concatenate(chunks)
+    return gshard, stats
+
+
+def zero_allgather_params(shard: jax.Array, formats, axis_name, key, *,
+                          part, mode: str = ROUND_STOCHASTIC,
+                          backend: str = "auto",
+                          domain: str = "wire_params"):
+    """Compressed parameter all-gather from group-aligned ZeRO shards.
+
+    The sharded return leg: each rank encodes its ``[part.shard_size]``
+    slice of the updated flat parameter vector bucket-segment by
+    bucket-segment with the aligned codec (per-tile formats from the
+    bucket's row table, alignment padding masked out of the stats),
+    ships ONE concatenated int8 ``all_gather``, and decodes the full
+    group-aligned buffer.  ``formats`` may be scalar or per-leaf
+    ``[G]``-shaped (``wire_params`` rows in leaf order).
+
+    Returns ``(flat fp32 [part.padded_size], stats)``: ``flat`` is the
+    decoded aligned parameter buffer (``part.unflatten`` restores the
+    tree), ``stats`` cover this rank's encode of its shard elements
+    (``psum_stats`` counts each global element exactly once).  Must run
+    inside ``shard_map``; ``key`` may be identical across ranks.
+    """
+    fmt = resolve_domain_format(formats, domain)
+    _validate_capacity(fmt)
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    be = _check_partitioner(part, n, len(part.shapes), fmt, backend,
+                            "zero_allgather_params")
+    grouped = fmt.il.ndim != 0
+    # gather-leg-style element-indexed bits (rank-invariant stream keyed
+    # by global leaf index): rank r's draws depend only on which elements
+    # it owns, not on r itself
+    kps = jax.random.fold_in(key, 0x57504C47)                # "WPLG"
+
+    wire_chunks, stat_rows = [], []
+    with tagging.domain(domain):
+        for pb in range(part.n_buckets):
+            run = part.buckets[pb]
+            lay = part.layouts[pb]
+            lo, gb = run[0], len(run)
+            fmt_b = _bucket_format(fmt, lo, gb, grouped)
+            tg_all = jnp.asarray(lay.tile_groups())
+            tpc = lay.chunk // lay.quantum
+            my_tg = jax.lax.dynamic_slice(tg_all, (idx * tpc,), (tpc,))
+            my_mask = jax.lax.dynamic_slice(
+                jnp.asarray(lay.mask()), (idx * lay.chunk,), (lay.chunk,))
+            soff = part.shard_offset(pb)
+            seg = jax.lax.slice(shard, (soff,), (soff + lay.chunk,))
+            if mode == ROUND_STOCHASTIC:
+                bits = jax.lax.dynamic_slice(
+                    lay.align(_leg2_bits(kps, lay.group_sizes, lo)),
+                    (idx * lay.chunk,), (lay.chunk,))
+            else:
+                bits = None
+            w, s = _encode_aligned(seg, fmt_b, my_tg, my_mask, bits=bits,
+                                   mode=mode, backend=be,
+                                   quantum=lay.quantum)
+            wire_chunks.append(w)
+            stat_rows.append(s)
+
+        wire = (wire_chunks[0] if len(wire_chunks) == 1
+                else jnp.concatenate(wire_chunks))
+        wire = tagging.tag(wire, "wire_payload", leg="gather")
+        gathered = jax.lax.all_gather(wire, axis_name, axis=0, tiled=True)
+        gathered = gathered.reshape(n, part.shard_size)
+
+        segs = []
+        for pb in range(part.n_buckets):
+            run = part.buckets[pb]
+            lay = part.layouts[pb]
+            lo, gb = run[0], len(run)
+            soff = part.shard_offset(pb)
+            seg_full = gathered[:, soff:soff + lay.chunk].reshape(
+                n * lay.chunk)
+            segs.append(_decode_aligned(
+                seg_full, _bucket_format(fmt, lo, gb, grouped),
+                jnp.asarray(lay.tile_groups()), lay.quantum))
+        flat = segs[0] if len(segs) == 1 else jnp.concatenate(segs)
+
+        rows = (stat_rows[0] if len(stat_rows) == 1
+                else jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                  *stat_rows))
+        if grouped:
+            stats = rows
+        else:
+            # scalar wire_params domain: collapse the per-leaf rows
+            stats = QuantStats(
+                count=rows.count.sum(), nonzero=rows.nonzero.sum(),
+                overflow=rows.overflow.sum(),
+                abs_err_sum=rows.abs_err_sum.sum(),
+                rel_err_sum=rows.rel_err_sum.sum(),
+                abs_sum=rows.abs_sum.sum(), max_abs=rows.max_abs.max())
+        stats = tagging.tag_tree(stats, "wire_stats")
+    return flat, stats

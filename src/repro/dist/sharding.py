@@ -212,6 +212,188 @@ class ZeroPartitioner:
             flat, (index * self.shard_size,), (self.shard_size,))
 
 
+@dataclasses.dataclass(frozen=True)
+class GroupAlignedPartitioner:
+    """ZeRO-1 flat layout whose leaf slots are padded to the wire quantum.
+
+    :class:`ZeroPartitioner` packs leaves back to back, so rank-chunk
+    boundaries straddle leaves and the flat vector cannot carry per-leaf
+    ⟨IL, FL⟩ wire formats — the reason per-layer wire and the overlapped
+    bucketed pipeline used to be rejected under ZeRO.  This layout keeps
+    the same contract (flatten / shard / optimizer-steps-a-slice /
+    unflatten, zero padding everywhere) but reuses
+    :class:`repro.dist.collectives.GroupLayout`'s alignment arithmetic:
+
+    * leaves are grouped into ``buckets`` — contiguous runs of leaf
+      indices in ``tree_flatten`` order (one run covering every leaf when
+      the overlapped pipeline is off);
+    * within a bucket every leaf slot is padded up to the bucket's wire
+      ``quantum``, and the bucket total is padded so each of the
+      ``n_shards`` rank chunks is itself a whole number of quanta
+      (``GroupLayout.chunk``).  Chunk boundaries therefore never straddle
+      a group, and each aligned tile maps to exactly one leaf
+      (``GroupLayout.tile_groups``);
+    * a rank's shard is the concatenation of its per-bucket chunks, so
+      the sharded half-collectives can run the grouped aligned codec
+      bucket-by-bucket in backward-ready order while the optimizer still
+      sees one flat ``[shard_size]`` slice.
+
+    Every field is a static Python value, so the partitioner is safe to
+    build from abstract trees (``jax.eval_shape``) and to close over in
+    jitted code.  Padding is zero and stays zero through SGD/AdamW (zero
+    grad + zero param -> zero update), exactly as in
+    :class:`ZeroPartitioner`.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    n_shards: int
+    backend: str
+    buckets: Tuple[Tuple[int, ...], ...]
+    layouts: Tuple[Any, ...]   # one collectives.GroupLayout per bucket
+
+    @staticmethod
+    def create(tree, n_shards: int, *, backend: str = "auto",
+               quantum: Optional[int] = None,
+               buckets: Optional[Sequence[Sequence[int]]] = None
+               ) -> "GroupAlignedPartitioner":
+        """Build from a concrete or abstract tree.
+
+        ``buckets`` is a sequence of contiguous leaf-index runs (any
+        order; stored sorted into flatten order) — pass the runs of a
+        :class:`repro.dist.overlap.BucketPlan` to align the layout with
+        the overlapped pipeline, or leave ``None`` for one bucket over
+        the whole tree.  Each bucket resolves its own quantum (same
+        derivation as the bucketed collective), unless ``quantum`` pins
+        one globally.
+        """
+        from repro.dist.collectives import (_resolve_backend,
+                                            _resolve_quantum, group_layout)
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if not leaves:
+            raise ValueError("GroupAlignedPartitioner needs a non-empty tree")
+        sizes = [math.prod(tuple(l.shape)) or 1 for l in leaves]
+        if buckets is None:
+            runs = (tuple(range(len(leaves))),)
+        else:
+            runs = tuple(tuple(int(i) for i in r) for r in
+                         sorted(buckets, key=lambda r: r[0]))
+            flat_idx = [i for r in runs for i in r]
+            if flat_idx != list(range(len(leaves))):
+                raise ValueError(
+                    "buckets must partition the leaves into contiguous "
+                    f"ascending runs, got {runs}")
+        be = _resolve_backend(backend)
+        layouts = []
+        for run in runs:
+            b_sizes = tuple(sizes[i] for i in run)
+            q = _resolve_quantum(quantum, sum(b_sizes), len(run), be)
+            layouts.append(group_layout(b_sizes, n_chunks=n_shards,
+                                        quantum=q))
+        return GroupAlignedPartitioner(
+            treedef=treedef,
+            shapes=tuple(tuple(l.shape) for l in leaves),
+            dtypes=tuple(l.dtype for l in leaves),
+            n_shards=int(n_shards), backend=be,
+            buckets=runs, layouts=tuple(layouts))
+
+    # --- static geometry -------------------------------------------------
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def size(self) -> int:
+        """Unpadded element count of the flattened tree."""
+        return sum(math.prod(s) or 1 for s in self.shapes)
+
+    @property
+    def padded_size(self) -> int:
+        """Flat-buffer length: sum of aligned bucket totals."""
+        return sum(l.total for l in self.layouts)
+
+    @property
+    def shard_size(self) -> int:
+        """Per-rank slice length: sum of aligned bucket chunks."""
+        return sum(l.chunk for l in self.layouts)
+
+    def bucket_offset(self, b: int) -> int:
+        """Flat-buffer offset of bucket ``b``."""
+        return sum(l.total for l in self.layouts[:b])
+
+    def shard_offset(self, b: int) -> int:
+        """Offset of bucket ``b``'s chunk within a rank's shard."""
+        return sum(l.chunk for l in self.layouts[:b])
+
+    def leaf_range(self, b: int) -> Tuple[int, int]:
+        """Global leaf-index range ``[lo, hi)`` of bucket ``b`` — the
+        slice of a per-leaf ``[G]`` format table this bucket consumes."""
+        run = self.buckets[b]
+        return run[0], run[-1] + 1
+
+    def leaf_offset(self, g: int) -> int:
+        """Flat-buffer offset of leaf ``g``'s aligned slot."""
+        for b, run in enumerate(self.buckets):
+            if g in run:
+                return self.bucket_offset(b) + self.layouts[b].offsets[
+                    run.index(g)]
+        raise IndexError(g)
+
+    # --- layout transforms ----------------------------------------------
+
+    def flatten(self, tree) -> jax.Array:
+        """Tree -> fp32 ``[padded_size]``: each leaf in its aligned slot,
+        zeros everywhere else (slot tails and chunk pads)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        flat = jnp.zeros((self.padded_size,), jnp.float32)
+        for b, run in enumerate(self.buckets):
+            off = self.bucket_offset(b)
+            lay = self.layouts[b]
+            for j, g in enumerate(run):
+                leaf = leaves[g].reshape(-1).astype(jnp.float32)
+                flat = jax.lax.dynamic_update_slice(
+                    flat, leaf, (off + lay.offsets[j],))
+        return flat
+
+    def unflatten(self, flat: jax.Array):
+        """``[padded_size]`` -> tree with original shapes/dtypes; slot
+        tails and chunk pads are dropped."""
+        out = []
+        for b, run in enumerate(self.buckets):
+            off = self.bucket_offset(b)
+            lay = self.layouts[b]
+            for j, g in enumerate(run):
+                n = math.prod(self.shapes[g]) or 1
+                o = off + lay.offsets[j]
+                out.append(flat[o:o + n].reshape(self.shapes[g])
+                           .astype(self.dtypes[g]))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def shard(self, flat: jax.Array, index) -> jax.Array:
+        """Rank ``index``'s ``[shard_size]`` slice: the concatenation of
+        its per-bucket chunks (``index`` may be traced)."""
+        parts = []
+        for b, lay in enumerate(self.layouts):
+            off = self.bucket_offset(b)
+            parts.append(jax.lax.dynamic_slice(
+                flat, (off + index * lay.chunk,), (lay.chunk,)))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    def assemble(self, gathered: jax.Array) -> jax.Array:
+        """``all_gather`` of shards (``[n_shards, shard_size]``) -> the
+        flat ``[padded_size]`` buffer (inverse of per-rank :meth:`shard`)."""
+        segs = []
+        for b, lay in enumerate(self.layouts):
+            s = self.shard_offset(b)
+            segs.append(gathered[:, s:s + lay.chunk].reshape(
+                self.n_shards * lay.chunk))
+        return segs[0] if len(segs) == 1 else jnp.concatenate(segs)
+
+
 # ---------------------------------------------------------------------------
 # Mesh + rules context.
 # ---------------------------------------------------------------------------

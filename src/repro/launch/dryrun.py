@@ -82,7 +82,9 @@ def _train_qcfg(cfg, mesh, grad_allreduce_bits=None, zero_opt=False,
                                    mesh.devices.shape)).get("data", 1))
     qcfg = _qcfg(grad_allreduce_bits, zero_shards, wire_controller,
                  wire_overlap)
-    if wire_groups == "per-layer" and zero_shards is None:
+    if wire_groups == "per-layer":
+        # composes with ZeRO: the group-aligned flat layout keeps leaf
+        # boundaries, so per-leaf wire formats survive the flatten
         qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
     return qcfg
 

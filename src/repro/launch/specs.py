@@ -90,9 +90,13 @@ def _abstract_opt_state(aparams, optimizer, qcfg: qtrain.QuantConfig,
     between the checkpoint template, the shardings, and the step.
     """
     if qtrain.zero_opt_engaged(qcfg, mesh):
+        # qcfg rides along so the flat layout matches the step's: per-layer
+        # wire formats / wire_overlap switch it to the group-aligned
+        # partitioner, whose padded size differs from the plain one.
         return jax.eval_shape(
             lambda p: qtrain.zero_opt_state(optimizer, p,
-                                            qcfg.zero_opt_shards), aparams)
+                                            qcfg.zero_opt_shards,
+                                            qcfg=qcfg), aparams)
     return jax.eval_shape(optimizer.init, aparams)
 
 

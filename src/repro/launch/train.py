@@ -93,9 +93,12 @@ def main(argv=None):
                          "gradient leaf through the group-aligned "
                          "collectives ([G, 2] kernel format table); "
                          "'global' keeps the single shared wire format. "
-                         "ZeRO (--zero-opt) always runs 'global' (the "
-                         "flat layout erases leaf boundaries).  Resume "
-                         "with the same choice — the wire_grads ckpt "
+                         "Composes with --zero-opt: the flat optimizer "
+                         "layout switches to the group-aligned "
+                         "partitioner, so per-leaf formats survive the "
+                         "flatten and both sharded legs run the grouped "
+                         "codec.  Resume with the same choice — the "
+                         "wire_grads (and under ZeRO wire_params) ckpt "
                          "state is [G]-shaped under per-layer")
     ap.add_argument("--wire-overlap", choices=("on", "off"),
                     default=os.environ.get("REPRO_WIRE_OVERLAP") or "off",
@@ -104,8 +107,10 @@ def main(argv=None):
                          "compressed collective pair per bucket in "
                          "backward ready order (repro.dist.overlap), "
                          "instead of one monolithic pair after the full "
-                         "backward.  Needs --grad-allreduce-bits; "
-                         "mutually exclusive with --zero-opt")
+                         "backward.  Needs --grad-allreduce-bits.  "
+                         "Composes with --zero-opt: the group-aligned "
+                         "layout runs one int8 reduce-scatter per bucket "
+                         "in the same backward-ready order")
     ap.add_argument("--wire-auto-slack", action="store_true",
                     default=bool(os.environ.get("REPRO_WIRE_AUTO_SLACK")),
                     help="derive each wire domain's radix headroom from "
@@ -142,10 +147,11 @@ def main(argv=None):
                               wire_controller=args.wire_controller,
                               wire_overlap=args.wire_overlap == "on",
                               wire_auto_slack=args.wire_auto_slack)
-    if args.wire_groups == "per-layer" and zero_shards is None:
+    if args.wire_groups == "per-layer":
         # one wire ⟨IL, FL⟩ per gradient leaf; the group count derives
         # from the abstract param tree so the plan (and with it the DPS
-        # checkpoint layout) is fixed before any tensor exists.
+        # checkpoint layout) is fixed before any tensor exists.  Under
+        # --zero-opt this selects the group-aligned flat layout too.
         qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
     opt_cfg = (AdamWConfig(total_steps=args.steps) if args.optimizer == "adamw"
                else SGDConfig())
@@ -177,7 +183,8 @@ def main(argv=None):
     else:
         params = init_params(jax.random.key(args.seed), mod.model_defs(cfg))
         if qtrain.zero_opt_engaged(qcfg, mesh):
-            opt_state = qtrain.zero_opt_state(opt, params, zero_shards)
+            opt_state = qtrain.zero_opt_state(opt, params, zero_shards,
+                                              qcfg=qcfg)
         else:
             opt_state = opt.init(params)
         state = qtrain.TrainState.create(params, opt_state, qcfg,

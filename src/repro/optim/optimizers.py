@@ -185,12 +185,17 @@ class SGD:
 
     def init_shard(self, flat: jax.Array):
         """State for one flat slice (or the whole padded flat vector) of the
-        :class:`~repro.dist.sharding.ZeroPartitioner` layout."""
+        flat ZeRO layout — :class:`~repro.dist.sharding.ZeroPartitioner` or
+        the group-aligned :class:`~repro.dist.sharding.GroupAlignedPartitioner`
+        (the math is layout-agnostic: padding slots carry zero gradients, so
+        their state stays zero)."""
         return {"mu": jnp.zeros(flat.shape, self._state_dtype())}
 
     def update_shard(self, grads, state, params, count, axis_name=None):
         """One optimizer step on this rank's flat parameter slice.
 
+        Works unchanged over either flat layout (plain or group-aligned —
+        the slice is just a 1-D fp32 vector either way).
         Identical element-wise math to :meth:`update` (same ``_leaf``), so
         with fp32 state — and ``clip_norm`` off — the concatenation of
         per-shard updates is bit-exact with the replicated step.
@@ -265,7 +270,8 @@ class AdamW:
 
     def init_shard(self, flat: jax.Array):
         """State for one flat slice (or the whole padded flat vector) of the
-        :class:`~repro.dist.sharding.ZeroPartitioner` layout.
+        flat ZeRO layout (:class:`~repro.dist.sharding.ZeroPartitioner` or
+        :class:`~repro.dist.sharding.GroupAlignedPartitioner`).
 
         ``m`` and ``v`` are distinct buffers on purpose: aliased leaves
         crash buffer donation ("Attempt to donate the same buffer twice")

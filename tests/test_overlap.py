@@ -11,7 +11,9 @@ Covers the ISSUE-7 acceptance criteria:
       dispatch-leg stats are bit-exact under stochastic rounding too;
   (c) the overlapped train step (``QuantConfig(wire_overlap=True)``)
       matches the monolithic step bit-exactly at nearest, is a pure
-      no-op without ``grad_allreduce_bits``, and refuses ZeRO-1;
+      no-op without ``grad_allreduce_bits``, and composes with ZeRO-1
+      through the group-aligned layout (the flow verifier proves the
+      bucket schedule on the sharded halves too);
   (d) the precision-flow verifier proves PF-BUCKET-ENCODE /
       PF-BUCKET-DECODE on the real overlapped step and fires both on
       deliberately broken bucket schedules (double-encode, dropped
@@ -223,16 +225,65 @@ def test_overlap_step_bitexact_and_flow_clean():
         assert "PF-BUCKET-ENCODE" in r.checked
         assert "PF-BUCKET-DECODE" in r.checked
 
-        # ZeRO-1 erases the leaf boundaries buckets need: refuse loudly
-        try:
-            qtrain.make_train_step(
-                lenet.loss_fn, opt,
-                dataclasses.replace(qA, wire_overlap=True, zero_opt_shards=8),
-                mesh=mesh)
-        except ValueError as e:
-            assert "wire_overlap" in str(e)
-        else:
-            raise AssertionError("expected ValueError for overlap+ZeRO")
+        # ZeRO-1 composes: the group-aligned layout keeps the leaf
+        # boundaries buckets are made of, and the verifier proves the
+        # same bucket schedule on the SHARDED reduce-scatter half
+        qZ = dataclasses.replace(qBg, zero_opt_shards=8)
+        stepZ = qtrain.make_train_step(lenet.loss_fn, opt, qZ, mesh=mesh)
+        assert stepZ.zero_opt_active and stepZ.wire_overlap_active
+        assert stepZ.zero_groupaligned_active
+        stZ = qtrain.TrainState.create(
+            params, qtrain.zero_opt_state(opt, params, 8, qcfg=qZ), qZ,
+            jax.random.key(1))
+        _, mZ = jax.jit(stepZ)(stZ, batch)
+        assert float(mZ["loss"]) == float(mA["loss"])
+        r = flow.analyze_fn(stepZ, stZ, batch, name="zero-overlap-step")
+        assert r.ok, r.summary()
+        assert "PF-BUCKET-ENCODE" in r.checked
+        assert "PF-BUCKET-DECODE" in r.checked
+        print("OK")
+        """)
+
+
+def test_bucketed_bitexact_both_modes():
+    """The PR-7 SR caveat is gone: bucketed decoded means AND stats are
+    bit-exact vs the monolithic collective under BOTH rounding modes —
+    every rounding-bit draw (dispatch and gather leg) is keyed by global
+    leaf index, so the bucket partition cannot move it."""
+    run_with_devices("""
+        import jax, repro.compat
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.fixed_point import FixedPointFormat
+        from repro.dist import collectives, overlap
+
+        mesh = jax.make_mesh((8,), ("data",))
+        tree = {"a": jax.random.normal(jax.random.key(0), (8, 37, 5)) * .2,
+                "b": jax.random.normal(jax.random.key(1), (8, 3)) * .1,
+                "c": jax.random.normal(jax.random.key(2), (8, 300)) * .3,
+                "d": jax.random.normal(jax.random.key(3), (8, 1000)) * .05}
+        fmts = {
+            "grouped": FixedPointFormat(jnp.full((4,), 3, jnp.int32),
+                                        jnp.full((4,), 5, jnp.int32)),
+            "scalar": FixedPointFormat.create(3, 5)}
+        key = jax.random.key(7)
+        for label, fmt in fmts.items():
+            for mode in ("nearest", "stochastic"):
+                def mono(t, _f=fmt, _m=mode):
+                    return collectives.dps_allreduce_mean_tree(
+                        t, _f, "data", key, mode=_m)
+                def buck(t, _f=fmt, _m=mode):
+                    return overlap.bucketed_allreduce_mean_tree(
+                        t, _f, "data", key, mode=_m, target_elems=512)
+                sm = lambda f: jax.jit(jax.shard_map(
+                    f, mesh=mesh, in_specs=(P("data"),),
+                    out_specs=(P(), P()), check_vma=False))
+                m, s1 = sm(mono)(tree)
+                b, s2 = sm(buck)(tree)
+                for x, y in zip(jax.tree.leaves(m), jax.tree.leaves(b)):
+                    assert jnp.array_equal(x, y), (label, mode)
+                for x, y in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+                    assert jnp.array_equal(x, y), (label, mode, "stats")
         print("OK")
         """)
 
