@@ -9,7 +9,13 @@ flat-concat bytes) is diffable across PRs.  The full raw payloads stay in
 ``results/bench/*.json`` as before; this file only carries the numbers a
 reviewer should watch, under keys that do not churn.
 
+``BENCH_serve.json`` rides the same mechanism for the serving engine
+(:mod:`benchmarks.bench_serve`): tokens/s and per-token latency for
+continuous vs serial batching, and cache-HBM bytes per decoded token for
+int8-paged vs fp32-contiguous — ``--serve-only`` emits just that file.
+
   PYTHONPATH=src python -m benchmarks.run_all --collectives-only
+  PYTHONPATH=src python -m benchmarks.run_all --serve-only
   BENCH_QUICK=0 PYTHONPATH=src python -m benchmarks.run_all   # full scale
 """
 
@@ -29,6 +35,7 @@ import sys
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 ARTIFACT = os.path.join(REPO_ROOT, "BENCH_collectives.json")
+SERVE_ARTIFACT = os.path.join(REPO_ROOT, "BENCH_serve.json")
 
 # bump ONLY when a key is renamed/removed; adding keys is schema-compatible
 # v2: adds the overlap walltime block (overlap_ms_per_step,
@@ -90,28 +97,44 @@ def main(argv=None):
     ap.add_argument("--collectives-only", action="store_true",
                     help="run only the wire-pipeline benchmark (the one "
                          "that feeds BENCH_collectives.json)")
+    ap.add_argument("--serve-only", action="store_true",
+                    help="run only the serving benchmark (the one that "
+                         "feeds BENCH_serve.json)")
     ap.add_argument("--out", default=ARTIFACT)
+    ap.add_argument("--serve-out", default=SERVE_ARTIFACT)
     args = ap.parse_args(argv)
 
     import jax  # noqa: F401  (device count fixed by the XLA flag above)
-    from benchmarks import bench_collectives
 
     failures = []
-    res = bench_collectives.run()
-    if res.get("skipped"):
-        print("collectives benchmark skipped:", res.get("note"))
-        return 1
-    claims = res.get("claims", {})
-    if not all(claims.values()):
-        failures.append(("collectives", claims))
+    if not args.serve_only:
+        from benchmarks import bench_collectives
+        res = bench_collectives.run()
+        if res.get("skipped"):
+            print("collectives benchmark skipped:", res.get("note"))
+            return 1
+        claims = res.get("claims", {})
+        if not all(claims.values()):
+            failures.append(("collectives", claims))
 
-    with open(args.out, "w") as f:
-        json.dump(collectives_summary(res), f, indent=1, default=float,
-                  sort_keys=True)
-        f.write("\n")
-    print(f"wrote {args.out}")
+        with open(args.out, "w") as f:
+            json.dump(collectives_summary(res), f, indent=1, default=float,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
 
     if not args.collectives_only:
+        from benchmarks import bench_serve
+        sres = bench_serve.run()
+        sclaims = sres.get("claims", {})
+        if not all(sclaims.values()):
+            failures.append(("serve", sclaims))
+        with open(args.serve_out, "w") as f:
+            json.dump(sres, f, indent=1, default=float, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.serve_out}")
+
+    if not (args.collectives_only or args.serve_only):
         # the remaining suites keep their own results/bench artifacts
         from benchmarks import run as run_mod
         try:

@@ -1,11 +1,14 @@
-"""Serving example: batched prefill + greedy decode with quantized KV cache.
+"""Serving example: continuous batching on a paged int8 KV cache.
 
-Demonstrates the inference side of the framework — the paper's quantizer
-applied to serving state.  With --quant-kv the cache is snapped to ⟨8,8⟩
-(int8-equivalent payload), halving KV HBM versus bf16.
+Runs the repro.serve engine on a synthetic many-user trace — requests
+with mixed prompt/generation lengths arrive over time, get admitted into
+free batch slots, and decode against int8 KV pages whose per-page
+⟨IL, FL⟩ formats are placed by the ``kv_cache`` precision domain.  The
+printed spread line shows the DPS signal at work: pages holding different
+content land on different grids.
 
-  PYTHONPATH=src python examples/serve_lm.py --arch llama3_2_3b
-  PYTHONPATH=src python examples/serve_lm.py --arch mamba2_1_3b  # O(1) state
+  PYTHONPATH=src python examples/serve_lm.py
+  PYTHONPATH=src python examples/serve_lm.py --kv-bits none  # fp32 pages
 """
 
 import sys
@@ -19,8 +22,8 @@ def main():
         argv = ["--arch", "llama3_2_3b"] + argv
     if "--smoke" not in argv:
         argv.append("--smoke")
-    serve.main(argv + ["--batch", "4", "--prompt-len", "16", "--gen", "12",
-                       "--quant-kv"])
+    serve.main(argv + ["--requests", "8", "--slots", "4", "--page-size", "4",
+                       "--max-prompt", "16", "--max-new", "12"])
 
 
 if __name__ == "__main__":

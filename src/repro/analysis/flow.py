@@ -46,6 +46,13 @@ propagates taint labels from those landmarks to prove four invariants:
     bodies do not double-count.  Both rules are vacuous (still marked
     checked only when bucket tags exist) on un-bucketed steps.
 
+``PF-KV-WIRE``
+    The serving-side invariant (:mod:`repro.serve`).  A paged-KV step
+    tags the page-pool writes and reads ``kv_page`` with the configured
+    wire width; at ``bits=8`` the tagged value must be int8 grid
+    integers — an fp32 page write/read means the decode step silently
+    fell back to an uncompressed cache while claiming int8 paging.
+
 Taint crosses ``pjit`` / ``shard_map`` / ``scan`` / ``while`` / ``cond``
 / custom-derivative sub-jaxprs.  ``wire_stats`` and ``prng`` survive all
 ops (stats get stacked and reduced; keys get folded); ``wire_payload``,
@@ -209,6 +216,17 @@ class _Walker:
                     (where, "decode_out" in in_taints))
             elif stage == "grad":
                 self.grad_buckets.add(b)
+        elif kind == "kv_page":
+            self.report.mark_checked("PF-KV-WIRE")
+            bits = int(params.get("bits", 0) or 0)
+            dtype = _aval_dtype(eqn.invars[0])
+            if bits == 8 and dtype is not None and dtype not in _INT8:
+                self.report.add(
+                    "PF-KV-WIRE",
+                    f"paged KV cache {params.get('stage', '?')} (domain "
+                    f"{dom!r}) claims {bits}-bit pages but carries {dtype} "
+                    f"— the page pool contract is int8 grid integers",
+                    where)
         elif kind == "stats_sink":
             self.report.mark_checked("PF-STATS-ROUTE")
             if not params.get("wire", False) and "wire_stats" in in_taints:

@@ -36,11 +36,27 @@ into a reusable engine over :class:`AuditClaims`:
     compiled HLO (``wire_grads`` → all-to-all, ``wire_params`` →
     all-gather).  A domain the config declares and the runtime engages
     but the HLO never serves is exactly the dryrun drift this PR closes.
+
+Serving-side rules (:func:`audit_decode_hlo`, the compiled paged decode
+step of :mod:`repro.serve` — the first non-training consumer):
+
+``HA-KV-DTYPE``
+    At ``kv_bits=8`` the compiled decode step must carry the KV page pool
+    as int8: some s8/u8 tensor at least as large as the stacked pool must
+    exist in the HLO (the pool threads the step as a loop carry).
+
+``HA-KV-F32-CACHE``
+    No f32 tensor as large as the pool may appear: the fused attention
+    dequantizes gathered pages in-register, so a pool-sized f32 array in
+    the compiled step means the int8 pages are being expanded into a
+    materialized fp32 cache in HBM — the exact cost the paged design
+    exists to avoid.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Dict, Optional, Tuple
 
 from repro.analysis.report import Report
@@ -165,4 +181,47 @@ def audit_hlo(hlo_text: str, claims: AuditClaims,
                 f"flattened through an fp32 intermediate instead of "
                 f"encoding straight into the int8 buffer", name)
 
+    return report
+
+
+_SHAPE_RE = re.compile(r"\b(f32|s8|u8)\[([0-9,]*)\]")
+
+
+def audit_decode_hlo(hlo_text: str, *, pool_elems: int, bits,
+                     name: str = "serve-decode") -> Report:
+    """Serving-side claims on a compiled paged decode step.
+
+    ``pool_elems`` is the element count of ONE stacked page pool (K or V:
+    ``n_layers · n_pages_total · page_size · kv_heads · head_dim``) — the
+    size scale that separates the cache from everything else in the step,
+    so tensor-size thresholds need no per-instruction attribution.
+    ``bits`` is the engine's ``kv_bits`` (8 or None); at ``None`` only the
+    vacuous dtype rule is skipped.
+    """
+    report = Report(name=name)
+    sizes: Dict[str, int] = {"f32": 0, "s8": 0, "u8": 0}
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes[dt] = max(sizes[dt], n)
+
+    if bits == 8:
+        report.mark_checked("HA-KV-DTYPE", "HA-KV-F32-CACHE")
+        big_i8 = max(sizes["s8"], sizes["u8"])
+        if big_i8 < pool_elems:
+            report.add(
+                "HA-KV-DTYPE",
+                f"pool holds {pool_elems} elements but the largest int8 "
+                f"tensor in the compiled decode step has {big_i8} — the "
+                f"paged KV cache is not stored as int8 grid integers", name)
+        if sizes["f32"] >= pool_elems:
+            report.add(
+                "HA-KV-F32-CACHE",
+                f"a {sizes['f32']}-element f32 tensor (>= the "
+                f"{pool_elems}-element pool) appears in the compiled decode "
+                f"step — int8 pages are being dequantized into a "
+                f"materialized fp32 cache instead of in-register", name)
     return report

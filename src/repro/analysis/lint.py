@@ -36,6 +36,13 @@ The mode grid:
 * ``zero-overlap``   — ZeRO-1 + the backward-overlapped bucketed wire:
                        one int8 reduce-scatter per bucket in backward
                        ready order over the bucketed aligned layout.
+* ``serve-decode``   — the serving engine's paged decode step
+                       (:mod:`repro.serve`): flow proves the kv_page
+                       wire contract (PF-KV-WIRE), the HLO audit proves
+                       the pool stays int8 with no materialized fp32
+                       cache (HA-KV-DTYPE / HA-KV-F32-CACHE), and the
+                       kernel pass checks the fused paged-attention and
+                       page-encode launches at production dims.
 
 ``--wire-overlap on`` rebuilds the ``tree`` and ``per-layer`` cells with
 the backward-overlapped bucketed wire (:mod:`repro.dist.overlap`) — the
@@ -63,7 +70,7 @@ from repro.core import qtrain
 from repro.dist import collectives
 
 MODES = ("baseline", "tree", "per-layer", "zero", "zero-per-layer",
-         "zero-overlap")
+         "zero-overlap", "serve-decode")
 
 
 def _data_mesh():
@@ -252,10 +259,63 @@ def _step_reports(step, abstract_args, qcfg, mesh, mode: str, params,
     return reports
 
 
+def _serve_cell(config: str) -> List[Report]:
+    """The serving decode step: flow + HLO at smoke scale (the wire
+    contract is size-independent), kernel geometry at production dims
+    (the TPU tiling is what production would launch)."""
+    from repro.configs.base import get_config, smoke
+    from repro.kernels import ops
+    from repro.serve import EngineConfig, PagedLayout, analysis_decode
+
+    arch = "llama3_2_3b" if config == "lenet" else config
+    cfg = smoke(get_config(arch))
+    # pool sized so one stacked page pool out-counts every legit f32
+    # tensor in the smoke step (the 32k-element embed table is largest) —
+    # the F32-CACHE threshold then cleanly separates a dequantized pool
+    # from model weights
+    lay = PagedLayout(page_size=4, n_pages=192, batch_slots=4,
+                      max_pages_per_seq=8, max_prompt=16)
+    ecfg = EngineConfig(layout=lay, kv_bits=8, attn_backend="jnp",
+                        encode_backend="jnp")
+    fn, args = analysis_decode(cfg, ecfg)
+    name = f"{arch}/serve-decode"
+
+    flow_rep = flow.analyze_jaxpr(jax.make_jaxpr(fn)(*args),
+                                  name=f"{name}/flow")
+    if "PF-KV-WIRE" not in flow_rep.checked:
+        flow_rep.add("PF-KV-WIRE",
+                     "decode step never tags its KV pages (kv_page "
+                     "landmarks absent) — the page wire contract is "
+                     "unverifiable", name)
+    reports = [flow_rep]
+
+    pool_elems = (cfg.n_layers * lay.n_pages_total * lay.page_size
+                  * cfg.n_kv_heads * cfg.head_dim)
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    reports.append(hlo_audit.audit_decode_hlo(
+        hlo, pool_elems=pool_elems, bits=8, name=f"{name}/hlo"))
+
+    prod = get_config(arch)
+    B, P, ps, n_pages = 8, 16, 128, 512
+    page_elems = ps * prod.n_kv_heads * prod.head_dim
+    reports.append(kernel_checks.check_call(
+        ops.paged_attn_call_geometry(B, P, n_pages + 1, ps,
+                                     prod.n_kv_heads, prod.head_dim),
+        expected_groups=n_pages + 1, name=f"{name}/attn-kernel"))
+    groups = 2 * prod.n_layers * (P // 2)   # one admission's page encode
+    reports.append(kernel_checks.check_call(
+        ops.group_wire_call_geometry(groups * page_elems, groups,
+                                     page_elems),
+        expected_groups=groups, name=f"{name}/encode-kernel"))
+    return reports
+
+
 def lint_cell(config: str, mode: str, mesh=None,
               wire_controller: str = "flexpoint",
               seq: int = 128, wire_overlap: bool = False) -> List[Report]:
     """All three passes over one (config, mode) cell; returns Reports."""
+    if mode == "serve-decode":
+        return _serve_cell(config)
     mesh = mesh or _data_mesh()
     if config == "lenet":
         return _lenet_cell(mode, mesh, wire_controller, wire_overlap)

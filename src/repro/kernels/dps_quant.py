@@ -164,6 +164,13 @@ KERNEL_SIGNATURES = {
         num_scalar_prefetch=2,
         scalar_operands=("fmt_tab[G,2]", "tile_group[T]"),
         grouped=True),
+    # body lives in repro.kernels.paged_attn (the serving decode step);
+    # declared here so kernel_checks sees every kernel in one registry
+    "_paged_attn_kernel": KernelSignature(
+        num_scalar_prefetch=3,
+        scalar_operands=("page_tab[B,P]", "fmt_tab[n_pages,2]",
+                         "seq_lens[B]"),
+        grouped=True),
 }
 
 

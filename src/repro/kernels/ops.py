@@ -117,6 +117,31 @@ def wire_reduce_call_geometry(n_ranks: int, chunk: int, n_groups: int,
         table_rows=n_groups, tile_group_len=tiles, quantum=quantum)
 
 
+def paged_attn_call_geometry(batch_slots: int, pages_per_seq: int,
+                             n_pages: int, page_size: int, kv_heads: int,
+                             head_dim: int) -> KernelCallGeometry:
+    """Geometry of a ``paged_attn_pallas`` decode launch (repro.serve).
+
+    Grid is (batch slot, logical page slot); the VMEM tile is one gathered
+    int8 KV page viewed as ``(page_size, kv_heads · head_dim)``, which must
+    respect the (32, 128) int8 minimum; the SMEM residents are the (B, P)
+    page table, the (n_pages, 2) per-page FL table and the (B,) lengths.
+    ``quantum`` is the page's element count — also the grouped page-encode
+    codec's quantum, so one declaration covers both launches' tiling.
+    """
+    return KernelCallGeometry(
+        kernel="_paged_attn_kernel",
+        grid=(batch_slots, pages_per_seq),
+        block=(page_size, kv_heads * head_dim),
+        out_dtype="float32",
+        num_scalar_prefetch=3,
+        scalar_shapes=((batch_slots, pages_per_seq), (n_pages, 2),
+                       (batch_slots,)),
+        table_rows=n_pages,
+        tile_group_len=batch_slots * pages_per_seq,
+        quantum=page_size * kv_heads * head_dim)
+
+
 def bucketed_wire_call_geometries(bucket_leaf_sizes, n_ranks: int,
                                   quantum: int = DEFAULT_GROUP_QUANTUM
                                   ) -> Tuple[KernelCallGeometry, ...]:

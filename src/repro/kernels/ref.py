@@ -87,6 +87,22 @@ def dps_wire_reduce_ref(wire: jax.Array, fl: jax.Array,
     return (dec.sum(axis=0) / n).reshape(chunk)
 
 
+def paged_decode_attn_ref(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, fmt: jax.Array,
+                          ptab: jax.Array, lens: jax.Array,
+                          *, scale: float) -> jax.Array:
+    """Oracle for the fused paged decode-attention kernel.
+
+    (B, H, Dh) fp32 out of int8 (or fp32 at ``bits=None``) KV page pools,
+    a (B, P) page table and per-page FL rows — one page dequantized per
+    scan step (the fp32 cache never materializes), online softmax with the
+    SAME shared page-step math as the kernel grid, hence bit-exact against
+    ``paged_attn_pallas`` in interpret mode.
+    """
+    from repro.kernels.paged_attn import _paged_attn_jnp
+    return _paged_attn_jnp(q, k_pages, v_pages, fmt, ptab, lens, scale=scale)
+
+
 def stats_from_vector(vec: jax.Array) -> QuantStats:
     return QuantStats(count=vec[0], nonzero=vec[1], overflow=vec[2],
                       abs_err_sum=vec[3], rel_err_sum=vec[4], abs_sum=vec[5],

@@ -1,111 +1,125 @@
-"""Serving driver: batched prefill + greedy decode with a quantized KV cache.
+"""Serving driver: the continuous-batching engine on a synthetic user trace.
 
-Implements the inference side of the framework: continuous batches of
-requests are prefillled once, then decoded step-by-step with the KV cache
-donated through each step (no reallocation).  With ``--quant-kv`` the cache
-values are snapped to the DPS activation grid at write time — the paper's
-quantizer applied to serving state (beyond-paper; halves cache HBM at
-⟨8,8⟩).
+Drives :mod:`repro.serve` — prefill/decode split, strict-FCFS admission
+into free batch slots, paged int8 KV cache under per-page ⟨IL, FL⟩ from
+the ``kv_cache`` precision domain, fused paged decode attention.  The
+trace is many users with mixed prompt/generation lengths and Poisson
+arrivals, so slots churn: the engine retires finished rows and admits new
+requests without recompiling (page tables and positions are step inputs).
 
 Smoke scale (CPU container):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --smoke \
-      --batch 4 --prompt-len 16 --gen 16
+      --requests 8 --slots 4 --page-size 4
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+from collections import Counter
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+import jax
 
 from repro.configs.base import get_config, smoke as smoke_cfg
-from repro.core import fixed_point as fxp
-from repro.core.dps import DomainSpec, DPSHyper, PrecisionPlan
-from repro.launch import specs as specs_lib
 from repro.models import registry
 from repro.models.common import init_params
+from repro.serve import (Engine, EngineConfig, PagedLayout, supports_paging,
+                         synthetic_trace)
+
+
+def build_layout(args) -> PagedLayout:
+    ps = args.page_size
+    max_prompt = -(-args.max_prompt // ps) * ps     # round up to a page
+    prompt_pages = max_prompt // ps
+    pages_per_seq = max(prompt_pages + -(-args.max_new // ps) + 1,
+                        args.pages_per_seq)
+    n_pages = args.pages or max(args.slots * pages_per_seq,
+                                2 * prompt_pages)
+    return PagedLayout(page_size=ps, n_pages=n_pages,
+                       batch_slots=args.slots,
+                       max_pages_per_seq=pages_per_seq,
+                       max_prompt=max_prompt)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--quant-kv", action="store_true")
-    ap.add_argument("--kv-format", default="8,8",
-                    help="IL,FL of the kv_cache precision domain used by "
-                         "--quant-kv (static controller; <8,8> halves "
-                         "cache HBM)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="synthetic trace length (distinct users)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent decode rows (compiled batch)")
+    ap.add_argument("--page-size", type=int, default=4,
+                    help="tokens per KV page (one page = one <IL,FL> group)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="pool size in pages (0 = derive from slots)")
+    ap.add_argument("--pages-per-seq", type=int, default=0,
+                    help="page-table width floor per row")
+    ap.add_argument("--max-prompt", type=int, default=16,
+                    help="compiled prompt length ceiling")
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="trace generation-length ceiling")
+    ap.add_argument("--min-prompt", type=int, default=4)
+    ap.add_argument("--min-new", type=int, default=4)
+    ap.add_argument("--mean-gap", type=float, default=0.5,
+                    help="mean inter-arrival gap in engine steps")
+    ap.add_argument("--kv-bits", default="8",
+                    help="8 = int8 DPS pages; none = fp32 pages (parity "
+                         "baseline)")
+    ap.add_argument("--serial", action="store_true",
+                    help="one request at a time (continuous batching off)")
+    ap.add_argument("--attn-backend", default="auto",
+                    choices=["auto", "kernel", "jnp"])
+    ap.add_argument("--encode-backend", default="auto",
+                    choices=["auto", "kernel", "jnp"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_cfg(cfg)
+    if not supports_paging(cfg):
+        raise SystemExit(f"{cfg.name}: family {cfg.family!r} has no paged "
+                         f"decode path (GQA models only)")
     mod = registry(cfg.family)
     params = init_params(jax.random.key(args.seed), mod.model_defs(cfg))
-    max_seq = args.prompt_len + args.gen
 
-    key = jax.random.key(args.seed + 1)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
-    extras = {}
-    if cfg.family == "encdec":
-        extras["frames"] = jax.random.normal(
-            jax.random.fold_in(key, 1), (args.batch, cfg.enc_seq, cfg.d_model))
-    if cfg.family == "vlm":
-        extras["vision_embeds"] = jax.random.normal(
-            jax.random.fold_in(key, 2),
-            (args.batch, cfg.n_patches, cfg.d_model))
+    layout = build_layout(args)
+    kv_bits = None if args.kv_bits.lower() in ("none", "0", "32") else \
+        int(args.kv_bits)
+    eng = Engine(cfg, params, EngineConfig(
+        layout=layout, kv_bits=kv_bits, attn_backend=args.attn_backend,
+        encode_backend=args.encode_backend,
+        max_concurrency=1 if args.serial else None))
 
-    t0 = time.time()
-    logits, cache, pos = jax.jit(
-        lambda p, t: mod.prefill(cfg, p, t, max_seq, **extras))(params, prompts)
-    t_prefill = time.time() - t0
+    reqs = synthetic_trace(
+        args.requests, cfg.vocab,
+        prompt_lens=(args.min_prompt, min(args.max_prompt,
+                                          layout.max_prompt)),
+        new_tokens=(args.min_new, args.max_new),
+        mean_gap=args.mean_gap, seed=args.seed + 1)
+    report = eng.run(reqs)
 
-    # serving-side precision domain: the KV cache runs its own registry
-    # entry (static by default — serving has no train-step feedback loop to
-    # drive a dynamic controller; swap the kind here if one appears).
-    kv_il, kv_fl = (int(t) for t in args.kv_format.split(","))
-    plan = PrecisionPlan.of(kv_cache=DomainSpec(
-        "static", DPSHyper(il_init=kv_il, fl_init=kv_fl)))
-    kv_bundle = plan.init()
-    qfmt = plan.formats(kv_bundle)["kv_cache"]
-    if args.quant_kv:
-        print(f"kv_cache domain: {plan.spec('kv_cache').controller} "
-              f"<{kv_il},{kv_fl}>")
-
-    @jax.jit
-    def step(params, tok, cache, pos, key):
-        logits, cache = mod.decode_step(cfg, params, tok, cache, pos)
-        if args.quant_kv:
-            cache = jax.tree.map(
-                lambda c: fxp.quantize(c, qfmt, mode="stochastic",
-                                       key=key, compute_stats=False)[0]
-                if c.ndim >= 3 and c.dtype != jnp.int32 else c, cache)
-        return jnp.argmax(logits, -1).astype(jnp.int32)[:, None], cache, pos + 1
-
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    out_toks = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        tok, cache, pos = step(params, tok, cache, pos,
-                               jax.random.fold_in(key, 100 + i))
-        out_toks.append(tok)
-    toks = jnp.concatenate(out_toks, axis=1)
-    t_decode = time.time() - t0
-    tput = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-
-    print(f"prefill {args.batch}×{args.prompt_len} in {t_prefill:.3f}s")
-    print(f"decode  {args.gen - 1} steps: {t_decode:.3f}s "
-          f"({tput:.1f} tok/s{' quant-kv' if args.quant_kv else ''})")
-    print("sample:", np.asarray(toks[0])[:16].tolist())
-    return toks
+    m = report.metrics
+    bits = "int8" if kv_bits == 8 else "fp32"
+    mode = "serial" if args.serial else "continuous"
+    print(f"layout: {layout.n_pages} pages × {layout.page_size} tok, "
+          f"{layout.batch_slots} slots ({mode}, {bits} pages, "
+          f"attn={eng._attn_backend}, encode={eng._enc_backend})")
+    print(f"served {len(reqs)} requests, {int(m['total_tokens'])} tokens "
+          f"in {m['wall_s']:.3f}s -> {m['tokens_per_s']:.1f} tok/s")
+    print(f"decode: {int(m['decode_steps'])} steps, mean occupancy "
+          f"{m['mean_occupancy']:.2f}/{layout.batch_slots}, per-token "
+          f"p50 {m['p50_ms_per_token']:.2f}ms p95 {m['p95_ms_per_token']:.2f}ms")
+    if report.format_spread:
+        spread = Counter(report.format_spread)
+        total = sum(spread.values())
+        pretty = ", ".join(f"{k}:{v}" for k, v in spread.most_common())
+        print(f"per-page <IL,FL> spread over {total} live page-rows: "
+              f"{pretty}")
+    sample = report.tokens[reqs[0].rid]
+    print("sample:", np.asarray(sample)[:16].tolist())
+    return report
 
 
 if __name__ == "__main__":

@@ -186,12 +186,18 @@ def gqa_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
               *, positions: jax.Array, mode: str = "train",
               cache: Optional[Tuple[jax.Array, jax.Array]] = None,
               cache_pos=None, kv_x: Optional[jax.Array] = None,
-              causal: bool = True):
+              causal: bool = True, paged_ptab: Optional[jax.Array] = None,
+              paged_backend: str = "auto"):
     """Grouped-query attention.  ``kv_x`` switches to cross-attention.
 
     ``cache`` = (k, v) each (B, max_seq, KV, Dh); decode writes the new
     token at ``cache_pos`` and attends over [0, cache_pos].
-    Returns ``(out, new_cache)``."""
+
+    ``paged_ptab`` (serving, ``mode="decode"`` only) switches to the paged
+    KV pool: ``cache`` is then this layer's ``(k_pages, v_pages, k_fmt,
+    v_fmt)`` slice — (n_pages, page, KV, Dh) pools plus (n_pages, 2)
+    per-page ⟨IL, FL⟩ rows — and ``paged_ptab`` the (B, P) page table
+    (see repro.serve).  Returns ``(out, new_cache)``."""
     B, Sq, D = x.shape
     H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     G = H // KV
@@ -218,6 +224,9 @@ def gqa_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
     if mode == "decode_static":
         ck, cv = cache                                  # (B, S, KV, Dh)
         out = _decode_attn(q.reshape(B, Sq, KV, G, Dh), ck, cv, None, scale)
+    elif mode == "decode" and paged_ptab is not None:
+        out, new_cache = _paged_decode(cache, q, k, v, cache_pos, paged_ptab,
+                                       paged_backend, scale)
     elif mode == "decode":
         ck, cv = cache
         upd = lambda c, new: jax.vmap(
@@ -245,6 +254,59 @@ def gqa_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
     if cfg.attn_bias:
         out = out + p["bo"]
     return logical_constraint(out, "batch", "tp_seq", "embed"), new_cache
+
+
+def _paged_decode(cache, q, k, v, cache_pos, ptab, backend, scale):
+    """Serving decode against the paged KV pool (repro.serve).
+
+    Writes the new token's K/V into its page — quantized onto the page's
+    own ⟨IL, FL⟩ grid when the pool is int8 — then runs the fused
+    dequantizing paged attention over the page table.  Positions ≥
+    ``cache_pos[b] + 1`` are masked inside the kernel, so page-table
+    entries past a row's last page (the serve layer's trash page) never
+    reach the output.
+    """
+    from repro.core import fixed_point as fxp
+    from repro.core import tagging
+    from repro.kernels import paged_attn
+
+    k_pg, v_pg, k_fmt, v_fmt = cache
+    _, ps, KV, Dh = k_pg.shape
+    B = q.shape[0]
+    int8 = k_pg.dtype == jnp.int8
+    bits = 8 if int8 else 0
+
+    slot = cache_pos // ps
+    phys = jnp.take_along_axis(ptab, slot[:, None], axis=1)[:, 0]   # (B,)
+    off = cache_pos % ps
+
+    def write(pool, fmt_tab, new):
+        new = new[:, 0].astype(jnp.float32)                # (B, KV, Dh)
+        if int8:
+            rows = fmt_tab[phys]                           # (B, 2) [IL, FL]
+            fmt = fxp.FixedPointFormat(rows[:, 0], rows[:, 1])
+            vals, _ = fxp.wire_quantize(new.reshape(B, KV * Dh), fmt,
+                                        mode=fxp.ROUND_NEAREST,
+                                        compute_stats=False)
+        else:
+            vals = new.reshape(B, KV * Dh)
+        vals = tagging.tag(vals, "kv_page", domain="kv_cache",
+                           stage="write", bits=bits)
+        return pool.at[phys, off].set(
+            vals.reshape(B, KV, Dh).astype(pool.dtype))
+
+    k_pg = write(k_pg, k_fmt, k)
+    v_pg = write(v_pg, v_fmt, v)
+
+    flt = jnp.stack([k_fmt[:, 1], v_fmt[:, 1]], axis=1)    # (n_pages, 2) FLs
+    k_read = tagging.tag(k_pg, "kv_page", domain="kv_cache",
+                         stage="read", bits=bits)
+    v_read = tagging.tag(v_pg, "kv_page", domain="kv_cache",
+                         stage="read", bits=bits)
+    out = paged_attn.paged_decode_attn(
+        q[:, 0].astype(jnp.float32), k_read, v_read, flt, ptab,
+        cache_pos + 1, scale=scale, backend=backend)
+    return out[:, None].astype(q.dtype), (k_pg, v_pg, k_fmt, v_fmt)
 
 
 def _decode_attn(q, ck, cv, valid, scale):

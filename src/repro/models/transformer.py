@@ -85,7 +85,7 @@ def _norm(cfg, x, scale, bias=None):
 
 
 def _block(cfg: ModelConfig, p, x, *, positions, mode, cache, cache_pos,
-           qctx, layer_idx):
+           qctx, layer_idx, paged_ptab=None, paged_backend="auto"):
     """One transformer block.  Returns (x, new_cache, aux_loss, stats)."""
     h = _norm(cfg, x, p["norm1"], p.get("norm1_b"))
     if cfg.mla:
@@ -95,7 +95,8 @@ def _block(cfg: ModelConfig, p, x, *, positions, mode, cache, cache_pos,
     else:
         a_out, new_cache = attn_lib.gqa_apply(
             cfg, p["attn"], h, positions=positions, mode=mode, cache=cache,
-            cache_pos=cache_pos)
+            cache_pos=cache_pos, paged_ptab=paged_ptab,
+            paged_backend=paged_backend)
     x = x + a_out
 
     h = _norm(cfg, x, p["norm2"], p.get("norm2_b"))
@@ -115,7 +116,8 @@ def _block(cfg: ModelConfig, p, x, *, positions, mode, cache, cache_pos,
 
 
 def _run_stack(cfg: ModelConfig, layers, x, *, positions, mode="train",
-               cache=None, cache_pos=None, qctx=None):
+               cache=None, cache_pos=None, qctx=None, paged_ptab=None,
+               paged_backend="auto"):
     """Scan the layer stack.  Returns (x, new_cache, aux_loss, stats)."""
 
     def body(carry, xs):
@@ -123,7 +125,8 @@ def _run_stack(cfg: ModelConfig, layers, x, *, positions, mode="train",
         p, idx, layer_cache = xs
         h, new_cache, aux, stats = _block(
             cfg, p, h, positions=positions, mode=mode, cache=layer_cache,
-            cache_pos=cache_pos, qctx=qctx, layer_idx=idx)
+            cache_pos=cache_pos, qctx=qctx, layer_idx=idx,
+            paged_ptab=paged_ptab, paged_backend=paged_backend)
         return (h, aux_acc + aux, stats_acc.merge(stats)), new_cache
 
     if cfg.remat == "full":
@@ -145,7 +148,8 @@ def _run_stack(cfg: ModelConfig, layers, x, *, positions, mode="train",
 def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
             vision_embeds: Optional[jax.Array] = None, qctx=None,
             mode: str = "train", cache=None, cache_pos=None,
-            hidden_only: bool = False):
+            hidden_only: bool = False, paged_ptab=None,
+            paged_backend: str = "auto"):
     """Returns (logits | hidden, new_cache, aux_loss, act_stats).
 
     ``mode="prefill"`` unembeds the LAST position only (the serving loop
@@ -169,7 +173,8 @@ def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
 
     x, new_cache, aux_loss, stats = _run_stack(
         cfg, params["layers"], x, positions=positions, mode=mode,
-        cache=cache, cache_pos=cache_pos, qctx=qctx)
+        cache=cache, cache_pos=cache_pos, qctx=qctx, paged_ptab=paged_ptab,
+        paged_backend=paged_backend)
 
     x = _norm(cfg, x, params["final_norm"])
     if hidden_only:
@@ -258,6 +263,23 @@ def decode_step(cfg: ModelConfig, params, tokens: jax.Array, cache, pos,
     logits, new_cache, _, _ = forward(cfg, params, tokens, qctx=qctx,
                                       mode="decode", cache=cache,
                                       cache_pos=pos)
+    return logits[:, -1], new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params, tokens: jax.Array, cache,
+                      ptab: jax.Array, pos: jax.Array, *,
+                      backend: str = "auto", qctx=None):
+    """One token per row against the paged KV pool (repro.serve).
+
+    ``cache``: the serve layer's per-layer ``(k_pages, v_pages, k_fmt,
+    v_fmt)`` stacked over layers (leading dim L — scan xs/ys, exactly like
+    the contiguous cache).  ``ptab`` (B, P) int32 logical→physical page
+    table shared by every layer; ``pos`` (B,) absolute write positions.
+    Returns (logits (B, vocab), new_cache)."""
+    logits, new_cache, _, _ = forward(cfg, params, tokens, qctx=qctx,
+                                      mode="decode", cache=cache,
+                                      cache_pos=pos, paged_ptab=ptab,
+                                      paged_backend=backend)
     return logits[:, -1], new_cache
 
 

@@ -1,0 +1,23 @@
+"""repro.serve — continuous-batching LM inference on a paged int8 KV cache.
+
+The serving-side consumer of the DPS machinery: pages are int8 grid
+integers under per-page ⟨IL, FL⟩ formats owned by the ``kv_cache``
+precision domain, encoded by the PR 5 grouped wire codec and dequantized
+in-register by the fused paged decode-attention kernel
+(:mod:`repro.kernels.paged_attn`).  See ``README.md`` in this package.
+"""
+
+from repro.serve.cache import (DEFAULT_IL_INIT, KV_DOMAIN, PagedKV,
+                               fmt_tables, init_pool, kv_plan,
+                               write_prompt_pages)
+from repro.serve.engine import (Engine, EngineConfig, ServeReport,
+                                analysis_decode, supports_paging)
+from repro.serve.page_table import PageAllocator, PagedLayout, page_rows
+from repro.serve.scheduler import Request, Scheduler, synthetic_trace
+
+__all__ = [
+    "DEFAULT_IL_INIT", "KV_DOMAIN", "PagedKV", "fmt_tables", "init_pool",
+    "kv_plan", "write_prompt_pages", "Engine", "EngineConfig",
+    "ServeReport", "analysis_decode", "supports_paging", "PageAllocator",
+    "PagedLayout", "page_rows", "Request", "Scheduler", "synthetic_trace",
+]

@@ -1,0 +1,224 @@
+"""Paged int8 KV pool + page codec under the ``kv_cache`` precision domain.
+
+One page = one ⟨IL, FL⟩ group.  The ``kv_cache`` domain (PR 4's registry)
+gets a per-group flexpoint controller with ``2 · n_layers ·
+n_pages_total`` rows — one row per (kind ∈ {K, V}, layer, physical page),
+laid out by :func:`repro.serve.page_table.page_rows` — and the page encode
+is exactly the grouped wire codec of PR 5: ``fixed_point.wire_quantize``
+with a ``[G]``-leading format (the jnp grouped reference) or the
+``[G, 2]`` SMEM-table Pallas kernel via ``ops.dps_quantize_wire_grouped``
+when the page element count meets the kernel's 4096-element tile quantum.
+
+Format placement is **content-driven and history-free**: when a prompt is
+encoded into freshly allocated pages, each written row's format comes from
+one controller update over a *fresh-init* state fed that page's measured
+stats (max|x| et al.), and rows reset to init when their page is freed.
+A page's ⟨IL, FL⟩ is therefore a pure function of its content — which is
+what makes continuous batching safe: a request's decode trajectory cannot
+depend on which physical pages it got or on its neighbors in the batch
+(the solo-equivalence property ``tests/test_serve.py`` pins).  Feeding
+the shared ``plan.update`` stream instead would decay every untouched
+row's EMA toward ``il_min`` on each admission — history leaking across
+requests.  Pages allocated for *generated* tokens keep the init format
+(⟨il_init, 8 − il_init⟩) for their lifetime; re-placing them from
+decode-time stats is the ROADMAP follow-up.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import fixed_point as fxp
+from repro.core import tagging
+from repro.core.dps import DomainSpec, PrecisionPlan, wire_hyper
+from repro.core.fixed_point import FixedPointFormat, QuantStats
+from repro.kernels import ops
+from repro.serve.page_table import PagedLayout
+
+KV_DOMAIN = "kv_cache"
+WIRE_BITS = 8
+# init (and generated-page) format: ⟨2, 6⟩ — range ±2, step 1/64
+DEFAULT_IL_INIT = 2
+
+
+class PagedKV(NamedTuple):
+    """The page pools, stacked over layers (scan xs/ys like the contiguous
+    cache): ``(n_layers, n_pages_total, page_size, KV, Dh)`` each, int8
+    grid integers at ``bits=8``, fp32 at ``bits=None``."""
+
+    k_pages: jax.Array
+    v_pages: jax.Array
+
+
+def n_rows(cfg: ModelConfig, layout: PagedLayout) -> int:
+    return 2 * cfg.n_layers * layout.n_pages_total
+
+
+def kv_plan(cfg: ModelConfig, layout: PagedLayout,
+            il_init: int = DEFAULT_IL_INIT) -> PrecisionPlan:
+    """The serving precision plan: one wire domain, one row per page view.
+
+    ``slack=0.0``: the radix covers exactly the measured page max — at 8
+    bits the KV grid is too narrow for headroom, and unlike gradients the
+    page content is already known when the format is placed (encode
+    happens after measurement), so only the exact max element can clip (by
+    one step).
+    """
+    return PrecisionPlan.of(**{KV_DOMAIN: DomainSpec(
+        "flexpoint", wire_hyper(WIRE_BITS, il_init, slack=0.0),
+        groups=n_rows(cfg, layout), wire=True)})
+
+
+def init_pool(cfg: ModelConfig, layout: PagedLayout, bits) -> PagedKV:
+    dt = jnp.int8 if bits == 8 else jnp.float32
+    shp = (cfg.n_layers, layout.n_pages_total, layout.page_size,
+           cfg.n_kv_heads, cfg.head_dim)
+    return PagedKV(jnp.zeros(shp, dt), jnp.zeros(shp, dt))
+
+
+def fmt_tables(state, cfg: ModelConfig,
+               layout: PagedLayout) -> Tuple[jax.Array, jax.Array]:
+    """Controller rows → the decode step's per-layer (n_pages_total, 2)
+    [IL, FL] tables for K and V (leading L for the layer scan)."""
+    L, n_tot = cfg.n_layers, layout.n_pages_total
+    il = state.il.reshape(2, L, n_tot)
+    fl = state.fl.reshape(2, L, n_tot)
+    k_fmt = jnp.stack([il[0], fl[0]], axis=-1).astype(jnp.int32)
+    v_fmt = jnp.stack([il[1], fl[1]], axis=-1).astype(jnp.int32)
+    return k_fmt, v_fmt
+
+
+def zero_fmt_tables(cfg: ModelConfig,
+                    layout: PagedLayout) -> Tuple[jax.Array, jax.Array]:
+    """``bits=None`` tables: FL = 0 decodes fp32 pool values by ×1.0 exactly."""
+    z = jnp.zeros((cfg.n_layers, layout.n_pages_total, 2), jnp.int32)
+    return z, z
+
+
+def encode_pages(xg: jax.Array, fmt: FixedPointFormat, mask: jax.Array, *,
+                 backend: str, quantum: int) -> jax.Array:
+    """The page codec: (G_w, page_elems) fp32 → int8 grid integers.
+
+    ``backend="kernel"`` runs the PR 5 grouped SMEM-table kernel (one tile
+    per page; requires ``quantum % 4096 == 0``); ``"jnp"`` is the bit-exact
+    grouped reference (``wire_quantize`` with a [G]-leading format).
+    ``mask`` zeroes padding out of the wire in both.
+    """
+    if backend == "kernel":
+        tg = jnp.arange(xg.shape[0], dtype=jnp.int32)
+        wire, _ = ops.dps_quantize_wire_grouped(
+            xg.reshape(-1), fmt, tg, mask=mask.reshape(-1),
+            stochastic=False, quantum=quantum, compute_stats=False)
+        return wire.reshape(xg.shape)
+    if backend != "jnp":
+        raise ValueError(f"unknown page-encode backend {backend!r}")
+    wire, _ = fxp.wire_quantize(xg, fmt, mode=fxp.ROUND_NEAREST,
+                                mask=mask, compute_stats=False)
+    return wire
+
+
+def _page_stats(xg: jax.Array, mask: jax.Array) -> QuantStats:
+    """Pre-encode per-page stats the flexpoint placement consumes."""
+    absx = jnp.abs(xg) * mask
+    z = jnp.zeros(xg.shape[:1], jnp.float32)
+    return QuantStats(
+        count=jnp.sum(mask, axis=1),
+        nonzero=jnp.sum((absx > 0.0).astype(jnp.float32), axis=1),
+        overflow=z, abs_err_sum=z, rel_err_sum=z,
+        abs_sum=jnp.sum(absx, axis=1),
+        max_abs=jnp.max(absx, axis=1))
+
+
+def _row_index(cfg: ModelConfig, layout: PagedLayout,
+               phys: jax.Array) -> jax.Array:
+    """(2, L, len(phys)) → flat (G_w,) domain rows (traced page_rows)."""
+    L, n_tot = cfg.n_layers, layout.n_pages_total
+    kinds = jnp.arange(2, dtype=jnp.int32)[:, None, None]
+    layers = jnp.arange(L, dtype=jnp.int32)[None, :, None]
+    return ((kinds * L + layers) * n_tot
+            + phys[None, None, :].astype(jnp.int32)).reshape(-1)
+
+
+def write_prompt_pages(cfg: ModelConfig, layout: PagedLayout, plan,
+                       pools: PagedKV, state, ck: jax.Array, cv: jax.Array,
+                       phys: jax.Array, plen: jax.Array, *,
+                       bits, encode_backend: str):
+    """Encode one prefilled (B=1) contiguous fp32 cache into its pages.
+
+    ``ck``/``cv``: (L, 1, max_prompt, KV, Dh) from the prefill forward.
+    ``phys``: (prompt_pages,) physical destinations for logical page slots
+    0..prompt_pages-1 — entries past the request's allocation point at the
+    trash page and carry no valid tokens.  ``plen``: traced prompt length.
+
+    Per written page (any page with a token < ``plen``): measure stats →
+    one fresh-init controller update → merge ONLY the written rows into
+    ``state`` → encode on the placed grid → scatter int8 wire into the
+    pools.  Pages without valid tokens (trash entries, generation-region
+    pages) contribute zero stats and keep their existing rows.
+
+    Returns ``(pools', state')``; ``state`` passes through at ``bits=None``.
+    """
+    L, ps = cfg.n_layers, layout.page_size
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+    Pp, n_tot = layout.prompt_pages, layout.n_pages_total
+    E = ps * KV * Dh
+    S = layout.max_prompt
+
+    x = jnp.stack([ck[:, 0], cv[:, 0]])                  # (2, L, S, KV, Dh)
+    tmask = (jnp.arange(S) < plen).astype(jnp.float32)
+    x = x.astype(jnp.float32) * tmask[None, None, :, None, None]
+    xg = x.reshape(2 * L * Pp, E)                        # (G_w, E)
+    mg = jnp.broadcast_to(
+        tmask.reshape(Pp, ps, 1),
+        (Pp, ps, KV * Dh)).reshape(Pp, E)
+    mg = jnp.broadcast_to(mg[None, None], (2, L, Pp, E)).reshape(2 * L * Pp, E)
+
+    if bits is None:
+        w = xg.reshape(2, L, Pp, ps, KV, Dh)
+        w = tagging.tag(w, "kv_page", domain=KV_DOMAIN, stage="write", bits=0)
+        return PagedKV(
+            pools.k_pages.at[:, phys].set(w[0].astype(pools.k_pages.dtype)),
+            pools.v_pages.at[:, phys].set(w[1].astype(pools.v_pages.dtype)),
+        ), state
+
+    rows = _row_index(cfg, layout, phys)                 # (G_w,)
+    G_tot = n_rows(cfg, layout)
+    zeros = jnp.zeros((G_tot,), jnp.float32)
+    st = _page_stats(xg, mg)
+    stream = QuantStats(
+        count=zeros.at[rows].add(st.count),
+        nonzero=zeros.at[rows].add(st.nonzero),
+        overflow=zeros, abs_err_sum=zeros, rel_err_sum=zeros,
+        abs_sum=zeros.at[rows].add(st.abs_sum),
+        max_abs=zeros.at[rows].max(st.max_abs))
+    stream = tagging.tag_tree(stream, "stats_sink", domain=KV_DOMAIN,
+                              wire=True, stream=KV_DOMAIN)
+
+    ctrl = plan.spec(KV_DOMAIN).make()
+    placed = ctrl.update(ctrl.init((G_tot,)), stream)
+    # a page is written iff it covers a token < plen (static per slot j)
+    live = (jnp.arange(Pp) * ps < plen).astype(jnp.float32)
+    written = zeros.at[rows].max(
+        jnp.broadcast_to(live[None, None], (2, L, Pp)).reshape(-1)) > 0.0
+    state = jax.tree.map(lambda s, n: jnp.where(written, n, s),
+                         state, placed)
+
+    fmt = FixedPointFormat(state.il[rows], state.fl[rows])
+    xin = tagging.tag(xg, "encode_in", domain=KV_DOMAIN)
+    wire = encode_pages(xin, fmt, mg, backend=encode_backend, quantum=E)
+    wire = tagging.tag(wire, "kv_page", domain=KV_DOMAIN, stage="write",
+                       bits=WIRE_BITS)
+    w = wire.reshape(2, L, Pp, ps, KV, Dh)
+    return PagedKV(pools.k_pages.at[:, phys].set(w[0]),
+                   pools.v_pages.at[:, phys].set(w[1])), state
+
+
+def reset_rows(plan, state, row_mask: jax.Array):
+    """Reset masked controller rows to init (page freed → history cleared)."""
+    ctrl = plan.spec(KV_DOMAIN).make()
+    fresh = ctrl.init(row_mask.shape)
+    return jax.tree.map(lambda f, s: jnp.where(row_mask, f, s), fresh, state)
