@@ -46,6 +46,15 @@ propagates taint labels from those landmarks to prove four invariants:
     bodies do not double-count.  Both rules are vacuous (still marked
     checked only when bucket tags exist) on un-bucketed steps.
 
+``PF-GUARD-TAINT``
+    The resilience invariant (:mod:`repro.resilience`).  A health-guard
+    degradation signal (tagged ``guard_sink``) must descend from
+    ``wire_stats`` taint in any wire-enabled step: a guard fed from
+    post-fallback values (zero stats fabricated after the fp32 branch)
+    or from constants would latch permanently or never trip.  Vacuous in
+    steps that never put payload on the wire (the tag sites only mark
+    engaged legs).
+
 ``PF-KV-WIRE``
     The serving-side invariant (:mod:`repro.serve`).  A paged-KV step
     tags the page-pool writes and reads ``kv_page`` with the configured
@@ -226,6 +235,16 @@ class _Walker:
                     f"paged KV cache {params.get('stage', '?')} (domain "
                     f"{dom!r}) claims {bits}-bit pages but carries {dtype} "
                     f"— the page pool contract is int8 grid integers",
+                    where)
+        elif kind == "guard_sink":
+            self.report.mark_checked("PF-GUARD-TAINT")
+            if self.uses_wire and "wire_stats" not in in_taints:
+                self.report.add(
+                    "PF-GUARD-TAINT",
+                    f"the health-guard signal for domain {dom!r} does not "
+                    f"descend from wire-leg statistics — a degradation "
+                    f"decision fed by post-fallback (or fabricated) values "
+                    f"can never see the storm it exists to detect",
                     where)
         elif kind == "stats_sink":
             self.report.mark_checked("PF-STATS-ROUTE")

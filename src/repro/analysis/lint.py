@@ -79,7 +79,8 @@ def _data_mesh():
 
 
 def _mode_qcfg(mode: str, n_ranks: int, wire_controller: str,
-               wire_overlap: bool = False) -> qtrain.QuantConfig:
+               wire_overlap: bool = False,
+               guards: bool = False) -> qtrain.QuantConfig:
     kw = dict(enabled=True, controller="paper",
               wire_controller=wire_controller)
     if mode in ("tree", "per-layer"):
@@ -89,6 +90,9 @@ def _mode_qcfg(mode: str, n_ranks: int, wire_controller: str,
         kw["grad_allreduce_bits"] = 8
         kw["zero_opt_shards"] = n_ranks
         kw["wire_overlap"] = mode == "zero-overlap"
+    if guards:
+        from repro.resilience import GuardConfig
+        kw["guards"] = GuardConfig()
     return qtrain.QuantConfig(**kw)
 
 
@@ -114,6 +118,15 @@ def _claims(qcfg: qtrain.QuantConfig, mesh, params,
             # to fp32 BY DESIGN — one declared fp32 gather, one s8 leg
             two_leg = False
             declared_f32 = 4.0 * part.padded_size * 1.25
+    if qcfg.guards is not None and engaged:
+        # a guarded step compiles the fp32 fallback branch of every wire
+        # cond ALONGSIDE the int8 branch (graceful degradation, see
+        # repro.resilience + dist/README.md): those bytes are declared
+        # capacity, not residual leakage.  Ring model: the non-ZeRO
+        # fallback all-reduce counts 2x its payload; the ZeRO fallback
+        # pair (reduce-scatter + all-gather) is 1x + 1x over the padded
+        # flat layout — both are 2 x 4 B x n_wire (x1.25 padding fudge).
+        declared_f32 += 2.0 * 4.0 * n_wire * 1.25
     # grouped (zero-f32-concat) is NOT claimed on the full step: model
     # activations legitimately concatenate in fp32.  The strict concat
     # claim runs on the isolated wire pipeline (_wire_pipeline_report).
@@ -190,12 +203,13 @@ def _wire_pipeline_report(mode: str, leaf_sizes, mesh, name: str,
 
 
 def _lenet_cell(mode: str, mesh, wire_controller: str,
-                wire_overlap: bool = False) -> List[Report]:
+                wire_overlap: bool = False,
+                guards: bool = False) -> List[Report]:
     from repro.models import lenet
     from repro.optim import SGDConfig, make_optimizer
 
     n = mesh.devices.size
-    qcfg = _mode_qcfg(mode, n, wire_controller, wire_overlap)
+    qcfg = _mode_qcfg(mode, n, wire_controller, wire_overlap, guards)
     params = lenet.init(jax.random.key(0))
     if "per-layer" in mode:
         qcfg = qcfg.with_per_layer_wire(params)
@@ -216,7 +230,8 @@ def _lenet_cell(mode: str, mesh, wire_controller: str,
 
 
 def _arch_cell(arch: str, mode: str, mesh, wire_controller: str,
-               seq: int, wire_overlap: bool = False) -> List[Report]:
+               seq: int, wire_overlap: bool = False,
+               guards: bool = False) -> List[Report]:
     from repro.configs.base import ShapeConfig, get_config, smoke
     from repro.launch import specs as specs_lib
     from repro.optim import SGDConfig, make_optimizer
@@ -227,7 +242,7 @@ def _arch_cell(arch: str, mode: str, mesh, wire_controller: str,
 
     n = mesh.devices.size
     shape = ShapeConfig("lint_train", "train", seq=seq, batch=n)
-    qcfg = _mode_qcfg(mode, n, wire_controller, wire_overlap)
+    qcfg = _mode_qcfg(mode, n, wire_controller, wire_overlap, guards)
     if "per-layer" in mode:
         qcfg = specs_lib.per_layer_wire_qcfg(cfg, qcfg)
     opt = make_optimizer(SGDConfig())
@@ -312,14 +327,16 @@ def _serve_cell(config: str) -> List[Report]:
 
 def lint_cell(config: str, mode: str, mesh=None,
               wire_controller: str = "flexpoint",
-              seq: int = 128, wire_overlap: bool = False) -> List[Report]:
+              seq: int = 128, wire_overlap: bool = False,
+              guards: bool = False) -> List[Report]:
     """All three passes over one (config, mode) cell; returns Reports."""
     if mode == "serve-decode":
         return _serve_cell(config)
     mesh = mesh or _data_mesh()
     if config == "lenet":
-        return _lenet_cell(mode, mesh, wire_controller, wire_overlap)
-    return _arch_cell(config, mode, mesh, wire_controller, seq, wire_overlap)
+        return _lenet_cell(mode, mesh, wire_controller, wire_overlap, guards)
+    return _arch_cell(config, mode, mesh, wire_controller, seq, wire_overlap,
+                      guards)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -345,6 +362,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "backward-overlapped bucketed wire (the "
                          "zero-overlap cell carries it intrinsically; "
                          "combined with --zero-opt this selects that cell)")
+    ap.add_argument("--guards", action="store_true",
+                    help="arm the repro.resilience health guards in every "
+                         "train cell: the flow pass then proves "
+                         "PF-GUARD-TAINT (degradation signals descend "
+                         "from wire-leg stats) and the HLO audit admits "
+                         "the compiled fp32 fallback branches as declared "
+                         "bytes under HA-F32-RESIDUAL")
     ap.add_argument("--seq", type=int, default=128,
                     help="sequence length for arch train cells")
     args = ap.parse_args(argv)
@@ -377,7 +401,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             try:
                 reports = lint_cell(config, mode, mesh,
                                     args.wire_controller, args.seq,
-                                    wire_overlap)
+                                    wire_overlap, args.guards)
             except Exception as e:          # a cell that cannot build IS a
                 n_viol += 1                 # lint failure, not a skip
                 print(f"ERROR {config}/{mode}: {e!r}", flush=True)

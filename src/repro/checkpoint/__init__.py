@@ -1,2 +1,3 @@
 from repro.checkpoint.ckpt import (AsyncCheckpointer, flatten_tree,
-                                   latest_step, restore, save, prune)
+                                   latest_step, restore, save, prune,
+                                   verify_step)

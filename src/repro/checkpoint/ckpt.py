@@ -2,7 +2,12 @@
 
 Layout:  <dir>/step_<N>/arrays.npz + manifest.json, written to a ``.tmp``
 sibling and ``os.rename``d into place — a crash mid-write never corrupts
-the latest checkpoint.  ``latest_step`` scans for complete manifests only.
+the latest checkpoint.  The manifest carries a per-array SHA-256 digest;
+``latest_step`` verifies the newest checkpoint end-to-end (npz readable,
+every key present, digests match) and walks back to the newest GOOD step
+past torn or bit-rotted directories, and ``restore`` re-verifies every
+array it actually reads — a corrupt checkpoint is detected, never silently
+loaded.
 
 Elastic restore: arrays are saved device-agnostic (host numpy) and restored
 via ``jax.device_put`` against the *target* sharding, so a run checkpointed
@@ -16,6 +21,7 @@ save, back-pressure on the next) and keeps the newest ``keep`` checkpoints.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -57,8 +63,12 @@ def _flatten(tree):
 flatten_tree = _flatten
 
 
+def _digest(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
 def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None):
-    """Atomic synchronous save."""
+    """Atomic synchronous save (per-array SHA-256 digests in the manifest)."""
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -67,7 +77,8 @@ def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None):
     flat = _flatten(tree)
     np.savez(os.path.join(tmp, "arrays.npz"), **flat)
     manifest = {"step": step, "keys": sorted(flat),
-                "meta": meta or {}, "version": 1}
+                "digests": {k: _digest(v) for k, v in flat.items()},
+                "meta": meta or {}, "version": 2}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -76,7 +87,34 @@ def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None):
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def verify_step(ckpt_dir: str, step: int) -> bool:
+    """True iff ``step_<N>`` is a complete, uncorrupted checkpoint: the
+    manifest parses, the npz opens, every manifest key is present, and
+    (version >= 2) every array matches its recorded SHA-256.  Any failure
+    — torn npz, flipped bytes, missing files — reads as False, never
+    raises: this is the probe ``latest_step`` uses to walk back to the
+    newest good step."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        digests = manifest.get("digests")
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            for key in manifest["keys"]:
+                arr = data[key]           # raises on truncated members
+                if digests is not None and _digest(arr) != digests[key]:
+                    return False
+        return True
+    except Exception:
+        return False
+
+
+def latest_step(ckpt_dir: str, verify: bool = True) -> Optional[int]:
+    """Newest restorable step.  With ``verify`` (the default) each
+    candidate is integrity-checked newest-first and corrupt/torn step
+    dirs are skipped — a host crash mid-write or disk corruption of the
+    newest checkpoint falls back to the previous good one instead of
+    poisoning the resume."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
@@ -84,7 +122,10 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         if name.startswith("step_") and not name.endswith(".tmp"):
             if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
                 steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    for s in sorted(steps, reverse=True):
+        if not verify or verify_step(ckpt_dir, s):
+            return s
+    return None
 
 
 def restore(ckpt_dir: str, step: int, template: Any,
@@ -105,6 +146,7 @@ def restore(ckpt_dir: str, step: int, template: Any,
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
+    digests = manifest.get("digests")  # absent on version-1 checkpoints
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
     shard_leaves = (jax.tree_util.tree_leaves(shardings)
@@ -119,6 +161,10 @@ def restore(ckpt_dir: str, step: int, template: Any,
                 raise KeyError(f"checkpoint missing array {key!r}")
         else:
             arr = data[key]
+            if digests is not None and _digest(arr) != digests.get(key):
+                raise ValueError(
+                    f"checkpoint array {key!r} fails its SHA-256 digest "
+                    f"(step {step} is corrupt — see ckpt.verify_step)")
         if (hasattr(leaf, "dtype")
                 and jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key)):
             out.append(jax.random.wrap_key_data(jax.numpy.asarray(arr)))

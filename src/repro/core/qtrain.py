@@ -135,6 +135,17 @@ class QuantConfig:
     # it has no readiness structure to exploit).
     wire_overlap: bool = False
     wire_bucket_elems: int = 0          # 0 -> overlap.DEFAULT_BUCKET_ELEMS
+    # Numeric health guards (repro.resilience): a GuardConfig arms the
+    # on-device step health monitor — loss/gradient NaN detection with a
+    # skip gate, per-wire-domain overflow-storm EWMAs, gradient-norm
+    # spike detection, controller rail bits — and the graceful
+    # degradation state machine that swaps a tripped wire domain's int8
+    # collective for its fp32 fallback through a traced flag (both
+    # branches live in the one compiled step; int8 re-arms after a
+    # cooldown of clean steps).  None (the default) leaves the step's
+    # jaxpr untouched; with guards armed and no fault the trajectory is
+    # bit-exact with the unguarded step (see tests/test_resilience.py).
+    guards: Optional[Any] = None
     # ZeRO-1: shard the optimizer state across the data axis into this many
     # slices (must equal the mesh's data-axis size when it engages).  The
     # param tree is flattened into a padded 1-D layout so non-divisible
@@ -240,6 +251,17 @@ def dps_restore_defaults(qcfg: QuantConfig, prefix: str = ".dps") -> dict:
             for k, v in flatten_tree(init_dps_bundle(qcfg)).items()}
 
 
+def guard_restore_defaults(qcfg: QuantConfig, prefix: str = ".guard") -> dict:
+    """Checkpoint back-compat defaults for the guard subtree: a run with
+    ``qcfg.guards`` armed resumes from a checkpoint written without guards
+    (the missing :class:`~repro.resilience.GuardState` initializes fresh).
+    Empty when guards are off."""
+    if qcfg.guards is None:
+        return {}
+    from repro.resilience import guards as guards_lib  # deferred
+    return guards_lib.guard_restore_defaults(qcfg.plan(), prefix)
+
+
 # ---------------------------------------------------------------------------
 # Activation tap: quantize forward, quantize the cotangent backward.
 # ---------------------------------------------------------------------------
@@ -337,9 +359,17 @@ class TrainState:
     rng: jax.Array
     # rolling telemetry (replicated scalars) for logging/benchmarks:
     last_loss: jax.Array
+    # health-guard state (repro.resilience.GuardState) when
+    # ``qcfg.guards`` is armed; None keeps the legacy six-field pytree
+    # (an empty subtree — old checkpoints restore without defaults).
+    guard: Any = None
 
     @staticmethod
     def create(params, opt_state, qcfg: QuantConfig, rng) -> "TrainState":
+        guard = None
+        if qcfg.guards is not None:
+            from repro.resilience import guards as guards_lib  # deferred
+            guard = guards_lib.init_guard_state(qcfg.plan())
         return TrainState(
             step=jnp.zeros((), jnp.int32),
             params=params,
@@ -347,6 +377,7 @@ class TrainState:
             dps=init_dps_bundle(qcfg),
             rng=rng,
             last_loss=jnp.zeros((), jnp.float32),
+            guard=guard,
         )
 
 
@@ -477,7 +508,8 @@ def zero_opt_state(optimizer, params, n_shards: int,
 
 
 def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
-                    accum_steps: int = 1, mesh=None, data_axis: str = "data"):
+                    accum_steps: int = 1, mesh=None, data_axis: str = "data",
+                    faults=None):
     """Build a quantized SGD/AdamW train step around ``loss_fn``.
 
     ``loss_fn(params, batch, qctx) -> (loss, aux)`` where ``aux`` is a dict
@@ -610,6 +642,30 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         bucket_elems = (qcfg.wire_bucket_elems
                         or overlap_lib.DEFAULT_BUCKET_ELEMS)
 
+    # Health guards + fault injection (repro.resilience).  Both are
+    # static decisions: guards/faults off leaves every body below — and
+    # with it the compiled step — exactly as it was.  ``sig`` extends the
+    # shard_map bodies with the extra signal plumbing (degrade flags in,
+    # nonfinite count / sharded grad norm out).
+    guards_on = qcfg.guards is not None
+    if guards_on or faults is not None:
+        from repro import resilience as rsl  # deferred: resilience imports core
+    sig = guards_on or faults is not None
+    wire_names = ()
+    gidx = pidx = 0
+    if guards_on:
+        wire_names = rsl.wire_domains(plan)
+        gidx = (wire_names.index("wire_grads")
+                if "wire_grads" in wire_names else 0)
+        pidx = (wire_names.index("wire_params")
+                if "wire_params" in wire_names else 0)
+    if (faults is not None and faults.wire_flip_at >= 0
+            and not (wire_sync and not wire_overlap and not zero_opt)):
+        raise ValueError(
+            "FaultPlan.wire_flip_at targets the monolithic tree "
+            "all-reduce payload; it needs an engaged compressed sync "
+            "without wire_overlap or zero_opt_shards")
+
     def _grads(qparams, batch, fmts, k_a, microbatch_idx, tap=None):
         qctx = None
         if qcfg.enabled and qcfg.policy.quantizes("acts"):
@@ -668,7 +724,8 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                                jax.random.fold_in(k_g, rank))
         return st
 
-    def _wire_synced_grads(qparams, batch, fmts, k_a, k_g, k_r):
+    def _wire_synced_grads(qparams, batch, fmts, k_a, k_g, k_r,
+                           deg_g=None, count=None):
         """Per-shard fwd/bwd + compressed gradient mean over ``data_axis``.
 
         Runs the whole gradient computation inside a full-manual
@@ -684,8 +741,20 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         them, and one compressed collective pair runs per bucket in that
         order — bit-exact vs the monolithic path under nearest rounding,
         identical dispatch-leg stats under both modes.
+
+        Guards armed: ``deg_g`` (replicated i32 from last step's
+        GuardState) selects between the int8 wire and a per-leaf fp32
+        ``pmean`` fallback through ``lax.cond`` — the predicate is
+        replicated, so every rank takes the same branch and the
+        collectives inside stay congruent — and the body additionally
+        returns the psum'ed nonfinite count of the RAW local gradients
+        (the wire codec clips NaN silently, so detection must precede
+        the encode).
         """
-        def body(qparams, batch, fmts, k_a, k_g, k_r):
+        def body(qparams, batch, fmts, k_a, k_g, k_r, *extra):
+            deg_g = count = None
+            if sig:
+                deg_g, count = extra
             rank = jax.lax.axis_index(data_axis)
             tap = bplan = None
             if wire_overlap:
@@ -696,6 +765,8 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 tap = lambda p: overlap_lib.tap_params(p, bplan)
             (loss, aux), grads = _accum_grads(
                 qparams, batch, fmts, jax.random.fold_in(k_a, rank), tap)
+            if faults is not None:
+                grads = rsl.apply_grad_faults(faults, grads, count)
             if wire_groups:
                 n_leaves = len(jax.tree_util.tree_leaves(grads))
                 if n_leaves != wire_groups:
@@ -705,14 +776,35 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                         "need one group per leaf (derive the config with "
                         "QuantConfig.with_per_layer_wire(params))")
             g_raw = _raw_grad_stats(grads, fmts, k_g, rank)
-            if wire_overlap:
-                grads, wstats = overlap_lib.bucketed_allreduce_mean_tree(
-                    grads, fmts, data_axis, k_r, mode=rounding,
-                    domain="wire_grads", plan=bplan)
-            else:
-                grads, wstats = collectives.dps_allreduce_mean_tree(
+            bad = (jax.lax.psum(rsl.nonfinite_count(grads), data_axis)
+                   if guards_on else None)
+
+            def wire_leg(grads):
+                if wire_overlap:
+                    return overlap_lib.bucketed_allreduce_mean_tree(
+                        grads, fmts, data_axis, k_r, mode=rounding,
+                        domain="wire_grads", plan=bplan)
+                if faults is not None:
+                    return collectives.dps_allreduce_mean_tree(
+                        grads, fmts, data_axis, k_r, mode=rounding,
+                        domain="wire_grads",
+                        payload_fault=rsl.payload_fault_fn(faults, count))
+                return collectives.dps_allreduce_mean_tree(
                     grads, fmts, data_axis, k_r, mode=rounding,
                     domain="wire_grads")
+
+            if guards_on:
+                def f32_leg(grads):
+                    # graceful degradation: exact per-leaf mean, zero wire
+                    # stats (the guard must never feed from post-fallback
+                    # values — see resilience.guards)
+                    g = jax.tree.map(lambda x: jax.lax.pmean(x, data_axis),
+                                     grads)
+                    return g, QuantStats.zero(fmts["wire_grads"].il.shape)
+                grads, wstats = jax.lax.cond(deg_g > 0, f32_leg, wire_leg,
+                                             grads)
+            else:
+                grads, wstats = wire_leg(grads)
             wstats = collectives.psum_stats(wstats, data_axis)
             g_raw = collectives.psum_stats(g_raw, data_axis)
             loss = jax.lax.pmean(loss, data_axis)
@@ -720,15 +812,22 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                        if isinstance(v, QuantStats)
                        else jax.lax.pmean(v, data_axis))
                    for k, v in aux.items()}
-            return (loss, aux), grads, wstats, g_raw
+            out = ((loss, aux), grads, wstats, g_raw)
+            return out + (bad,) if guards_on else out
 
-        fn = jax.shard_map(body, mesh=mesh,
-                           in_specs=(P(), P(data_axis), P(), P(), P(), P()),
-                           out_specs=(P(), P(), P(), P()), check_vma=False)
-        return fn(qparams, batch, fmts, k_a, k_g, k_r)
+        n_in = 8 if sig else 6
+        n_out = 5 if guards_on else 4
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(data_axis)) + (P(),) * (n_in - 2),
+            out_specs=(P(),) * n_out, check_vma=False)
+        args = (qparams, batch, fmts, k_a, k_g, k_r)
+        if sig:
+            args += (deg_g, count)
+        return fn(*args)
 
     def _zero_wire_step(part, full_quant, qparams, pflat, opt_state, batch,
-                        fmts, count, k_a, k_g, k_r):
+                        fmts, count, k_a, k_g, k_r, deg_g=None, deg_p=None):
         """Fused ZeRO-1 step body: per-shard fwd/bwd, int8 reduce-scatter of
         the flat gradients, shard-local optimizer, all-gather of the
         updated parameter shards.
@@ -746,16 +845,47 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         QuantStats of the two wire legs (gradients / parameters) and
         ``g_stats`` the compute-grid gradient stats measured on the raw
         local gradients (see ``_raw_grad_stats``).
+
+        Guards armed: ``deg_g``/``deg_p`` select — per wire domain,
+        through ``lax.cond`` on the replicated flags — the fp32 fallback
+        for the matching leg: an exact ``psum_scatter``/n of the flat
+        gradients (same rank-major chunk order as ``part.shard``) and
+        the fp32 tiled all-gather; the body additionally returns the
+        psum'ed raw-gradient nonfinite count and the global squared norm
+        of the decoded gradient shards (the spike detector's input).
         """
-        def body(qparams, pflat, opt_local, batch, fmts, count, k_a, k_g, k_r):
+        def body(qparams, pflat, opt_local, batch, fmts, count, k_a, k_g,
+                 k_r, *extra):
+            deg_g = deg_p = None
+            if sig:
+                deg_g, deg_p = extra
             rank = jax.lax.axis_index(data_axis)
             k1, k2 = jax.random.split(k_r)
             (loss, aux), grads = _accum_grads(
                 qparams, batch, fmts, jax.random.fold_in(k_a, rank))
+            if faults is not None:
+                grads = rsl.apply_grad_faults(faults, grads, count)
             g_stats = _raw_grad_stats(grads, fmts, k_g, rank)
-            gshard, g_wire = collectives.dps_reduce_scatter_mean(
-                part.flatten(grads), fmts, data_axis, k1, mode=rounding,
-                domain="wire_grads")
+            bad = (jax.lax.psum(rsl.nonfinite_count(grads), data_axis)
+                   if guards_on else None)
+            gflat = part.flatten(grads)
+
+            def wire_rs(gflat):
+                return collectives.dps_reduce_scatter_mean(
+                    gflat, fmts, data_axis, k1, mode=rounding,
+                    domain="wire_grads")
+
+            if guards_on:
+                def f32_rs(gflat):
+                    sc = jax.lax.psum_scatter(gflat, data_axis,
+                                              scatter_dimension=0,
+                                              tiled=True)
+                    return (sc / n_data,
+                            QuantStats.zero(fmts["wire_grads"].il.shape))
+                gshard, g_wire = jax.lax.cond(deg_g > 0, f32_rs, wire_rs,
+                                              gflat)
+            else:
+                gshard, g_wire = wire_rs(gflat)
             if full_quant and qcfg.enabled and qcfg.policy.quantizes("grads"):
                 # optimizer-input gradient quantization (Alg. 1), on this
                 # rank's slice with the step's own rounding mode (matching
@@ -765,13 +895,27 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 gshard, _ = fxp.quantize(
                     gshard, fmts[grad_domain], mode=qcfg.rounding,
                     key=jax.random.fold_in(k_g, 0x524157 + rank))
+            g2 = (jax.lax.psum(jnp.sum(jnp.square(
+                gshard.astype(jnp.float32))), data_axis)
+                if guards_on else None)
             pshard = part.shard(pflat, rank)
             upd, new_opt = optimizer.update_shard(gshard, opt_local, pshard,
                                                   count, axis_name=data_axis)
             if full_quant:
-                new_flat, p_wire = collectives.dps_allgather_params(
-                    pshard + upd, fmts, data_axis, k2, mode=rounding,
-                    domain="wire_params")
+                def wire_ag(x):
+                    return collectives.dps_allgather_params(
+                        x, fmts, data_axis, k2, mode=rounding,
+                        domain="wire_params")
+                if guards_on:
+                    def f32_ag(x):
+                        return (jax.lax.all_gather(x, data_axis, axis=0,
+                                                   tiled=True),
+                                QuantStats.zero(
+                                    fmts["wire_params"].il.shape))
+                    new_flat, p_wire = jax.lax.cond(deg_p > 0, f32_ag,
+                                                    wire_ag, pshard + upd)
+                else:
+                    new_flat, p_wire = wire_ag(pshard + upd)
             else:
                 new_flat = jax.lax.all_gather(pshard + upd, data_axis,
                                               axis=0, tiled=True)
@@ -784,19 +928,26 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                        if isinstance(v, QuantStats)
                        else jax.lax.pmean(v, data_axis))
                    for k, v in aux.items()}
-            return (loss, aux), new_flat, new_opt, g_wire, p_wire, g_stats
+            out = ((loss, aux), new_flat, new_opt, g_wire, p_wire, g_stats)
+            return out + (bad, g2) if guards_on else out
 
+        n_in = 11 if sig else 9
+        base_out = ((P(), P()), P(), P(data_axis), P(), P(), P())
         fn = jax.shard_map(
             body, mesh=mesh,
             in_specs=(P(), P(), P(data_axis), P(data_axis), P(), P(), P(),
-                      P(), P()),
-            out_specs=((P(), P()), P(), P(data_axis), P(), P(), P()),
+                      P(), P()) + (P(),) * (n_in - 9),
+            out_specs=base_out + ((P(), P()) if guards_on else ()),
             check_vma=False)
-        return fn(qparams, pflat, opt_state, batch, fmts, count, k_a, k_g,
-                  k_r)
+        args = (qparams, pflat, opt_state, batch, fmts, count, k_a, k_g,
+                k_r)
+        if sig:
+            args += (deg_g, deg_p)
+        return fn(*args)
 
     def _zero_aligned_wire_step(part, full_quant, qparams, pflat, opt_state,
-                                batch, fmts, count, k_a, k_g, k_r):
+                                batch, fmts, count, k_a, k_g, k_r,
+                                deg_g=None, deg_p=None):
         """Group-aligned fused ZeRO-1 step: per-shard fwd/bwd, grouped int8
         reduce-scatter per bucket (backward-ready order when the overlap
         engages), shard-local optimizer over aligned slices, grouped int8
@@ -807,10 +958,15 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         ``wire_grads``/``wire_params`` tables ride both legs, and with
         ``wire_overlap`` the gradients carry readiness taps so each
         bucket's reduce-scatter dispatches as the backward materializes
-        it.  Same return contract as ``_zero_wire_step``.
+        it.  Same return contract as ``_zero_wire_step``, including the
+        guard extensions (``deg_g``/``deg_p`` fallback conds, raw
+        nonfinite count, sharded grad-norm signal).
         """
         def body(qparams, pflat, opt_local, batch, fmts, count, k_a, k_g,
-                 k_r):
+                 k_r, *extra):
+            deg_g = deg_p = None
+            if sig:
+                deg_g, deg_p = extra
             rank = jax.lax.axis_index(data_axis)
             tap = None
             if wire_overlap:
@@ -821,6 +977,8 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 tap = lambda p: overlap_lib.tap_params(p, bplan)
             (loss, aux), grads = _accum_grads(
                 qparams, batch, fmts, jax.random.fold_in(k_a, rank), tap)
+            if faults is not None:
+                grads = rsl.apply_grad_faults(faults, grads, count)
             if wire_groups:
                 n_leaves = len(jax.tree_util.tree_leaves(grads))
                 if n_leaves != wire_groups:
@@ -830,34 +988,66 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                         "need one group per leaf (derive the config with "
                         "QuantConfig.with_per_layer_wire(params))")
             g_stats = _raw_grad_stats(grads, fmts, k_g, rank)
+            bad = (jax.lax.psum(rsl.nonfinite_count(grads), data_axis)
+                   if guards_on else None)
+
             # k_r goes to BOTH legs verbatim — the same key the replicated
             # tree collective consumes, so every leg-1 draw (split(fold_in(
             # k_r, idx))) and leg-2 draw (fold_in(k_r, LEG2)) matches the
             # replicated per-layer step bit for bit; the params leg derives
             # its own disjoint stream (fold_in(k_r, WPLG)) internally.
-            gshard, g_wire = overlap_lib.zero_bucketed_reduce_scatter(
-                grads, fmts, data_axis, k_r, part=part, mode=rounding,
-                domain="wire_grads", tag_buckets=wire_overlap)
+            def wire_rs(grads):
+                return overlap_lib.zero_bucketed_reduce_scatter(
+                    grads, fmts, data_axis, k_r, part=part, mode=rounding,
+                    domain="wire_grads", tag_buckets=wire_overlap)
+
+            if guards_on:
+                def f32_rs(grads):
+                    # exact fallback over the same aligned flat layout:
+                    # psum_scatter's rank-major chunks match part.shard
+                    sc = jax.lax.psum_scatter(part.flatten(grads),
+                                              data_axis,
+                                              scatter_dimension=0,
+                                              tiled=True)
+                    return (sc / n_data,
+                            QuantStats.zero(fmts["wire_grads"].il.shape))
+                gshard, g_wire = jax.lax.cond(deg_g > 0, f32_rs, wire_rs,
+                                              grads)
+            else:
+                gshard, g_wire = wire_rs(grads)
             if full_quant and qcfg.enabled and qcfg.policy.quantizes("grads"):
                 # optimizer-input gradient quantization on this rank's
                 # slice (same contract as _zero_wire_step)
                 gshard, _ = fxp.quantize(
                     gshard, fmts[grad_domain], mode=qcfg.rounding,
                     key=jax.random.fold_in(k_g, 0x524157 + rank))
+            g2 = (jax.lax.psum(jnp.sum(jnp.square(
+                gshard.astype(jnp.float32))), data_axis)
+                if guards_on else None)
             pshard = part.shard(pflat, rank)
             upd, new_opt = optimizer.update_shard(gshard, opt_local, pshard,
                                                   count, axis_name=data_axis)
-            if full_quant:
-                new_flat, p_wire = overlap_lib.zero_allgather_params(
-                    pshard + upd, fmts, data_axis, k_r, part=part,
-                    mode=rounding, domain="wire_params")
-            else:
+
+            def f32_gather(x):
                 # fp32 return leg; the aligned layout is bucket-major, so
                 # the rank-major gather goes through part.assemble
-                gathered = jax.lax.all_gather(pshard + upd, data_axis,
-                                              axis=0, tiled=False)
-                new_flat = part.assemble(gathered)
-                p_wire = QuantStats.zero(fmts["wire_params"].il.shape)
+                gathered = jax.lax.all_gather(x, data_axis, axis=0,
+                                              tiled=False)
+                return (part.assemble(gathered),
+                        QuantStats.zero(fmts["wire_params"].il.shape))
+
+            if full_quant:
+                def wire_ag(x):
+                    return overlap_lib.zero_allgather_params(
+                        x, fmts, data_axis, k_r, part=part,
+                        mode=rounding, domain="wire_params")
+                if guards_on:
+                    new_flat, p_wire = jax.lax.cond(deg_p > 0, f32_gather,
+                                                    wire_ag, pshard + upd)
+                else:
+                    new_flat, p_wire = wire_ag(pshard + upd)
+            else:
+                new_flat, p_wire = f32_gather(pshard + upd)
             g_wire = collectives.psum_stats(g_wire, data_axis)
             p_wire = collectives.psum_stats(p_wire, data_axis)
             g_stats = collectives.psum_stats(g_stats, data_axis)
@@ -866,16 +1056,22 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                        if isinstance(v, QuantStats)
                        else jax.lax.pmean(v, data_axis))
                    for k, v in aux.items()}
-            return (loss, aux), new_flat, new_opt, g_wire, p_wire, g_stats
+            out = ((loss, aux), new_flat, new_opt, g_wire, p_wire, g_stats)
+            return out + (bad, g2) if guards_on else out
 
+        n_in = 11 if sig else 9
+        base_out = ((P(), P()), P(), P(data_axis), P(), P(), P())
         fn = jax.shard_map(
             body, mesh=mesh,
             in_specs=(P(), P(), P(data_axis), P(data_axis), P(), P(), P(),
-                      P(), P()),
-            out_specs=((P(), P()), P(), P(data_axis), P(), P(), P()),
+                      P(), P()) + (P(),) * (n_in - 9),
+            out_specs=base_out + ((P(), P()) if guards_on else ()),
             check_vma=False)
-        return fn(qparams, pflat, opt_state, batch, fmts, count, k_a, k_g,
-                  k_r)
+        args = (qparams, pflat, opt_state, batch, fmts, count, k_a, k_g,
+                k_r)
+        if sig:
+            args += (deg_g, deg_p)
+        return fn(*args)
 
     def _zero_plain_opt(part, gflat, pflat, opt_state, count):
         """ZeRO-1 optimizer leg without wire compression: slice the (already
@@ -906,6 +1102,21 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
         # -- forward/backward in the quantized regime (Alg. 1 lines 9-20) --
         qparams, w_stats = quantize_params(state.params, fmts["weights"], qcfg, k_w)
         g_wire = p_wire = wire_stats = None
+        bad_count = gnorm = None
+        deg_g = deg_p = jnp.zeros((), jnp.int32)
+        if guards_on:
+            if state.guard is None:
+                raise ValueError(
+                    "qcfg.guards is armed but TrainState.guard is None; "
+                    "build the state with TrainState.create(..., qcfg, ...) "
+                    "or restore with qtrain.guard_restore_defaults")
+            # LAST step's degradation flags drive THIS step's collective
+            # branch — a traced input, so fallback and wire live in the
+            # same compiled step (no recompile at the trip boundary).
+            if wire_names:
+                deg_g = state.guard.degraded[gidx]
+                if "wire_params" in wire_names:
+                    deg_p = state.guard.degraded[pidx]
         if zero_opt:
             # ZeRO-1: the optimizer steps flat P(data)-sharded slices of the
             # flat layout (plain or group-aligned, see zero_partitioner),
@@ -931,16 +1142,26 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 k_r = jax.random.fold_in(key, 0x57495245)  # "WIRE"
                 step_fn = (_zero_aligned_wire_step if zero_aligned
                            else _zero_wire_step)
-                (loss, aux), new_flat, opt_state, g_wire, p_wire, g_stats = \
-                    step_fn(part, full_quant, qparams, pflat,
-                            state.opt_state, batch, fmts, state.step,
-                            k_a, k_g, k_r)
+                res = step_fn(part, full_quant, qparams, pflat,
+                              state.opt_state, batch, fmts, state.step,
+                              k_a, k_g, k_r,
+                              *((deg_g, deg_p) if sig else ()))
+                (loss, aux), new_flat, opt_state, g_wire, p_wire, g_stats \
+                    = res[:6]
+                if guards_on:
+                    bad_count, g2 = res[6:]
+                    gnorm = jnp.sqrt(g2)
                 wire_stats = g_wire.merge(p_wire)
             else:
                 # exact legs: grads from the ordinary (implicit-psum)
                 # backward pass, slice + step + fp32 gather — bit-exact
                 # with the replicated optimizer step.
                 (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
+                if faults is not None:
+                    grads = rsl.apply_grad_faults(faults, grads, state.step)
+                if guards_on:
+                    bad_count = rsl.nonfinite_count(grads)
+                    gnorm = rsl.global_norm(grads)
                 grads, g_stats = quantize_grads(grads, fmts[grad_domain],
                                                 qcfg, k_g)
                 new_flat, opt_state = _zero_plain_opt(
@@ -953,8 +1174,16 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 # widening the step's key split, so the default path stays
                 # bit-identical to a step built without a mesh.
                 k_r = jax.random.fold_in(key, 0x57495245)  # "WIRE"
-                (loss, aux), grads, wire_stats, g_raw = _wire_synced_grads(
-                    qparams, batch, fmts, k_a, k_g, k_r)
+                res = _wire_synced_grads(
+                    qparams, batch, fmts, k_a, k_g, k_r,
+                    *((deg_g, state.step) if sig else ()))
+                if guards_on:
+                    (loss, aux), grads, wire_stats, g_raw, bad_count = res
+                    # spike detection reads the DECODED mean — transport
+                    # corruption (a flipped payload) only exists there
+                    gnorm = rsl.global_norm(grads)
+                else:
+                    (loss, aux), grads, wire_stats, g_raw = res
                 # the optimizer-input snap still applies (Alg. 1), but the
                 # controller stream is the raw-gradient measurement — the
                 # mean already sits on the wire grid, so this event's own
@@ -964,6 +1193,11 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 g_stats = g_raw
             else:
                 (loss, aux), grads = _accum_grads(qparams, batch, fmts, k_a)
+                if faults is not None:
+                    grads = rsl.apply_grad_faults(faults, grads, state.step)
+                if guards_on:
+                    bad_count = rsl.nonfinite_count(grads)
+                    gnorm = rsl.global_norm(grads)
                 grads, g_stats = quantize_grads(grads, fmts[grad_domain],
                                                 qcfg, k_g)
             # -- update (Alg. 1 line 18) --
@@ -1002,6 +1236,33 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                 streams["wire_grads"] = wire_stats
         new_dps = update_dps_bundle(qcfg, state.dps, streams, {"loss": loss})
 
+        # -- health guards: fold this step's signals, gate the update --
+        new_guard = state.guard
+        if guards_on:
+            wire_legs = {}
+            if wire_stats is not None:
+                wire_legs = ({"wire_grads": g_wire, "wire_params": p_wire}
+                             if zero_opt else {"wire_grads": wire_stats})
+            new_guard, g_ok, trip_any = rsl.update_guard(
+                qcfg.guards, plan, state.guard, loss=loss,
+                grads_bad=bad_count, gnorm=gnorm,
+                wire_ov=rsl.guards.domain_overflow(plan, wire_legs),
+                new_dps=new_dps, grads_domain_idx=gidx)
+            # the skip gate: a poisoned step must not reach the params,
+            # optimizer state, or controllers.  jnp.where is an exact
+            # select, so with g_ok True (no fault) every value passes
+            # through bit-identical — the guard-transparency contract.
+            keep = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(g_ok, a, b), new, old)
+            new_params = keep(new_params, state.params)
+            opt_state = keep(opt_state, state.opt_state)
+            new_dps = keep(new_dps, state.dps)
+            if qcfg.guards.widen_on_trip:
+                # reactive headroom: one extra IL bit on the compute
+                # grads domain the step a trip fires (dps._clamp_fmt
+                # keeps caps and the exactness span)
+                new_dps = rsl.widen_on_trip(plan, new_dps, trip_any)
+
         # -- telemetry: ⟨IL, FL⟩ + E/R per domain (scalarized for [G];
         # grouped domains also report the per-group spread so per-layer
         # wire formats are visible in the train log) --
@@ -1031,9 +1292,20 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
                                 max_abs=jnp.max(ws.max_abs))
             metrics["E_wire"] = ws.quant_error()
             metrics["R_wire"] = ws.overflow_rate()
+        if guards_on:
+            # the health word + counters ride the ordinary metrics dict,
+            # so they drain at the driver's log points with everything
+            # else — no extra host sync (the PR 7 deferred-fetch pattern)
+            metrics["health"] = new_guard.health
+            metrics["skipped"] = new_guard.skipped
+            metrics["trips"] = new_guard.trips
+            metrics["degraded"] = (jnp.max(new_guard.degraded)
+                                   if wire_names
+                                   else jnp.zeros((), jnp.int32))
         new_state = TrainState(
             step=state.step + 1, params=new_params, opt_state=opt_state,
-            dps=new_dps, rng=state.rng, last_loss=loss.astype(jnp.float32))
+            dps=new_dps, rng=state.rng, last_loss=loss.astype(jnp.float32),
+            guard=new_guard)
         return new_state, metrics
 
     # introspection for drivers/tests: did the compressed paths engage?
@@ -1041,4 +1313,5 @@ def make_train_step(loss_fn, optimizer, qcfg: QuantConfig,
     train_step.zero_opt_active = zero_opt
     train_step.wire_overlap_active = wire_overlap
     train_step.zero_groupaligned_active = zero_aligned
+    train_step.guards_active = guards_on
     return train_step

@@ -943,7 +943,8 @@ def dps_allreduce_mean_tree(tree, formats, axis_name,
                             key: jax.Array, *, mode: str = ROUND_STOCHASTIC,
                             backend: str = "auto",
                             domain: str = "wire_grads",
-                            quantum: Optional[int] = None):
+                            quantum: Optional[int] = None,
+                            payload_fault=None):
     """:func:`dps_allreduce_mean` over a whole pytree in ONE collective pair.
 
     Each leaf is encoded straight into its slot of ONE preallocated int8
@@ -967,6 +968,13 @@ def dps_allreduce_mean_tree(tree, formats, axis_name,
     dtype.  ``formats``/``domain``: see :func:`resolve_domain_format`.
     ``quantum=None`` derives the per-leaf slot alignment per
     :func:`default_wire_quantum` (size-aware on jnp, kernel tile on TPU).
+
+    ``payload_fault`` is the fault-injection hook of
+    ``repro.resilience.inject``: a callable applied to the encoded int8
+    dispatch-leg buffer right before it enters the collective (simulating
+    transport corruption), or None (the default — the jaxpr is
+    unchanged).  Test harness only; the guards it exists to prove live in
+    ``repro.resilience.guards``.
     """
     fmt = resolve_domain_format(formats, domain)
     _validate_capacity(fmt)
@@ -1017,6 +1025,8 @@ def dps_allreduce_mean_tree(tree, formats, axis_name,
             stats = per_leaf[0]
             for s in per_leaf[1:]:
                 stats = stats.merge(s)
+        if payload_fault is not None:
+            buf = payload_fault(buf)
         return buf, stats
 
     with tagging.domain(domain):

@@ -119,9 +119,16 @@ def train_state_shardings(cfg: ModelConfig, mesh: Mesh, rules: LogicalRules,
     # included when declared) is replicated scalar state on every device
     dps_template = qtrain.init_dps_bundle(qcfg)
     dps_shards = jax.tree.map(lambda _: repl, dps_template)
+    # guard state (repro.resilience) is replicated scalars / tiny [D]
+    # vectors, exactly like the DPS registry
+    guard = None
+    if qcfg.guards is not None:
+        from repro.resilience import guards as guards_lib
+        guard = jax.tree.map(lambda _: repl,
+                             guards_lib.init_guard_state(qcfg.plan()))
     return qtrain.TrainState(
         step=repl, params=p_shards, opt_state=opt_shards,
-        dps=dps_shards, rng=repl, last_loss=repl)
+        dps=dps_shards, rng=repl, last_loss=repl, guard=guard)
 
 
 def abstract_train_state(cfg: ModelConfig, optimizer, qcfg: qtrain.QuantConfig,
@@ -138,10 +145,15 @@ def abstract_train_state(cfg: ModelConfig, optimizer, qcfg: qtrain.QuantConfig,
     opt_state = _abstract_opt_state(aparams, optimizer, qcfg, mesh)
     dps = jax.eval_shape(lambda: qtrain.init_dps_bundle(qcfg))
     rng = jax.eval_shape(lambda: jax.random.key(0))
+    guard = None
+    if qcfg.guards is not None:
+        from repro.resilience import guards as guards_lib
+        guard = jax.eval_shape(
+            lambda: guards_lib.init_guard_state(qcfg.plan()))
     return qtrain.TrainState(
         step=jax.ShapeDtypeStruct((), jnp.int32),
         params=aparams, opt_state=opt_state, dps=dps, rng=rng,
-        last_loss=jax.ShapeDtypeStruct((), jnp.float32))
+        last_loss=jax.ShapeDtypeStruct((), jnp.float32), guard=guard)
 
 
 # ---------------------------------------------------------------------------
@@ -225,15 +237,19 @@ def wire_bucket_plan(cfg: ModelConfig, qcfg: qtrain.QuantConfig):
 
 
 def build_train_step(cfg: ModelConfig, qcfg: qtrain.QuantConfig, optimizer,
-                     accum_steps: Optional[int] = None, mesh: Optional[Mesh] = None):
+                     accum_steps: Optional[int] = None,
+                     mesh: Optional[Mesh] = None, faults=None):
     """Train step for one arch.  ``mesh`` is only needed when
     ``qcfg.grad_allreduce_bits`` is set: the compressed gradient all-reduce
     runs as an explicit ``shard_map`` over the mesh's data axis (see
-    :func:`repro.core.qtrain.make_train_step`)."""
+    :func:`repro.core.qtrain.make_train_step`).  ``faults`` is a
+    :class:`repro.resilience.FaultPlan` compiled into the step (test
+    harness; None leaves the step untouched)."""
     mod = registry(cfg.family)
     accum = cfg.train_accum if accum_steps is None else accum_steps
     return qtrain.make_train_step(mod.loss_fn(cfg), optimizer, qcfg,
-                                  accum_steps=accum, mesh=mesh)
+                                  accum_steps=accum, mesh=mesh,
+                                  faults=faults)
 
 
 def build_decode_step(cfg: ModelConfig):

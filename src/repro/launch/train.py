@@ -1,13 +1,23 @@
 """Training driver: quantized (DPS) training with fault tolerance.
 
 Production behaviors implemented here:
-  * auto-resume from the newest complete checkpoint (``--resume``),
+  * auto-resume from the newest complete checkpoint (``--resume``) —
+    ``latest_step`` digest-verifies and walks past torn/corrupt step dirs,
   * atomic async checkpointing every ``--ckpt-every`` steps,
   * elastic restart — the checkpoint is mesh-agnostic, restore re-shards
     onto whatever mesh this invocation builds (different device count OK),
-  * failure injection (``--fail-at N``) to exercise the restart path in CI,
+  * graceful pre-emption: SIGTERM/SIGINT checkpoints on the way down and
+    exits 0 (a scheduler eviction is not a failure),
+  * numeric health guards (``--guards``: repro.resilience in-step monitor,
+    skip gate, fp32 wire degradation) plus a host-side loss-spike rollback
+    ring (``--rollback-ring K``): the last K healthy train states are kept
+    in host memory and a median-filtered loss spike rolls back to the
+    newest one and forces the wire into its fp32 fallback for a cooldown,
+  * failure injection (``--fail-at N`` crash, ``--inject-*-at N`` numeric
+    faults, ``--sigterm-at N`` pre-emption) to exercise every recovery
+    path in CI,
   * straggler/step watchdog: a step exceeding ``--step-timeout`` seconds
-    raises, the driver checkpoints on the way down (pre-emption handling).
+    raises, the driver checkpoints on the way down.
 
 Smoke scale (CPU container):
   PYTHONPATH=src python -m repro.launch.train --arch llama3_2_3b --smoke \
@@ -20,7 +30,9 @@ import argparse
 import dataclasses
 import json
 import os
+import signal
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -37,9 +49,27 @@ from repro.models.common import init_params
 from repro.optim import AdamWConfig, SGDConfig, make_optimizer
 
 
-def build(cfg, qcfg, opt_cfg, mesh=None):
+def _to_host(x):
+    """Rollback-ring entry leaf: host numpy (PRNG keys via key_data)."""
+    if (hasattr(x, "dtype")
+            and jax.dtypes.issubdtype(x.dtype, jax.dtypes.prng_key)):
+        return np.asarray(jax.random.key_data(x))
+    return np.asarray(x)
+
+
+def _from_host(arr, like):
+    """Inverse of :func:`_to_host` against a template leaf.  Plain arrays
+    stay host-side/uncommitted — the jitted step's ``in_shardings`` place
+    them, so a rolled-back state reshards exactly like a restore."""
+    if jax.dtypes.issubdtype(like.dtype, jax.dtypes.prng_key):
+        return jax.random.wrap_key_data(jnp.asarray(arr))
+    return np.asarray(arr, like.dtype)
+
+
+def build(cfg, qcfg, opt_cfg, mesh=None, faults=None):
     opt = make_optimizer(opt_cfg)
-    step_fn = specs_lib.build_train_step(cfg, qcfg, opt, mesh=mesh)
+    step_fn = specs_lib.build_train_step(cfg, qcfg, opt, mesh=mesh,
+                                         faults=faults)
     if mesh is not None:
         if (getattr(step_fn, "wire_sync_active", False)
                 or getattr(step_fn, "zero_opt_active", False)):
@@ -127,8 +157,35 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--guards", action="store_true",
+                    help="arm the repro.resilience health guards: in-step "
+                         "NaN/overflow/spike detection, skip gate, and "
+                         "graceful int8-wire -> fp32 degradation with "
+                         "cooldown re-arm")
+    ap.add_argument("--guard-cooldown", type=int, default=16,
+                    help="clean steps before a degraded wire domain "
+                         "re-arms its int8 codec")
+    ap.add_argument("--rollback-ring", type=int, default=0,
+                    help="keep the last K healthy train states in host "
+                         "memory (snapshotted at log points) and roll "
+                         "back to the newest one on a median-filtered "
+                         "loss spike; 0 disables")
+    ap.add_argument("--rollback-spike", type=float, default=10.0,
+                    help="drained loss > this factor times the median of "
+                         "the recent drained losses triggers a rollback")
     ap.add_argument("--fail-at", type=int, default=0,
                     help="inject a crash after N steps (restart test)")
+    ap.add_argument("--sigterm-at", type=int, default=0,
+                    help="send SIGTERM to this process after N steps "
+                         "(pre-emption test: checkpoint + exit 0)")
+    ap.add_argument("--inject-nan-at", type=int, default=-1,
+                    help="fault injection: NaN gradients at this step")
+    ap.add_argument("--inject-storm-at", type=int, default=-1,
+                    help="fault injection: overflow-storm gradient scale "
+                         "starting at this step")
+    ap.add_argument("--inject-wire-flip-at", type=int, default=-1,
+                    help="fault injection: XOR a bit into the int8 wire "
+                         "payload at this step")
     ap.add_argument("--step-timeout", type=float, default=0.0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -139,6 +196,17 @@ def main(argv=None):
         cfg = smoke_cfg(cfg)
     n_dev = jax.device_count()
     zero_shards = n_dev if (args.zero_opt and n_dev > 1) else None
+    guards = None
+    if args.guards:
+        from repro.resilience import GuardConfig
+        guards = GuardConfig(cooldown=args.guard_cooldown)
+    faults = None
+    if (args.inject_nan_at >= 0 or args.inject_storm_at >= 0
+            or args.inject_wire_flip_at >= 0):
+        from repro.resilience import FaultPlan
+        faults = FaultPlan(nan_grads_at=args.inject_nan_at,
+                           overflow_storm_at=args.inject_storm_at,
+                           wire_flip_at=args.inject_wire_flip_at)
     qcfg = qtrain.QuantConfig(enabled=args.controller != "off",
                               controller=args.controller
                               if args.controller != "off" else "paper",
@@ -146,7 +214,8 @@ def main(argv=None):
                               zero_opt_shards=zero_shards,
                               wire_controller=args.wire_controller,
                               wire_overlap=args.wire_overlap == "on",
-                              wire_auto_slack=args.wire_auto_slack)
+                              wire_auto_slack=args.wire_auto_slack,
+                              guards=guards)
     if args.wire_groups == "per-layer":
         # one wire ⟨IL, FL⟩ per gradient leaf; the group count derives
         # from the abstract param tree so the plan (and with it the DPS
@@ -161,7 +230,7 @@ def main(argv=None):
         # compressed all-reduce and ZeRO-1 target.  On one device qtrain
         # degrades both paths to the replicated step, so no mesh is built.
         mesh = jax.make_mesh((n_dev,), ("data",))
-    opt, jitted = build(cfg, qcfg, opt_cfg, mesh=mesh)
+    opt, jitted = build(cfg, qcfg, opt_cfg, mesh=mesh, faults=faults)
 
     mod = registry(cfg.family)
     data = TokenStream(TokenStreamConfig(vocab=cfg.vocab, seq_len=args.seq,
@@ -176,9 +245,12 @@ def main(argv=None):
         start = latest_step(args.ckpt_dir)
         template = specs_lib.abstract_train_state(cfg, opt, qcfg, mesh=mesh)
         # legacy checkpoints carry only the three-key compute DPS bundle;
-        # domains the plan adds (e.g. wire_grads/wire_params) init fresh.
+        # domains the plan adds (e.g. wire_grads/wire_params) and the
+        # guard subtree init fresh when the checkpoint predates them.
+        defaults = qtrain.dps_restore_defaults(qcfg)
+        defaults.update(qtrain.guard_restore_defaults(qcfg))
         state, meta = restore(args.ckpt_dir, start, template,
-                              defaults=qtrain.dps_restore_defaults(qcfg))
+                              defaults=defaults)
         print(f"resumed from step {start} (data cursor {meta.get('cursor')})")
     else:
         params = init_params(jax.random.key(args.seed), mod.model_defs(cfg))
@@ -210,8 +282,43 @@ def main(argv=None):
             history.append({k: float(v) for k, v in m.items()})
         pending.clear()
 
+    # graceful pre-emption: the handler only sets a flag; the loop
+    # checkpoints on the way down and exits 0 (eviction is not a failure)
+    stop = {"sig": None}
+    old_handlers = {
+        s: signal.signal(s, lambda signum, frame: stop.update(sig=signum))
+        for s in (signal.SIGTERM, signal.SIGINT)}
+
+    # rollback ring: (step, host snapshot) of the last K healthy states,
+    # refreshed at log points — the only places the host looks at metrics
+    # anyway, so the ring adds no extra device syncs
+    ring = deque(maxlen=max(args.rollback_ring, 1))
+    loss_hist = deque(maxlen=256)   # healthy drained losses (median filter)
+    rollbacks = 0
+
+    def _force_degrade(st):
+        """Post-rollback: hold every wire domain in its fp32 fallback for
+        a full cooldown so the replayed window cannot re-trip on the same
+        storm (the rollback+degrade response)."""
+        if getattr(st, "guard", None) is None or st.guard.degraded.size == 0:
+            return st
+        g = dataclasses.replace(
+            st.guard, degraded=jnp.ones_like(st.guard.degraded),
+            cooldown=jnp.full_like(st.guard.cooldown, args.guard_cooldown))
+        return dataclasses.replace(st, guard=g)
+
     try:
-        for step in range(start, args.steps):
+        step = start
+        while step < args.steps:
+            if stop["sig"] is not None:
+                if ckpt:
+                    ckpt.save(step, state, meta=data.state(step))
+                    ckpt.wait()
+                _drain()
+                print(f"PREEMPTED: signal {stop['sig']} "
+                      f"(checkpointed at step {step}); exiting cleanly",
+                      flush=True)
+                return history
             batch = {**data.batch(step), **extras}
             t0 = time.time()
             state, metrics = jitted(state, batch)
@@ -227,7 +334,9 @@ def main(argv=None):
                     "(straggler watchdog)")
             pending.append(metrics)
             if step % args.log_every == 0 or step == args.steps - 1:
+                window_at = len(history)
                 _drain()
+                window = history[window_at:]
                 metrics = history[-1]
                 # wire precision domains log alongside the compute triple;
                 # per-layer (grouped) wire domains show mean(min-max) so
@@ -246,25 +355,61 @@ def main(argv=None):
                     for tag, dom in (("wg", "wire_grads"),
                                      ("wp", "wire_params"))
                     if f"il_{dom}" in metrics)
+                health = ""
+                if metrics.get("health"):
+                    from repro.resilience import health_flags
+                    health = " !" + ",".join(
+                        health_flags(int(metrics["health"])))
                 print(f"step {step:5d} loss {metrics['loss']:8.4f} "
                       f"w<{metrics['il_w']:.0f},{metrics['fl_w']:.0f}> "
                       f"a<{metrics['il_a']:.0f},{metrics['fl_a']:.0f}> "
                       f"g<{metrics['il_g']:.0f},{metrics['fl_g']:.0f}> "
                       f"{wire}"
-                      f"E_a {metrics['E_a']:.2e} R_a {metrics['R_a']:.2e}",
-                      flush=True)
+                      f"E_a {metrics['E_a']:.2e} R_a {metrics['R_a']:.2e}"
+                      f"{health}", flush=True)
+                if args.rollback_ring:
+                    losses = [h["loss"] for h in window]
+                    bad = any(not np.isfinite(l) for l in losses)
+                    med = (float(np.median(loss_hist))
+                           if len(loss_hist) >= 4 else None)
+                    spiked = bad or (
+                        med is not None and med > 0
+                        and max(losses) > args.rollback_spike * med)
+                    if spiked and ring and rollbacks < 8:
+                        snap_step, snap = ring[-1]
+                        state = _force_degrade(
+                            jax.tree.map(_from_host, snap, state))
+                        rollbacks += 1
+                        print(f"ROLLBACK: loss spike at step {step} "
+                              f"(median {med}), resuming from step "
+                              f"{snap_step} with wire degraded", flush=True)
+                        step = snap_step
+                        continue
+                    if not spiked:
+                        loss_hist.extend(losses)
+                        ring.append(
+                            (step + 1, jax.tree.map(_to_host, state)))
             if ckpt and (step + 1) % args.ckpt_every == 0:
                 ckpt.save(step + 1, state, meta=data.state(step + 1))
             if args.fail_at and step + 1 >= args.fail_at:
                 raise RuntimeError(f"injected failure at step {step + 1}")
+            if (args.sigterm_at and step + 1 >= args.sigterm_at
+                    and stop["sig"] is None):
+                # pre-emption drill: deliver a real SIGTERM to ourselves;
+                # the handler + loop-top path take it from here
+                os.kill(os.getpid(), signal.SIGTERM)
+            step += 1
     except (TimeoutError, RuntimeError) as e:
-        # pre-emption path: persist progress before going down
+        # crash path: persist progress before going down (exit 17 tells
+        # the harness this was a FAILURE, unlike the pre-emption exit 0)
         if ckpt:
             ckpt.save(step + 1, state, meta=data.state(step + 1))
             ckpt.wait()
         print(f"ABORT: {e} (checkpointed at step {step + 1})")
         raise SystemExit(17)
     finally:
+        for s, h in old_handlers.items():
+            signal.signal(s, h)
         if ckpt:
             ckpt.wait()
 

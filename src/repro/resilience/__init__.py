@@ -1,0 +1,16 @@
+"""repro.resilience — numeric health guards, graceful wire degradation,
+loss-spike rollback, and the fault-injection harness that proves them.
+
+See README.md in this directory for the failure-mode -> detector ->
+response -> recovery table.
+"""
+
+from repro.resilience import guards  # noqa: F401
+from repro.resilience.guards import (  # noqa: F401
+    GuardConfig, GuardState, HEALTH_LOSS_NONFINITE, HEALTH_GRADS_NONFINITE,
+    HEALTH_OVERFLOW_STORM, HEALTH_GRAD_SPIKE, HEALTH_FL_RAIL,
+    HEALTH_IL_RATCHET, HEALTH_DEGRADED, HEALTH_SKIPPED, domain_overflow,
+    global_norm, health_flags, init_guard_state, nonfinite_count,
+    update_guard, wire_domains, widen_on_trip)
+from repro.resilience.inject import (  # noqa: F401
+    FaultPlan, apply_grad_faults, corrupt_checkpoint, payload_fault_fn)

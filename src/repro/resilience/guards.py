@@ -1,0 +1,339 @@
+"""On-device step health monitor + graceful wire degradation state machine.
+
+The paper's thesis is that quantization error is a *metric*; the DPS
+controllers use it to steer bit-widths, and this module uses the same
+measurements to detect failure.  A :class:`GuardState` pytree rides
+:class:`~repro.core.qtrain.TrainState` through the compiled step and folds
+the step's numeric signals into a small int32 "health word":
+
+    bit 0  loss came back NaN/Inf
+    bit 1  raw local gradients carried NaN/Inf (counted PRE-encode: the
+           int8 wire codec clips NaN silently, so post-wire values look
+           healthy — detection must happen on the raw tree)
+    bit 2  a wire domain's overflow-rate EWMA crossed the storm threshold
+    bit 3  the decoded gradient norm spiked vs its EWMA (how a corrupted
+           wire payload — e.g. a bit-flipped int8 buffer — manifests:
+           every decoded element gains a large power-of-two offset)
+    bit 4  a wire domain's FL is pinned at its effective cap (railed
+           controller; monitor-only)
+    bit 5  a wire domain's IL ratcheted up repeatedly (monitor-only)
+    bit 6  at least one wire domain is running the fp32 fallback
+    bit 7  this step's update was skipped (params/opt/DPS held)
+
+Everything is computed from values the step already materializes (loss,
+wire-leg ``QuantStats``, the DPS registry) plus one extra ``psum`` of a
+per-rank nonfinite count — zero additional host syncs; the health word is
+drained with the existing deferred log-point metrics.
+
+Degradation: when a wire domain trips (overflow storm, NaN gradients, or a
+gradient-norm spike), ``degraded[d]`` latches to 1 and the NEXT step's
+collective for that domain runs the fp32 fallback branch of a
+``lax.cond`` — both branches live in the one compiled step (the serve
+page-table trick: behavior changes through traced inputs, never through
+recompilation).  After ``cooldown`` consecutive clean steps the int8 wire
+re-arms.  On the trip itself the update is skipped (the fault already
+happened this step) and the compute ``grads`` domain widens by one IL bit
+(:func:`widen_on_trip` — the widening scheme of ``dps._clamp_fmt``).
+
+Guard decisions NEVER feed from post-fallback values: the overflow signal
+is tagged ``guard_sink`` for the precision-flow verifier, whose
+``PF-GUARD-TAINT`` rule proves it derives from ``wire_stats`` taint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dps as dps_lib
+from repro.core import tagging
+from repro.core.fixed_point import QuantStats
+
+HEALTH_LOSS_NONFINITE = 1
+HEALTH_GRADS_NONFINITE = 2
+HEALTH_OVERFLOW_STORM = 4
+HEALTH_GRAD_SPIKE = 8
+HEALTH_FL_RAIL = 16
+HEALTH_IL_RATCHET = 32
+HEALTH_DEGRADED = 64
+HEALTH_SKIPPED = 128
+
+_HEALTH_NAMES = (
+    (HEALTH_LOSS_NONFINITE, "loss-nonfinite"),
+    (HEALTH_GRADS_NONFINITE, "grads-nonfinite"),
+    (HEALTH_OVERFLOW_STORM, "overflow-storm"),
+    (HEALTH_GRAD_SPIKE, "grad-spike"),
+    (HEALTH_FL_RAIL, "fl-rail"),
+    (HEALTH_IL_RATCHET, "il-ratchet"),
+    (HEALTH_DEGRADED, "degraded"),
+    (HEALTH_SKIPPED, "skipped"),
+)
+
+
+def health_flags(word: int) -> Tuple[str, ...]:
+    """Decode a drained health word into its event names (host-side)."""
+    return tuple(name for bit, name in _HEALTH_NAMES if int(word) & bit)
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Static thresholds of the health monitor (hashable: jit closure).
+
+    The defaults are deliberately far from healthy-training territory so
+    that guards are TRANSPARENT when nothing is wrong: wire overflow
+    rates under the flexpoint controllers sit in the low percent range
+    (storm trips at a 25% EWMA / 75% instantaneous rate), and a 16x
+    gradient-norm jump over its EWMA does not occur in converging runs.
+    """
+
+    overflow_beta: float = 0.9     # EWMA decay of per-domain overflow rate
+    overflow_trip: float = 0.25    # EWMA level that declares a storm
+    overflow_trip_hi: float = 0.75 # instantaneous rate that declares one
+    spike_ratio: float = 16.0      # gnorm > ratio * EWMA -> corrupted sync
+    norm_beta: float = 0.9         # EWMA decay of the gradient norm
+    rail_window: int = 8           # consecutive steps before a rail bit
+    rail_overflow: float = 0.05    # FL-at-cap counts as railed only while
+                                   # the domain also clips > this rate (a
+                                   # flexpoint wire format sits at its FL
+                                   # cap by construction — pinned AND
+                                   # overflowing is the conflicted state)
+    cooldown: int = 16             # clean steps before int8 re-arms
+    widen_on_trip: bool = True     # +1 IL on the compute grads domain
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GuardState:
+    """Per-run health state (replicated scalars / tiny [D] vectors).
+
+    ``D`` = number of wire domains in the precision plan, in plan order
+    (:func:`wire_domains`); D = 0 runs the monitor without a degradation
+    target (loss/grad guards + skip gate still apply).
+    """
+
+    health: jax.Array         # i32, last step's health word
+    trips: jax.Array          # i32, cumulative degradation trips
+    skipped: jax.Array        # i32, cumulative skipped updates
+    degraded: jax.Array       # i32[D], 1 = fp32 fallback next step
+    cooldown: jax.Array       # i32[D], clean steps left before re-arm
+    overflow_ewma: jax.Array  # f32[D]
+    gnorm_ewma: jax.Array     # f32, EWMA of the decoded gradient norm
+    fl_rail: jax.Array        # i32[D], consecutive steps FL at its cap
+    il_ratchet: jax.Array     # i32[D], consecutive steps IL moved up
+    prev_il: jax.Array        # i32[D], last step's (max) IL per domain
+
+
+def wire_domains(plan) -> Tuple[str, ...]:
+    """The plan's wire domains, in plan order — the [D] axis of
+    :class:`GuardState`."""
+    return tuple(n for n, spec in plan.domains if spec.wire)
+
+
+def init_guard_state(plan) -> GuardState:
+    d = len(wire_domains(plan))
+    # every field gets its OWN freshly-allocated array: the launch path
+    # donates the train state into the jitted step, and two leaves
+    # sharing one device buffer is an XLA donation error ("attempt to
+    # donate the same buffer twice")
+    zi = lambda: jnp.zeros((d,), jnp.int32)
+    ils = []
+    for n in wire_domains(plan):
+        spec = plan.spec(n)
+        st = spec.make().init(spec.state_shape())
+        ils.append(jnp.max(st.il).astype(jnp.int32))
+    return GuardState(
+        health=jnp.zeros((), jnp.int32),
+        trips=jnp.zeros((), jnp.int32),
+        skipped=jnp.zeros((), jnp.int32),
+        degraded=zi(), cooldown=zi(),
+        overflow_ewma=jnp.zeros((d,), jnp.float32),
+        gnorm_ewma=jnp.zeros((), jnp.float32),
+        fl_rail=zi(), il_ratchet=zi(),
+        prev_il=(jnp.stack(ils) if ils else zi()))
+
+
+def guard_restore_defaults(plan, prefix: str = ".guard") -> dict:
+    """Checkpoint back-compat defaults for the ``TrainState.guard`` subtree
+    (same contract as ``qtrain.dps_restore_defaults``)."""
+    from repro.checkpoint import flatten_tree  # deferred: io imports core
+    return {f"{prefix}/{k}": v
+            for k, v in flatten_tree(init_guard_state(plan)).items()}
+
+
+def _collapse_stats(ws: QuantStats) -> jax.Array:
+    """Global overflow rate of a (possibly [G]-shaped) wire-stats leg."""
+    return jnp.sum(ws.overflow) / jnp.maximum(jnp.sum(ws.count), 1.0)
+
+
+def domain_overflow(plan, wire_legs: dict) -> jax.Array:
+    """f32[D] instantaneous overflow rates, one per wire domain.
+
+    ``wire_legs`` maps domain name -> that leg's psum'ed wire
+    :class:`QuantStats` (absent legs read 0 — e.g. the params leg of a
+    degraded step, or a fp32 fallback branch whose stats are zeros).  The
+    result is tagged ``guard_sink`` so the flow verifier can prove the
+    degradation decision derives from wire-stats taint (PF-GUARD-TAINT),
+    not from post-fallback values.
+    """
+    rates = []
+    for n in wire_domains(plan):
+        ws = wire_legs.get(n)
+        if ws is None:
+            # leg not engaged this config (e.g. wire_params without ZeRO):
+            # a plain zero, deliberately NOT tagged — PF-GUARD-TAINT
+            # audits engaged legs only
+            rates.append(jnp.float32(0.0))
+        else:
+            rates.append(tagging.tag(_collapse_stats(ws), "guard_sink",
+                                     domain=n))
+    return (jnp.stack(rates) if rates else jnp.zeros((0,), jnp.float32))
+
+
+def _rail_signals(plan, prev_il, new_dps):
+    """Per-wire-domain rail signals from the updated DPS registry.
+
+    Returns ``(il, fl_at_cap, il_up)``: the (max-over-groups) IL, whether
+    any group's FL sits at its effective cap (``min(fl_max, max_total -
+    il)`` — the same clamp ``dps._clamp_fmt`` applies), and whether the IL
+    moved up vs the previous step.
+    """
+    ils, caps, ups = [], [], []
+    for d, n in enumerate(wire_domains(plan)):
+        spec = plan.spec(n)
+        st = new_dps[n]
+        h = spec.hyper
+        il = jnp.asarray(st.il, jnp.int32)
+        fl = jnp.asarray(st.fl, jnp.int32)
+        cap = jnp.minimum(jnp.int32(h.fl_max), jnp.int32(h.max_total) - il)
+        ils.append(jnp.max(il))
+        caps.append(jnp.any(fl >= cap))
+        ups.append(jnp.max(il) > prev_il[d])
+    if not ils:
+        z = jnp.zeros((0,), jnp.int32)
+        return z, jnp.zeros((0,), jnp.bool_), jnp.zeros((0,), jnp.bool_)
+    return jnp.stack(ils), jnp.stack(caps), jnp.stack(ups)
+
+
+def update_guard(gcfg: GuardConfig, plan, guard: GuardState, *,
+                 loss, grads_bad, gnorm, wire_ov, new_dps,
+                 grads_domain_idx: int = 0):
+    """Fold this step's signals into the next :class:`GuardState`.
+
+    All inputs are replicated on-device values the step already computed:
+    ``loss`` (scalar), ``grads_bad`` (psum'ed nonfinite count of the RAW
+    local gradients), ``gnorm`` (norm of the decoded/averaged gradients),
+    ``wire_ov`` (f32[D] from :func:`domain_overflow`), ``new_dps`` (the
+    registry AFTER the controller update).  ``grads_domain_idx`` is the
+    [D]-index of the domain that carries the gradient wire (NaN/spike
+    trips land there).
+
+    Returns ``(new_guard, ok, trip_any)``: ``ok`` (bool scalar) gates the
+    params/opt/DPS update (False = hold the previous values — the "skip"
+    response), ``trip_any`` is the rising-edge degradation trip this step
+    (feeds :func:`widen_on_trip`).
+    """
+    d = guard.degraded.shape[0]
+    loss_bad = ~jnp.isfinite(loss)
+    g_bad = jnp.asarray(grads_bad) > 0
+    # EWMA warmup: no spike before the norm EWMA has a value, and never
+    # feed a nonfinite norm into it.
+    g_ok = jnp.isfinite(gnorm)
+    spike = g_ok & (guard.gnorm_ewma > 0) & (
+        gnorm > gcfg.spike_ratio * guard.gnorm_ewma)
+    ov = jnp.where(jnp.isfinite(wire_ov), wire_ov, 1.0)
+    ov_ewma = (gcfg.overflow_beta * guard.overflow_ewma
+               + (1.0 - gcfg.overflow_beta) * ov)
+    storm = (ov_ewma > gcfg.overflow_trip) | (ov > gcfg.overflow_trip_hi)
+
+    # per-domain trip: its own storm, plus gradient-path corruption
+    # (NaN grads / norm spike / NaN loss) charged to the gradient wire
+    grad_fault = loss_bad | g_bad | spike
+    if d:
+        charge = jnp.zeros((d,), jnp.bool_).at[grads_domain_idx].set(
+            grad_fault)
+        trip = storm | charge
+    else:
+        trip = storm
+    rising = trip & (guard.degraded == 0)
+    trip_any = jnp.any(rising) if d else jnp.zeros((), jnp.bool_)
+
+    clean = ~trip
+    cooldown = jnp.where(
+        trip, jnp.int32(gcfg.cooldown),
+        jnp.maximum(guard.cooldown - jnp.where(
+            (guard.degraded > 0) & clean, 1, 0), 0))
+    degraded = jnp.where(trip, 1,
+                         jnp.where((guard.degraded > 0) & (cooldown > 0),
+                                   guard.degraded, 0)).astype(jnp.int32)
+
+    il, fl_cap, il_up = _rail_signals(plan, guard.prev_il, new_dps)
+    # FL-at-cap alone is steady state for flexpoint wire formats (il + fl
+    # == wire bits by construction); railed = pinned AND still clipping.
+    fl_rail = jnp.where(fl_cap & (ov > gcfg.rail_overflow),
+                        guard.fl_rail + 1, 0).astype(jnp.int32)
+    il_ratchet = jnp.where(il_up, guard.il_ratchet + 1, 0).astype(jnp.int32)
+    railed = jnp.any(fl_rail >= gcfg.rail_window) if d else False
+    ratchety = jnp.any(il_ratchet >= gcfg.rail_window) if d else False
+
+    ok = ~(loss_bad | g_bad | spike)
+    bit = lambda cond, b: jnp.where(cond, jnp.int32(b), 0)
+    health = (bit(loss_bad, HEALTH_LOSS_NONFINITE)
+              | bit(g_bad, HEALTH_GRADS_NONFINITE)
+              | bit(jnp.any(storm) if d else False, HEALTH_OVERFLOW_STORM)
+              | bit(spike, HEALTH_GRAD_SPIKE)
+              | bit(railed, HEALTH_FL_RAIL)
+              | bit(ratchety, HEALTH_IL_RATCHET)
+              | bit(jnp.any(degraded > 0) if d else False, HEALTH_DEGRADED)
+              | bit(~ok, HEALTH_SKIPPED))
+
+    new_guard = GuardState(
+        health=health.astype(jnp.int32),
+        trips=guard.trips + trip_any.astype(jnp.int32),
+        skipped=guard.skipped + (~ok).astype(jnp.int32),
+        degraded=degraded, cooldown=cooldown,
+        overflow_ewma=ov_ewma.astype(jnp.float32),
+        gnorm_ewma=jnp.where(ok & g_ok,
+                             gcfg.norm_beta * guard.gnorm_ewma
+                             + (1.0 - gcfg.norm_beta) * gnorm,
+                             guard.gnorm_ewma).astype(jnp.float32),
+        fl_rail=fl_rail, il_ratchet=il_ratchet, prev_il=il)
+    return new_guard, ok, trip_any
+
+
+def widen_on_trip(plan, dps, trip_any, domain: str = "grads"):
+    """One IL bit of extra headroom on the compute ``domain`` when a trip
+    fired this step — the reactive half of Courbariaux-style overflow
+    scaling, applied through the same ``_clamp_fmt`` the controllers use
+    so caps and the exactness span hold."""
+    if domain not in plan:
+        return dps
+    spec = plan.spec(domain)
+    st = dps[domain]
+    il, fl = dps_lib._clamp_fmt(
+        jnp.asarray(st.il) + jnp.where(trip_any, 1, 0),
+        jnp.asarray(st.fl), spec.hyper)
+    widened = dataclasses.replace(st, il=il, fl=fl)
+    return type(dps)({n: (widened if n == domain else dps[n])
+                      for n in dps.names()})
+
+
+def nonfinite_count(tree) -> jax.Array:
+    """f32 count of NaN/Inf elements across a pytree (rank-local; psum it
+    inside shard_map bodies)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return sum(jnp.sum((~jnp.isfinite(l.astype(jnp.float32))).astype(
+        jnp.float32)) for l in leaves)
+
+
+def global_norm(tree) -> jax.Array:
+    """f32 L2 norm of a pytree (the spike detector's input)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

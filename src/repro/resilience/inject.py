@@ -1,0 +1,134 @@
+"""Deterministic fault injection — every guard is proven by firing it.
+
+A :class:`FaultPlan` is static config compiled INTO the step (the traced
+comparison is against the step counter, so the same compiled step runs
+faulted and clean steps — no recompile at the fault boundary):
+
+    nan_grads_at       poison the raw local gradients with NaN at one step
+    overflow_storm_at  scale the raw gradients by ``storm_scale`` for
+                       ``storm_steps`` consecutive steps — every element
+                       blows past the wire radix, driving the overflow-
+                       rate EWMA over the storm threshold
+    wire_flip_at       XOR ``0x40`` into the int8 dispatch-leg payload of
+                       the gradient all-reduce at one step (transport
+                       corruption: every decoded element gains a large
+                       power-of-two offset, which the gradient-norm spike
+                       guard catches)
+
+Host-side faults (not part of the compiled step):
+
+    corrupt_checkpoint  truncate or bit-flip a saved ``arrays.npz`` —
+                        the digest verification in ``checkpoint.ckpt``
+                        must skip the directory on resume
+    SIGTERM             ``launch.train --sigterm-at N`` raises the real
+                        signal mid-run; the preemption handler must
+                        checkpoint and exit 0
+
+All injections are deterministic in the step counter so recovery tests
+can assert detection within a bounded number of steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Static fault schedule (hashable; lives in the jit closure).
+
+    ``-1`` disables a fault.  Steps are compared against the step counter
+    the driver passes into the compiled step.
+    """
+
+    nan_grads_at: int = -1
+    overflow_storm_at: int = -1
+    storm_steps: int = 4
+    storm_scale: float = float(2 ** 18)
+    wire_flip_at: int = -1
+
+    def any_grad_fault(self) -> bool:
+        return self.nan_grads_at >= 0 or self.overflow_storm_at >= 0
+
+
+def apply_grad_faults(faults: Optional[FaultPlan], grads, step):
+    """Inject the scheduled gradient faults into the raw local tree.
+
+    Applied immediately after the backward pass and BEFORE any stats or
+    wire encode, so detection sees exactly what a real numeric fault
+    would produce.  Identity when ``faults`` is None or schedules no
+    gradient fault (static decision: the clean step's jaxpr is
+    unchanged).
+    """
+    if faults is None or not faults.any_grad_fault():
+        return grads
+    step = jnp.asarray(step, jnp.int32)
+    if faults.nan_grads_at >= 0:
+        hit = step == faults.nan_grads_at
+        grads = jax.tree.map(
+            lambda g: jnp.where(hit, jnp.full_like(g, jnp.nan), g), grads)
+    if faults.overflow_storm_at >= 0:
+        at = faults.overflow_storm_at
+        hit = (step >= at) & (step < at + faults.storm_steps)
+        scale = jnp.where(hit, jnp.asarray(faults.storm_scale,
+                                           jnp.float32), 1.0)
+        grads = jax.tree.map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+    return grads
+
+
+def payload_fault_fn(faults: Optional[FaultPlan], step):
+    """The int8 wire-payload corruption hook for
+    :func:`repro.dist.collectives.dps_allreduce_mean_tree`.
+
+    Returns ``None`` (no hook, jaxpr unchanged) unless a flip is
+    scheduled; otherwise a callable applied to the encoded dispatch-leg
+    buffer.  XOR with ``0x40`` flips bit 6 of every payload byte — a
+    dense, sign-preserving corruption that decodes to a ±2^(6-FL) offset
+    on every element, reliably detectable through the gradient-norm spike
+    guard yet finite (the NaN guard must NOT fire: the wire cannot carry
+    NaN, which is exactly why transport corruption needs its own
+    detector).
+    """
+    if faults is None or faults.wire_flip_at < 0:
+        return None
+    step = jnp.asarray(step, jnp.int32)
+
+    def flip(buf):
+        return jnp.where(step == faults.wire_flip_at,
+                         jax.lax.bitwise_xor(buf, jnp.int8(0x40)), buf)
+    return flip
+
+
+def corrupt_checkpoint(ckpt_dir: str, step: int, mode: str = "truncate"):
+    """Corrupt a saved checkpoint in place (host-side fault).
+
+    ``mode="truncate"`` chops ``arrays.npz`` to half its bytes (a torn
+    write that survived the atomic rename — e.g. a dying disk);
+    ``mode="bitflip"`` flips one bit in one array's payload and rewrites
+    the npz as a VALID zip — ``np.load`` succeeds and the zip CRC is
+    clean, so only the manifest SHA-256 digests can catch it (silent
+    bit-rot, the corruption class checksums-at-rest exist for).
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
+    if mode == "truncate":
+        with open(path, "rb") as f:
+            raw = f.read()
+        with open(path, "wb") as f:
+            f.write(raw[:max(len(raw) // 2, 1)])
+    elif mode == "bitflip":
+        with np.load(path) as data:
+            arrays = {k: np.array(data[k]) for k in data.files}
+        key = max(arrays, key=lambda k: arrays[k].nbytes)
+        buf = arrays[key].view(np.uint8).reshape(-1)
+        buf[len(buf) // 2] ^= 0x10
+        np.savez(path, **arrays)
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    return path

@@ -166,6 +166,7 @@ class Engine:
 
         L, n_tot = self.cfg.n_layers, lay.n_pages_total
         step = 0
+        bp_steps = 0   # steps an arrived request was held for page frees
         t0 = time.perf_counter()
         while sched.pending or any(s is not None for s in slots):
             if step > guard:
@@ -192,11 +193,26 @@ class Engine:
                     step, lambda r: alloc.can(
                         lay.pages_needed(r.prompt.size, r.max_new)))
                 if req is None:
+                    # head arrived but can't start -> pool backpressure:
+                    # the request waits in the queue for frees, it is
+                    # never dropped
+                    if (sched.pending
+                            and sched.pending[0].arrival <= step):
+                        bp_steps += 1
                     break
                 b = next(i for i, s in enumerate(slots) if s is None)
-                pools, state = self._admit(
-                    b, req, alloc, pools, state, ptab, pos, last, slots,
-                    tokens_out, prefill_s, spread)
+                try:
+                    pools, state = self._admit(
+                        b, req, alloc, pools, state, ptab, pos, last,
+                        slots, tokens_out, prefill_s, spread)
+                except RuntimeError:
+                    # allocator exhaustion despite the can() pre-check
+                    # (accounting drift): hold the request at the queue
+                    # head and retry after the next retire frees pages —
+                    # backpressure, not a crash
+                    sched.requeue(req)
+                    bp_steps += 1
+                    break
 
             act = [b for b, s in enumerate(slots) if s is not None]
             if act:
@@ -233,6 +249,7 @@ class Engine:
             if lat else 0.0,
             "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
             "prefill_s_total": float(np.sum(prefill_s)) if prefill_s else 0.0,
+            "backpressure_steps": float(bp_steps),
         }
         return ServeReport(tokens_out, metrics, dict(spread))
 

@@ -101,7 +101,10 @@ class PageAllocator:
         return len(self._free) >= n
 
     def alloc(self, n: int) -> List[int]:
-        if not self.can(n):
+        # independent of the advisory can() pre-check: alloc enforces its
+        # own invariant so a stale/optimistic admission decision can never
+        # hand out pages the pool does not have
+        if len(self._free) < n:
             raise RuntimeError(f"allocator has {len(self._free)} free pages, "
                                f"need {n}")
         out, self._free = self._free[-n:], self._free[:-n]

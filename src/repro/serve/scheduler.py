@@ -84,3 +84,11 @@ class Scheduler:
                 and can_admit(self.pending[0])):
             return self.pending.popleft()
         return None
+
+    def requeue(self, req: Request):
+        """Put a popped request back at the HEAD of the queue (it stays the
+        oldest pending request, so strict FCFS is preserved).  The
+        backpressure path: admission popped it but the page allocator
+        could not actually cover it — hold it and retry after frees
+        instead of dropping it or crashing the engine."""
+        self.pending.appendleft(req)
